@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the model-side
+dry-run live in ``repro.launch.roofline`` (they are derived from compiled
+artifacts, not timed here).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import paper_figs
+
+
+BENCHES = [
+    ("fig8_9_search", paper_figs.bench_search),
+    ("fig10_search_scaling", paper_figs.bench_search_scaling),
+    ("fig11_construction", paper_figs.bench_construction),
+    ("fig12_topn_support", paper_figs.bench_topn_support),
+    ("fig13_topn_confidence", paper_figs.bench_topn_confidence),
+    ("traversal_8x", paper_figs.bench_traversal),
+    ("compression", paper_figs.bench_compression),
+    ("batched_search", paper_figs.bench_batched_search),
+]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--only", default=None, help="substring filter")
+    args = parser.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception:  # pragma: no cover - harness robustness
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"# FAILED: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Trie-backed speculative decoding (paper Eq. 1-4 as a serving feature).
+
+    PYTHONPATH=src python examples/speculative_serve.py
+
+1. Train a small byte-LM briefly on a structured corpus.
+2. Build an NgramTrie (the Trie of rules over ordered n-grams) on the
+   same corpus — node confidence = P(next | prefix); a draft's compound
+   confidence is the paper's product rule.
+3. Serve with batched draft verification and report accept rate +
+   model-calls-per-token vs vanilla decoding.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.data.corpus_rules import NgramTrie
+from repro.data.pipeline import PipelineConfig, TokenPipeline, synthetic_corpus
+from repro.data.tokenizer import VOCAB_SIZE, ByteTokenizer
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_cache, materialize_params
+from repro.serve.spec_decode import speculative_generate
+from repro.serve.engine import greedy_generate
+from repro.train.optimizer import OptConfig, pick_optimizer
+from repro.train.train_step import make_train_step
+
+
+def train_tiny(cfg, pipe, steps=200):
+    params, _ = materialize_params(cfg, jax.random.PRNGKey(0))
+    opt = pick_optimizer(cfg, OptConfig(lr=1e-3, warmup_steps=20))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        params, opt_state, m = step_fn(
+            params, opt_state, batch, jnp.float32(step)
+        )
+        if step % 50 == 0:
+            print(f"  train step {step}: loss {float(m['loss']):.3f}")
+    return params
+
+
+def main():
+    cfg = ModelConfig(
+        name="bytelm-spec", d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=VOCAB_SIZE,
+        unit=(LayerSpec("attn", "mlp"),), n_units=4,
+        remat=False, tie_embeddings=True,
+    )
+    docs = synthetic_corpus(512, seed=11)
+    pipe = TokenPipeline(
+        docs, PipelineConfig(seq_len=256, global_batch=8)
+    )
+    mesh = make_host_mesh()
+    with jax.set_mesh(mesh):
+        print("training draft-target model...")
+        params = train_tiny(cfg, pipe, steps=200)
+
+        print("building NgramTrie proposer (Trie of rules, ordered)...")
+        trie = NgramTrie(n=4).fit(pipe._rows[:400, :-1])
+        print(f"  trie nodes: {len(trie.trie)}")
+
+        tok = ByteTokenizer()
+        prompt = np.array([tok.encode("the rule of the ", add_eos=False)],
+                          np.int32)
+        n_gen = 64
+
+        cache = init_cache(cfg, 1, 512, jnp.float32)
+        t0 = time.time()
+        out_spec, stats = speculative_generate(
+            cfg, params, cache, prompt, trie, n_gen, max_draft=4,
+            min_confidence=0.2,
+        )
+        t_spec = time.time() - t0
+
+        cache = init_cache(cfg, 1, 512, jnp.float32)
+        t0 = time.time()
+        out_greedy, _ = greedy_generate(
+            cfg, params, cache, jnp.asarray(prompt), n_gen
+        )
+        t_greedy = time.time() - t0
+
+        print(f"\nspeculative: {stats} ({t_spec:.1f}s)")
+        print(f"vanilla: {n_gen} model calls ({t_greedy:.1f}s)")
+        print(f"model calls/token: spec={stats['verify_steps']/n_gen:.2f} "
+              f"vs vanilla=1.00")
+        print("spec text:  ", tok.decode(out_spec[0])[:80])
+        print("greedy text:", tok.decode(np.asarray(out_greedy)[0])[:80])
+
+
+if __name__ == "__main__":
+    main()

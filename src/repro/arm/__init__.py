@@ -1,0 +1,19 @@
+"""Association-rule-mining substrate (paper Step 1).
+
+Transaction encoding, frequent-itemset miners (Apriori, FP-growth, FP-max)
+and rule generation.  The support-counting hot loop has a Pallas TPU kernel
+(``repro.kernels.support_count``) with the bitmap layout defined here.
+"""
+from .transactions import TransactionDB
+from .fpgrowth import fpgrowth, fpmax
+from .apriori import apriori
+from .rulegen import prefix_split_rules, canonical_sequences
+
+__all__ = [
+    "TransactionDB",
+    "fpgrowth",
+    "fpmax",
+    "apriori",
+    "prefix_split_rules",
+    "canonical_sequences",
+]

@@ -1,0 +1,81 @@
+"""Rule generation: frequent itemsets → association rules (prefix splits).
+
+The Trie of rules stores each frequent sequence in global frequency order;
+a rule A→C is representable iff the items of A all precede the items of C in
+that order (paper §3.3 — this "avoids false Confidence situations" and keeps
+the most valuable rules).  The canonical ruleset of this repo is therefore:
+
+    for every distinct frequency-ordered prefix path p (|p| ≥ 2) reachable
+    from the mined sequences, and every split point i: rule p[:i] → p[i:].
+
+Both representations (trie and flat table) store exactly this set, so the
+Fig. 8-13 comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, List, Sequence, Set, Tuple
+
+from repro.core.metrics import Item, Rule, RuleMetrics
+from .transactions import TransactionDB
+
+ItemSet = FrozenSet[Item]
+
+
+def canonical_sequences(
+    itemsets: Iterable[ItemSet], db: TransactionDB
+) -> List[Tuple[Item, ...]]:
+    """Frequency-order every mined itemset (Step 2 pre-sort)."""
+    order = db.frequency_order()
+    rank = {it: r for r, it in enumerate(order)}
+    return [
+        tuple(sorted(s, key=lambda it: (rank[it], it))) for s in itemsets
+    ]
+
+
+def distinct_paths(
+    sequences: Iterable[Sequence[Item]],
+) -> List[Tuple[Item, ...]]:
+    """All distinct non-empty prefixes of the canonical sequences — exactly
+    the node set of the Trie of rules."""
+    paths: Set[Tuple[Item, ...]] = set()
+    for seq in sequences:
+        for i in range(1, len(seq) + 1):
+            paths.add(tuple(seq[:i]))
+    return sorted(paths, key=lambda p: (len(p), p))
+
+
+def prefix_split_rules(
+    itemsets: Dict[ItemSet, int],
+    db: TransactionDB,
+    min_confidence: float = 0.0,
+) -> List[Rule]:
+    """The canonical ruleset with exact metrics from the transaction DB."""
+    sequences = canonical_sequences(itemsets.keys(), db)
+    paths = distinct_paths(sequences)
+    support_of: Dict[Tuple[Item, ...], float] = {(): 1.0}
+    for p in paths:
+        support_of[p] = db.support(p)
+
+    rules: List[Rule] = []
+    for p in paths:
+        if len(p) < 2:
+            continue
+        sup_full = support_of[p]
+        for i in range(1, len(p)):
+            ant, con = p[:i], p[i:]
+            sup_ant = support_of[ant]
+            conf = sup_full / sup_ant if sup_ant > 0 else 0.0
+            if conf < min_confidence:
+                continue
+            sup_con = db.support(con)
+            lift = conf / sup_con if sup_con > 0 else 0.0
+            rules.append(
+                Rule(
+                    antecedent=ant,
+                    consequent=con,
+                    metrics=RuleMetrics(
+                        support=sup_full, confidence=conf, lift=lift
+                    ),
+                )
+            )
+    return rules

@@ -1,0 +1,112 @@
+"""Transaction database with a packed-bitmap vertical layout.
+
+Layout (ECLAT-style vertical): ``item_bitmaps[i]`` is the transaction set of
+item ``i`` packed into uint32 words — shape ``(n_items, n_words)`` with
+``n_words = ceil(n_transactions / 32)``.  Support of an itemset is then
+``popcount(AND over its item rows)``; that AND+popcount inner loop is the
+mining hot spot and is what ``repro.kernels.support_count`` tiles on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+Item = int
+
+_POPCOUNT_TABLE = np.array(
+    [bin(i).count("1") for i in range(256)], dtype=np.uint32
+)
+
+
+def popcount_u32(words: np.ndarray) -> np.ndarray:
+    """Per-element popcount of a uint32 array (vectorized byte-table)."""
+    b = words.view(np.uint8).reshape(words.shape + (4,))
+    return _POPCOUNT_TABLE[b].sum(axis=-1)
+
+
+class TransactionDB:
+    """Immutable transaction database over integer items ``0..n_items-1``."""
+
+    def __init__(
+        self, transactions: Sequence[Iterable[Item]], n_items: int
+    ) -> None:
+        self.transactions: List[FrozenSet[Item]] = [
+            frozenset(t) for t in transactions
+        ]
+        self.n_transactions = len(self.transactions)
+        self.n_items = n_items
+        self.n_words = (self.n_transactions + 31) // 32
+        self.item_bitmaps = np.zeros(
+            (n_items, self.n_words), dtype=np.uint32
+        )
+        for tid, t in enumerate(self.transactions):
+            word, bit = divmod(tid, 32)
+            mask = np.uint32(1) << np.uint32(bit)
+            for it in t:
+                if not (0 <= it < n_items):
+                    raise ValueError(f"item {it} out of range [0,{n_items})")
+                self.item_bitmaps[it, word] |= mask
+        self._item_counts = popcount_u32(self.item_bitmaps).sum(axis=1)
+        self._support_cache: Dict[FrozenSet[Item], int] = {}
+
+    # ------------------------------------------------------------------
+    # supports
+    # ------------------------------------------------------------------
+    def item_counts(self) -> np.ndarray:
+        """Absolute frequency of every item, shape (n_items,)."""
+        return self._item_counts.copy()
+
+    def frequency_order(self) -> List[Item]:
+        """Items by descending frequency (ties → ascending id) — the global
+        order the paper sorts every sequence with before insertion."""
+        counts = self._item_counts
+        return sorted(
+            range(self.n_items), key=lambda i: (-int(counts[i]), i)
+        )
+
+    def itemset_count(self, itemset: Iterable[Item]) -> int:
+        """Exact transaction count of an itemset (AND + popcount)."""
+        key = frozenset(itemset)
+        cached = self._support_cache.get(key)
+        if cached is not None:
+            return cached
+        if not key:
+            count = self.n_transactions
+        else:
+            acc = None
+            for it in key:
+                row = self.item_bitmaps[it]
+                acc = row if acc is None else (acc & row)
+            count = int(popcount_u32(acc).sum())
+        self._support_cache[key] = count
+        return count
+
+    def support(self, itemset: Iterable[Item]) -> float:
+        return self.itemset_count(itemset) / self.n_transactions
+
+    def support_fn(self):
+        """Closure used by ``TrieOfRules.annotate`` (Step 3)."""
+        return lambda itemset: self.support(itemset)
+
+    # ------------------------------------------------------------------
+    # batched layout for the Pallas kernel
+    # ------------------------------------------------------------------
+    def candidate_matrix(
+        self, itemsets: Sequence[Sequence[Item]], max_len: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pack candidates into a dense (n_candidates, max_len) int32 matrix
+        padded with -1, plus lengths — the input of the support kernel."""
+        n = len(itemsets)
+        mat = np.full((n, max_len), -1, dtype=np.int32)
+        lens = np.zeros((n,), dtype=np.int32)
+        for i, s in enumerate(itemsets):
+            s = list(s)
+            if len(s) > max_len:
+                raise ValueError("itemset longer than max_len")
+            mat[i, : len(s)] = s
+            lens[i] = len(s)
+        return mat, lens
+
+    def __len__(self) -> int:
+        return self.n_transactions

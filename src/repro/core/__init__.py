@@ -1,0 +1,38 @@
+"""Core library — the paper's contribution (Trie of Rules) in three forms:
+
+- ``TrieOfRules``   paper-faithful pointer trie (reproduction baseline),
+- ``FlatRuleTable`` dataframe stand-in comparator (the paper's baseline),
+- ``FrozenTrie``    TPU-native SoA/CSR encoding with vectorized queries.
+"""
+from .metrics import Rule, RuleMetrics, compound_confidence
+from .trie import TrieNode, TrieOfRules
+from .flat_table import FlatRuleTable
+from .array_trie import (
+    DeviceTrie,
+    FrozenTrie,
+    batched_rule_search,
+    child_lookup,
+    reconstruct_paths,
+    top_n_nodes,
+    traverse_reduce,
+)
+from .builder import BuildResult, build_flat_table, build_trie_of_rules
+
+__all__ = [
+    "Rule",
+    "RuleMetrics",
+    "compound_confidence",
+    "TrieNode",
+    "TrieOfRules",
+    "FlatRuleTable",
+    "FrozenTrie",
+    "DeviceTrie",
+    "batched_rule_search",
+    "child_lookup",
+    "reconstruct_paths",
+    "top_n_nodes",
+    "traverse_reduce",
+    "BuildResult",
+    "build_trie_of_rules",
+    "build_flat_table",
+]

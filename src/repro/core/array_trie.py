@@ -1,0 +1,399 @@
+"""Frozen Trie of Rules — TPU-native structure-of-arrays encoding.
+
+This is the hardware adaptation of the paper's data structure (DESIGN.md §2):
+the pointer trie is frozen once into flat arrays
+
+    node_item / node_parent / node_depth          int32[N]
+    support / confidence / lift                   float32[N]   (metric columns)
+    edge_parent / edge_item / edge_child          int32[E]     (sorted lex)
+
+and every paper operation becomes a vectorized array program:
+
+    rule search   — batched root→down descent; each step is a lexicographic
+                    binary search over the sorted edge table (no pointers),
+    top-N         — ``jax.lax.top_k`` over a metric column,
+    traversal     — full-column reductions over the node arrays,
+    compound conf — segment-product of confidences along the walked path
+                    (paper Eq. 1-4).
+
+Node ids are assigned in BFS order at freeze time so level-order traversal is
+contiguous.  The same edge-table descent runs inside the Pallas kernel
+(``repro.kernels.rule_search``); this module is the jnp reference/production
+path for CPU/GPU/TPU-without-kernel.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .metrics import Item
+from .trie import TrieNode, TrieOfRules
+
+NO_NODE = np.int32(-1)
+
+
+@dataclass
+class FrozenTrie:
+    """Immutable SoA trie; arrays are numpy on host, moved to jnp lazily."""
+
+    node_item: np.ndarray      # int32[N], root = -1
+    node_parent: np.ndarray    # int32[N], root = -1
+    node_depth: np.ndarray     # int32[N]
+    support: np.ndarray        # float32[N]
+    confidence: np.ndarray     # float32[N]
+    lift: np.ndarray           # float32[N]
+    edge_parent: np.ndarray    # int32[E] sorted by (parent, item)
+    edge_item: np.ndarray      # int32[E]
+    edge_child: np.ndarray     # int32[E]
+    item_order: np.ndarray     # int32[n_items] frequency rank -> item
+    item_rank: np.ndarray      # int32[max_item+1] item -> frequency rank
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.node_item.shape[0])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_parent.shape[0])
+
+    @property
+    def max_depth(self) -> int:
+        return int(self.node_depth.max()) if self.n_nodes > 1 else 0
+
+    # ------------------------------------------------------------------
+    # freeze
+    # ------------------------------------------------------------------
+    @classmethod
+    def freeze(cls, trie: TrieOfRules) -> "FrozenTrie":
+        """BFS-number the pointer trie into flat arrays."""
+        nodes: List[TrieNode] = [trie.root]
+        ids = {id(trie.root): 0}
+        q = deque([trie.root])
+        while q:
+            node = q.popleft()
+            for child in sorted(node.children.values(), key=lambda c: c.item):
+                ids[id(child)] = len(nodes)
+                nodes.append(child)
+                q.append(child)
+        n = len(nodes)
+        node_item = np.full((n,), -1, dtype=np.int32)
+        node_parent = np.full((n,), -1, dtype=np.int32)
+        node_depth = np.zeros((n,), dtype=np.int32)
+        support = np.zeros((n,), dtype=np.float32)
+        confidence = np.zeros((n,), dtype=np.float32)
+        lift = np.zeros((n,), dtype=np.float32)
+        edges: List[Tuple[int, int, int]] = []
+        for i, node in enumerate(nodes):
+            node_item[i] = node.item
+            node_depth[i] = node.depth
+            support[i] = node.support
+            confidence[i] = node.confidence
+            lift[i] = node.lift
+            if node.parent is not None:
+                node_parent[i] = ids[id(node.parent)]
+            for child in node.children.values():
+                edges.append((i, child.item, ids[id(child)]))
+        edges.sort()
+        e = np.array(edges, dtype=np.int32).reshape(-1, 3)
+        rank_pairs = sorted(trie._rank.items(), key=lambda kv: kv[1])
+        item_order = np.array(
+            [it for it, _ in rank_pairs], dtype=np.int32
+        )
+        max_item = int(item_order.max()) if item_order.size else 0
+        item_rank = np.full((max_item + 1,), np.iinfo(np.int32).max // 2,
+                            dtype=np.int32)
+        for it, r in rank_pairs:
+            item_rank[it] = r
+        return cls(
+            node_item=node_item,
+            node_parent=node_parent,
+            node_depth=node_depth,
+            support=support,
+            confidence=confidence,
+            lift=lift,
+            edge_parent=e[:, 0].copy() if e.size else np.zeros(0, np.int32),
+            edge_item=e[:, 1].copy() if e.size else np.zeros(0, np.int32),
+            edge_child=e[:, 2].copy() if e.size else np.zeros(0, np.int32),
+            item_order=item_order,
+            item_rank=item_rank,
+        )
+
+    # ------------------------------------------------------------------
+    # host-side helpers
+    # ------------------------------------------------------------------
+    def canonicalize_queries(
+        self,
+        antecedents: Sequence[Sequence[Item]],
+        consequents: Sequence[Sequence[Item]],
+        max_len: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pack (A, C) query pairs into the padded item matrix + ant lengths.
+
+        Items inside A and inside C are frequency-sorted independently and
+        concatenated — exactly the pointer implementation's canonical form.
+        """
+        def rank(it: int) -> int:
+            if 0 <= it < self.item_rank.shape[0]:
+                return int(self.item_rank[it])
+            return 1 << 30
+
+        rows: List[List[int]] = []
+        ant_lens: List[int] = []
+        for a, c in zip(antecedents, consequents):
+            sa = sorted(a, key=lambda it: (rank(it), it))
+            sc = sorted(c, key=lambda it: (rank(it), it))
+            rows.append(list(sa) + list(sc))
+            ant_lens.append(len(sa))
+        width = max_len or max((len(r) for r in rows), default=1)
+        mat = np.full((len(rows), width), -1, dtype=np.int32)
+        for i, r in enumerate(rows):
+            if len(r) > width:
+                raise ValueError("query longer than max_len")
+            mat[i, : len(r)] = r
+        return mat, np.array(ant_lens, dtype=np.int32)
+
+    def device_arrays(self) -> "DeviceTrie":
+        return DeviceTrie(
+            node_item=jnp.asarray(self.node_item),
+            node_parent=jnp.asarray(self.node_parent),
+            node_depth=jnp.asarray(self.node_depth),
+            support=jnp.asarray(self.support),
+            confidence=jnp.asarray(self.confidence),
+            lift=jnp.asarray(self.lift),
+            edge_parent=jnp.asarray(self.edge_parent),
+            edge_item=jnp.asarray(self.edge_item),
+            edge_child=jnp.asarray(self.edge_child),
+        )
+
+    def path_items(self, node_id: int) -> Tuple[Item, ...]:
+        items: List[int] = []
+        nid = int(node_id)
+        while nid > 0:
+            items.append(int(self.node_item[nid]))
+            nid = int(self.node_parent[nid])
+        return tuple(reversed(items))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DeviceTrie:
+    """The on-device view (a pytree of jnp arrays)."""
+
+    node_item: jax.Array
+    node_parent: jax.Array
+    node_depth: jax.Array
+    support: jax.Array
+    confidence: jax.Array
+    lift: jax.Array
+    edge_parent: jax.Array
+    edge_item: jax.Array
+    edge_child: jax.Array
+
+    def tree_flatten(self):
+        fields = (
+            self.node_item, self.node_parent, self.node_depth,
+            self.support, self.confidence, self.lift,
+            self.edge_parent, self.edge_item, self.edge_child,
+        )
+        return fields, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, fields):
+        return cls(*fields)
+
+
+# ----------------------------------------------------------------------
+# vectorized operations (the jnp oracle shared with the Pallas kernels)
+# ----------------------------------------------------------------------
+def _lex_binary_search(
+    edge_parent: jax.Array,
+    edge_item: jax.Array,
+    qp: jax.Array,
+    qi: jax.Array,
+    n_steps: int,
+) -> jax.Array:
+    """Lower-bound index of (qp, qi) in the lex-sorted edge table.
+
+    ``qp``/``qi`` are arbitrary-shaped int32; returns same-shaped indices.
+    A fixed ``n_steps = ceil(log2(E))+1`` iteration count keeps this
+    trace-friendly (and is the exact loop the Pallas kernel runs in VMEM).
+    """
+    e = edge_parent.shape[0]
+    lo = jnp.zeros_like(qp)
+    hi = jnp.full_like(qp, e)
+    for _ in range(n_steps):
+        mid = (lo + hi) // 2
+        midc = jnp.minimum(mid, e - 1)
+        p = edge_parent[midc]
+        i = edge_item[midc]
+        less = (p < qp) | ((p == qp) & (i < qi))
+        lo = jnp.where(less, mid + 1, lo)
+        hi = jnp.where(less, hi, mid)
+    return lo
+
+
+def _n_search_steps(n_edges: int) -> int:
+    n = max(int(n_edges), 1)
+    return int(np.ceil(np.log2(n + 1))) + 1
+
+
+def child_lookup(
+    trie: DeviceTrie, parents: jax.Array, items: jax.Array
+) -> jax.Array:
+    """Batched child id for (parent, item); -1 where no such edge."""
+    e = trie.edge_parent.shape[0]
+    if e == 0:
+        return jnp.full_like(parents, -1)
+    idx = _lex_binary_search(
+        trie.edge_parent, trie.edge_item, parents, items,
+        _n_search_steps(e),
+    )
+    idxc = jnp.minimum(idx, e - 1)
+    found = (
+        (idx < e)
+        & (trie.edge_parent[idxc] == parents)
+        & (trie.edge_item[idxc] == items)
+    )
+    return jnp.where(found, trie.edge_child[idxc], -1)
+
+
+@partial(jax.jit, static_argnames=())
+def batched_rule_search(
+    trie: DeviceTrie, queries: jax.Array, ant_len: jax.Array
+):
+    """Search Q rules at once.
+
+    queries: int32[Q, L] frequency-ordered item rows, -1 padded
+             (antecedent items first, consequent items after — the paper's
+             canonical rule layout).
+    ant_len: int32[Q] antecedent length per row.
+
+    Returns dict with:
+      found        bool[Q]    rule present as a trie path
+      support      f32[Q]     Support of the full sequence (paper: node sup)
+      confidence   f32[Q]     compound Confidence (Eq. 1-4 product)
+      lift         f32[Q]     compound conf / Support(consequent path)
+      node         int32[Q]   final consequent node id (-1 if absent)
+    """
+    q, width = queries.shape
+
+    def step(carry, col):
+        node, conf, ok, ant_node = carry
+        item, pos = col
+        active = (item >= 0) & ok
+        child = child_lookup(trie, node, item)
+        ok = jnp.where(active, child >= 0, ok)
+        node_next = jnp.where(active & (child >= 0), child, node)
+        in_consequent = pos >= ant_len
+        child_conf = jnp.where(
+            child >= 0, trie.confidence[jnp.maximum(child, 0)], 0.0
+        )
+        conf = jnp.where(
+            active & in_consequent & (child >= 0), conf * child_conf, conf
+        )
+        ant_node = jnp.where(
+            active & (pos == ant_len - 1) & (child >= 0), child, ant_node
+        )
+        return (node_next, conf, ok, ant_node), None
+
+    node0 = jnp.zeros((q,), jnp.int32)
+    conf0 = jnp.ones((q,), jnp.float32)
+    ok0 = jnp.ones((q,), bool)
+    ant0 = jnp.zeros((q,), jnp.int32)   # root: Support(∅)=1 ⇒ conf chain ok
+    cols = (queries.T, jnp.arange(width, dtype=jnp.int32)[:, None]
+            * jnp.ones((1, q), jnp.int32))
+    (node, conf, ok, _ant), _ = jax.lax.scan(
+        step, (node0, conf0, ok0, ant0), cols
+    )
+
+    # Consequent-path support for lift: walk the consequent items from root.
+    def cstep(carry, col):
+        cnode, cok = carry
+        item, pos = col
+        active = (item >= 0) & (pos >= ant_len) & cok
+        child = child_lookup(trie, cnode, item)
+        cok = jnp.where(active, child >= 0, cok)
+        cnode = jnp.where(active & (child >= 0), child, cnode)
+        return (cnode, cok), None
+
+    (cnode, cok), _ = jax.lax.scan(
+        cstep, (node0, ok0), cols
+    )
+    con_support = jnp.where(
+        cok & (cnode > 0), trie.support[jnp.maximum(cnode, 0)], 0.0
+    )
+
+    found = ok & (node > 0)
+    sup = jnp.where(found, trie.support[jnp.maximum(node, 0)], 0.0)
+    conf = jnp.where(found, conf, 0.0)
+    # Single-item consequent: the final node's Step-3 lift IS the rule lift
+    # (conf == node confidence there).  Compound consequents divide by the
+    # consequent-path Support when that path exists in the trie.
+    seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
+    single = (seq_len - ant_len) == 1
+    node_lift = jnp.where(found, trie.lift[jnp.maximum(node, 0)], 0.0)
+    lift = jnp.where(
+        single,
+        node_lift,
+        jnp.where(con_support > 0, conf / con_support, 0.0),
+    )
+    lift = jnp.where(found, lift, 0.0)
+    return {
+        "found": found,
+        "support": sup,
+        "confidence": conf,
+        "lift": lift,
+        "node": jnp.where(found, node, -1),
+    }
+
+
+@partial(jax.jit, static_argnames=("n", "min_depth"))
+def top_n_nodes(
+    trie: DeviceTrie, metric: jax.Array, n: int, min_depth: int = 1
+):
+    """Top-N rules by a metric column; nodes above ``min_depth`` only
+    (use min_depth=2 to exclude empty-antecedent pseudo-rules)."""
+    masked = jnp.where(trie.node_depth >= min_depth, metric, -jnp.inf)
+    vals, ids = jax.lax.top_k(masked, n)
+    return vals, ids
+
+
+@jax.jit
+def traverse_reduce(trie: DeviceTrie):
+    """The traversal benchmark op: visit every rule once and reduce its
+    metrics (sum/max/count over the node columns)."""
+    mask = trie.node_depth > 0
+    sup = jnp.where(mask, trie.support, 0.0)
+    conf = jnp.where(mask, trie.confidence, 0.0)
+    return {
+        "n_rules": jnp.sum(mask),
+        "support_sum": jnp.sum(sup),
+        "confidence_max": jnp.max(jnp.where(mask, trie.confidence, -jnp.inf)),
+        "mean_conf": jnp.sum(conf) / jnp.maximum(jnp.sum(mask), 1),
+    }
+
+
+def reconstruct_paths(
+    trie: DeviceTrie, node_ids: jax.Array, max_depth: int
+) -> jax.Array:
+    """Vectorized parent-pointer walk: int32[Q, max_depth] item matrix
+    (left-padded with -1) for each node id."""
+    def step(carry, _):
+        nid = carry
+        item = jnp.where(nid > 0, trie.node_item[jnp.maximum(nid, 0)], -1)
+        parent = jnp.where(
+            nid > 0, trie.node_parent[jnp.maximum(nid, 0)], nid
+        )
+        return parent, item
+
+    _, items_rev = jax.lax.scan(
+        step, node_ids, None, length=max_depth
+    )
+    return items_rev.T[:, ::-1]

@@ -1,0 +1,15 @@
+"""Data pipeline: tokenization, packing, deterministic sharded batches,
+and ARM-over-corpus integration (the paper's structure as a data feature).
+"""
+from .tokenizer import ByteTokenizer
+from .pipeline import PipelineConfig, TokenPipeline, synthetic_corpus
+from .corpus_rules import NgramTrie, mine_corpus_rules
+
+__all__ = [
+    "ByteTokenizer",
+    "PipelineConfig",
+    "TokenPipeline",
+    "synthetic_corpus",
+    "NgramTrie",
+    "mine_corpus_rules",
+]

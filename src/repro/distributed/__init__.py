@@ -1,0 +1,14 @@
+"""Distribution substrate: logical-axis sharding, collectives, compression."""
+from .sharding import (
+    LOGICAL_RULES,
+    logical_to_spec,
+    shard_params_specs,
+    constrain,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_to_spec",
+    "shard_params_specs",
+    "constrain",
+]

@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter/activation dimension carries a logical name; a rules table
+maps logical names to mesh axes.  A dimension that is not evenly divisible
+by its mesh-axis extent silently falls back to replication — the production
+policy that makes odd head counts (smollm: 15 q / 5 kv heads) and odd
+vocabs (granite: 49 155) shard safely on a 16-wide model axis.
+
+Key logical axes:
+  batch      data-parallel batch            → ("pod", "data")
+  embed      residual/d_model               → None (replicated activations)
+  heads      attention q heads              → "model"   (TP)
+  kv_heads   attention kv heads             → "model"   (TP)
+  mlp        FFN hidden                     → "model"   (TP)
+  vocab      embedding/unembedding vocab    → "model"   (TP)
+  expert     MoE expert id                  → "model"   (EP)
+  fsdp       weight shard dim for FSDP      → ("pod", "data")  (ZeRO-3 style)
+  seq        sequence (SP, long-context)    → None by default
+  layers     scanned layer stack            → None
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+LOGICAL_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_ff": None,           # per-expert FFN hidden (serving: "data")
+    "d_state": None,
+    "embed": None,
+    "kv_lora": None,
+    "seq": None,
+    # decode KV-cache sequence axis: soaks up whatever mesh axes the batch
+    # dim left unclaimed (heads-poor GQA and batch=1 long-context cells)
+    "seq_kv": ("model", "data", "pod"),
+    "layers": None,
+    "conv": None,
+    "head_dim": None,
+    "qk_dim": None,
+    "capacity": None,
+    None: None,
+}
+
+# Serving layout (§Perf): parameters are NOT FSDP-sharded (the per-step
+# ZeRO-3 weight all-gather dominates decode collectives under the train
+# layout); MoE expert FFN dims are TP-sharded over ``data`` instead so
+# giant-MoE weights still fit per chip (1 expert-slice per device).
+SERVING_RULES: Dict[str, Optional[Tuple[str, ...]]] = dict(
+    LOGICAL_RULES,
+    **{
+        "fsdp": None,
+        "expert_ff": ("data",),
+    },
+)
+
+
+def _mesh_axes_for(
+    logical: Optional[str], mesh: Mesh, rules=None
+) -> Tuple[str, ...]:
+    rule = (rules or LOGICAL_RULES).get(logical)
+    if rule is None:
+        return ()
+    return tuple(a for a in rule if a in mesh.shape)
+
+
+def logical_to_spec(
+    axes: Axes, mesh: Mesh, shape: Optional[Sequence[int]] = None,
+    rules=None,
+) -> P:
+    """Map per-dim logical names to a PartitionSpec.
+
+    If ``shape`` is given, any dim not divisible by the product of its mesh
+    axes is replicated instead (the fallback policy).  Mesh axes may be
+    used at most once across the whole spec (GSPMD requirement); later
+    claims lose.
+    """
+    used = set()
+    parts = []
+    for d, name in enumerate(axes):
+        mesh_axes = _mesh_axes_for(name, mesh, rules)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            extent = 1
+            for a in mesh_axes:
+                extent *= mesh.shape[a]
+            if shape[d] % extent != 0:
+                # try a shrinking suffix/prefix of the axes tuple
+                picked = ()
+                for k in range(len(mesh_axes), 0, -1):
+                    ext = 1
+                    for a in mesh_axes[:k]:
+                        ext *= mesh.shape[a]
+                    if shape[d] % ext == 0:
+                        picked = mesh_axes[:k]
+                        break
+                mesh_axes = picked
+                if not mesh_axes:
+                    parts.append(None)
+                    continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*parts)
+
+
+def shard_params_specs(axes_tree, mesh: Mesh, shapes_tree=None, rules=None):
+    """Pytree of logical-axes tuples → pytree of PartitionSpec."""
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: logical_to_spec(axes, mesh, rules=rules),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+    return jax.tree.map(
+        lambda axes, shp: logical_to_spec(axes, mesh, shp, rules=rules),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def constrain(x: jax.Array, axes: Axes) -> jax.Array:
+    """Activation sharding constraint by logical axes (no-op off-mesh)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        spec = logical_to_spec(axes, mesh, x.shape)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def named_sharding(axes: Axes, mesh: Mesh, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, mesh, shape))

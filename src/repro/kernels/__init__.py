@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the Trie-of-Rules hot spots.
+
+- ``support_count``  mining Step 1: MXU matmul support counting
+- ``rule_search``    paper Fig. 8-10: batched broadcast-compare trie descent
+- ``trie_reduce``    paper traversal: masked column reductions
+
+``jax.lax.top_k`` already saturates the top-N operation on TPU (a single
+fused XLA sort/partial-sort over the metric column), so Fig. 12/13 use it
+directly rather than a hand-written kernel — see DESIGN.md §2.
+"""
+from .ops import (
+    dense_from_bitmaps,
+    edge_metric_arrays,
+    members_from_candidates,
+    rule_search,
+    support_count,
+    trie_reduce,
+)
+
+__all__ = [
+    "dense_from_bitmaps",
+    "edge_metric_arrays",
+    "members_from_candidates",
+    "rule_search",
+    "support_count",
+    "trie_reduce",
+]

@@ -1,0 +1,148 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Each op auto-selects ``interpret=True`` off-TPU (this container is CPU-only;
+interpret mode executes the kernel body in Python, which is how the kernels
+are validated here), and composes kernels into the paper-level semantics
+(e.g. compound-consequent lift = two descents, Eq. 1-4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .support_count import support_count_pallas
+from .rule_search import rule_search_pallas
+from .trie_reduce import trie_reduce_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------
+# support counting
+# ----------------------------------------------------------------------
+def members_from_candidates(
+    candidates: jax.Array, n_items: int
+) -> jax.Array:
+    """[C, K] padded item lists → [C, I] 0/1 membership (one-hot scatter)."""
+    c, k = candidates.shape
+    valid = candidates >= 0
+    safe = jnp.where(valid, candidates, 0)
+    onehot = jax.nn.one_hot(safe, n_items, dtype=jnp.float32)
+    onehot = onehot * valid[..., None]
+    return jnp.clip(jnp.sum(onehot, axis=1), 0.0, 1.0)
+
+
+def support_count(
+    candidates,            # int32 [C, K] padded with -1
+    lengths,               # int32 [C]
+    item_bitmaps=None,     # uint32 [I, W] vertical layout (TransactionDB)
+    dense_tx=None,         # or [T, I] 0/1 dense transactions
+) -> jax.Array:
+    """Counts for every candidate itemset against the transaction DB."""
+    if dense_tx is None:
+        if item_bitmaps is None:
+            raise ValueError("need item_bitmaps or dense_tx")
+        dense_tx = dense_from_bitmaps(np.asarray(item_bitmaps))
+    dense_tx = jnp.asarray(dense_tx)
+    candidates = jnp.asarray(candidates, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    member = members_from_candidates(candidates, dense_tx.shape[1])
+    return support_count_pallas(
+        dense_tx, member, lengths, interpret=_interpret()
+    )
+
+
+def dense_from_bitmaps(item_bitmaps: np.ndarray) -> np.ndarray:
+    """uint32 [I, W] vertical bitmaps → uint8 [T, I] dense membership."""
+    i, w = item_bitmaps.shape
+    bits = np.unpackbits(
+        item_bitmaps.view(np.uint8).reshape(i, w, 4), axis=-1, bitorder="little"
+    )  # [I, W, 32]
+    return bits.reshape(i, w * 32).T.astype(np.uint8)
+
+
+# ----------------------------------------------------------------------
+# trie search
+# ----------------------------------------------------------------------
+def edge_metric_arrays(trie) -> Dict[str, jax.Array]:
+    """Edge-annotated metrics: child-node metrics gathered onto edges once
+    at freeze time, so the kernel needs no gathers (DeviceTrie or
+    FrozenTrie accepted)."""
+    child = jnp.asarray(trie.edge_child, jnp.int32)
+    return {
+        "edge_parent": jnp.asarray(trie.edge_parent, jnp.int32),
+        "edge_item": jnp.asarray(trie.edge_item, jnp.int32),
+        "edge_child": child,
+        "edge_conf": jnp.asarray(trie.confidence)[child],
+        "edge_sup": jnp.asarray(trie.support)[child],
+        "edge_lift": jnp.asarray(trie.lift)[child],
+    }
+
+
+def rule_search(
+    trie,                  # DeviceTrie / FrozenTrie
+    queries,               # int32 [Q, L] canonical rows (-1 padded)
+    ant_len,               # int32 [Q]
+    edges: Optional[Dict[str, jax.Array]] = None,
+) -> Dict[str, jax.Array]:
+    """Batched rule search with full paper metrics (compound lift incl.)."""
+    if edges is None:
+        edges = edge_metric_arrays(trie)
+    queries = jnp.asarray(queries, jnp.int32)
+    ant_len = jnp.asarray(ant_len, jnp.int32)
+    interp = _interpret()
+
+    full = rule_search_pallas(
+        edges["edge_parent"], edges["edge_item"], edges["edge_child"],
+        edges["edge_conf"], edges["edge_sup"], edges["edge_lift"],
+        queries, ant_len, interpret=interp,
+    )
+    # Consequent-only walk for compound lift (Eq. 1-4): keep consequent
+    # columns, blank the antecedent, walk from the root.
+    width = queries.shape[1]
+    cols = jnp.arange(width, dtype=jnp.int32)[None, :]
+    cons_q = jnp.where(cols >= ant_len[:, None], queries, -1)
+    cons = rule_search_pallas(
+        edges["edge_parent"], edges["edge_item"], edges["edge_child"],
+        edges["edge_conf"], edges["edge_sup"], edges["edge_lift"],
+        cons_q, jnp.zeros_like(ant_len), interpret=interp,
+    )
+    seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
+    single = (seq_len - ant_len) == 1
+    con_sup = cons["support"]
+    lift = jnp.where(
+        single,
+        full["node_lift"],
+        jnp.where(con_sup > 0, full["confidence"] / con_sup, 0.0),
+    )
+    return {
+        "found": full["found"],
+        "node": full["node"],
+        "support": full["support"],
+        "confidence": full["confidence"],
+        "lift": jnp.where(full["found"], lift, 0.0),
+    }
+
+
+# ----------------------------------------------------------------------
+# traversal reduction
+# ----------------------------------------------------------------------
+def trie_reduce(trie) -> Dict[str, jax.Array]:
+    n, sup_sum, conf_max, conf_sum = trie_reduce_pallas(
+        jnp.asarray(trie.support),
+        jnp.asarray(trie.confidence),
+        jnp.asarray(trie.node_depth),
+        interpret=_interpret(),
+    )
+    return {
+        "n_rules": n,
+        "support_sum": sup_sum,
+        "confidence_max": conf_max,
+        "mean_conf": conf_sum / jnp.maximum(n, 1.0),
+    }

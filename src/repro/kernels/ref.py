@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is allclose-tested
+against (``tests/test_kernels.py`` sweeps shapes/dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# support_count — mining Step 1 hot loop (MXU formulation)
+# ----------------------------------------------------------------------
+def support_count_ref(
+    dense_tx: jax.Array,      # {u}int8/bf16/f32 [T, I] 0/1 membership
+    member: jax.Array,        # same dtype   [C, I] candidate membership
+    lengths: jax.Array,       # int32 [C]  (|itemset|; -1 for padding rows)
+) -> jax.Array:
+    """counts[c] = |{t : candidate c ⊆ transaction t}|.
+
+    A transaction contains the itemset iff ⟨tx_row, member_row⟩ == |itemset|
+    — the matmul formulation that runs on the MXU (DESIGN.md §2).
+    """
+    s = jnp.dot(
+        dense_tx.astype(jnp.float32),
+        member.astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )  # [T, C]
+    hits = s == lengths.astype(jnp.float32)[None, :]
+    return jnp.sum(hits, axis=0).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# rule_search — batched trie descent (paper Fig. 8-10 operation)
+# ----------------------------------------------------------------------
+def rule_search_ref(
+    edge_parent: jax.Array,   # int32 [E]   (pad = -7, never matches)
+    edge_item: jax.Array,     # int32 [E]
+    edge_child: jax.Array,    # int32 [E]
+    edge_conf: jax.Array,     # f32   [E]  confidence of the child node
+    edge_sup: jax.Array,      # f32   [E]  support of the child node
+    edge_lift: jax.Array,     # f32   [E]  lift of the child node
+    queries: jax.Array,       # int32 [Q, L]  (-1 padded)
+    ant_len: jax.Array,       # int32 [Q]
+) -> Dict[str, jax.Array]:
+    """Walk each query root→down by matching (node, item) against the full
+    edge table (the broadcast-compare semantics of the TPU kernel).
+
+    Returns found/node/support/confidence/node_lift per query; compound
+    lift is assembled by the ops wrapper from a second consequent-only walk.
+    """
+    q, width = queries.shape
+    node = jnp.zeros((q,), jnp.int32)
+    ok = jnp.ones((q,), bool)
+    conf = jnp.ones((q,), jnp.float32)
+    sup = jnp.zeros((q,), jnp.float32)
+    nlift = jnp.zeros((q,), jnp.float32)
+
+    for s in range(width):
+        item = queries[:, s]
+        active = (item >= 0) & ok
+        qp = jnp.where(active, node, -9)
+        match = (edge_parent[None, :] == qp[:, None]) & (
+            edge_item[None, :] == item[:, None]
+        )  # [Q, E]
+        child = jnp.max(
+            jnp.where(match, edge_child[None, :], -1), axis=1
+        )
+        e_conf = jnp.max(jnp.where(match, edge_conf[None, :], 0.0), axis=1)
+        e_sup = jnp.max(jnp.where(match, edge_sup[None, :], 0.0), axis=1)
+        e_lift = jnp.max(jnp.where(match, edge_lift[None, :], 0.0), axis=1)
+        hit = child >= 0
+        ok = jnp.where(active, hit, ok)
+        node = jnp.where(active & hit, child, node)
+        in_cons = s >= ant_len
+        conf = jnp.where(active & hit & in_cons, conf * e_conf, conf)
+        sup = jnp.where(active & hit, e_sup, sup)
+        nlift = jnp.where(active & hit, e_lift, nlift)
+
+    found = ok & (node > 0)
+    return {
+        "found": found,
+        "node": jnp.where(found, node, -1),
+        "support": jnp.where(found, sup, 0.0),
+        "confidence": jnp.where(found, conf, 0.0),
+        "node_lift": jnp.where(found, nlift, 0.0),
+    }
+
+
+# ----------------------------------------------------------------------
+# trie_reduce — full-ruleset traversal reductions (the 8× traversal op)
+# ----------------------------------------------------------------------
+def trie_reduce_ref(
+    support: jax.Array,       # f32 [N]
+    confidence: jax.Array,    # f32 [N]
+    depth: jax.Array,         # int32 [N]  (root=0 and padding<0 masked out)
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(n_rules, Σ support, max confidence, Σ confidence) over real nodes."""
+    mask = depth > 0
+    n = jnp.sum(mask).astype(jnp.float32)
+    sup_sum = jnp.sum(jnp.where(mask, support, 0.0))
+    conf_max = jnp.max(jnp.where(mask, confidence, -jnp.inf))
+    conf_sum = jnp.sum(jnp.where(mask, confidence, 0.0))
+    return n, sup_sum, conf_max, conf_sum

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: batched Trie-of-Rules descent (the paper's search op).
+
+The pointer-trie walk (paper Fig. 8) is re-expressed for TPU as a
+broadcast-compare against the lex-sorted edge table (DESIGN.md §2):
+
+    per step s:  match[q, e] = (edge_parent[e] == node[q])
+                             & (edge_item[e]  == queries[q, s])
+                 child[q]    = max_e( match ? edge_child : -1 )
+
+Metrics ride ON THE EDGES (edge_conf/edge_sup/edge_lift are the child
+node's Step-3 annotations), so the walk needs no gather at all — masked
+max-reductions only, which the VPU executes at full lane width.  This is
+the deliberate complexity-for-vectorization trade: O(E) compares per step
+instead of O(log E) pointer hops, a win whenever the edge table is
+VMEM-resident (E ≲ 10^5; larger tries use ``array_trie.batched_rule_search``,
+the jnp binary-search path).
+
+Tiling: grid over query tiles (BQ rows); the edge table is streamed through
+VMEM in BE-wide chunks inside each descent step via an unrolled loop on the
+whole (1, E) block.  Compound-consequent lift is assembled by the ops
+wrapper from a second consequent-only invocation (paper Eq. 1-4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128    # queries per tile
+BE = 2048   # edge-table chunk per compare sweep
+
+
+def _make_kernel(width: int, n_chunks: int):
+    def kernel(
+        q_ref, al_ref,
+        ep_ref, ei_ref, ec_ref, econf_ref, esup_ref, elift_ref,
+        node_ref, ok_ref, conf_ref, sup_ref, lift_ref,
+    ):
+        bq = q_ref.shape[0]
+        node = jnp.zeros((bq,), jnp.int32)
+        ok = jnp.ones((bq,), jnp.bool_)
+        conf = jnp.ones((bq,), jnp.float32)
+        sup = jnp.zeros((bq,), jnp.float32)
+        nlift = jnp.zeros((bq,), jnp.float32)
+        ant_len = al_ref[...][:, 0]
+
+        for s in range(width):
+            item = q_ref[...][:, s]
+            active = (item >= 0) & ok
+            qp = jnp.where(active, node, -9)
+
+            child = jnp.full((bq,), -1, jnp.int32)
+            e_conf = jnp.zeros((bq,), jnp.float32)
+            e_sup = jnp.zeros((bq,), jnp.float32)
+            e_lift = jnp.zeros((bq,), jnp.float32)
+            for ch in range(n_chunks):
+                sl = (0, pl.dslice(ch * BE, BE))
+                ep = ep_ref[sl]
+                ei = ei_ref[sl]
+                ec = ec_ref[sl]
+                cf = econf_ref[sl]
+                sp = esup_ref[sl]
+                lf = elift_ref[sl]
+                match = (ep[None, :] == qp[:, None]) & (
+                    ei[None, :] == item[:, None]
+                )
+                child = jnp.maximum(
+                    child,
+                    jnp.max(jnp.where(match, ec[None, :], -1), axis=1),
+                )
+                e_conf = jnp.maximum(
+                    e_conf,
+                    jnp.max(jnp.where(match, cf[None, :], 0.0), axis=1),
+                )
+                e_sup = jnp.maximum(
+                    e_sup,
+                    jnp.max(jnp.where(match, sp[None, :], 0.0), axis=1),
+                )
+                e_lift = jnp.maximum(
+                    e_lift,
+                    jnp.max(jnp.where(match, lf[None, :], 0.0), axis=1),
+                )
+
+            hit = child >= 0
+            ok = jnp.where(active, hit, ok)
+            node = jnp.where(active & hit, child, node)
+            in_cons = s >= ant_len
+            conf = jnp.where(active & hit & in_cons, conf * e_conf, conf)
+            sup = jnp.where(active & hit, e_sup, sup)
+            nlift = jnp.where(active & hit, e_lift, nlift)
+
+        found = ok & (node > 0)
+        node_ref[...] = jnp.where(found, node, -1)[:, None]
+        ok_ref[...] = found.astype(jnp.int32)[:, None]
+        conf_ref[...] = jnp.where(found, conf, 0.0)[:, None]
+        sup_ref[...] = jnp.where(found, sup, 0.0)[:, None]
+        lift_ref[...] = jnp.where(found, nlift, 0.0)[:, None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rule_search_pallas(
+    edge_parent: jax.Array,   # int32 [E]
+    edge_item: jax.Array,     # int32 [E]
+    edge_child: jax.Array,    # int32 [E]
+    edge_conf: jax.Array,     # f32 [E]
+    edge_sup: jax.Array,      # f32 [E]
+    edge_lift: jax.Array,     # f32 [E]
+    queries: jax.Array,       # int32 [Q, L]
+    ant_len: jax.Array,       # int32 [Q]
+    interpret: bool = False,
+):
+    q, width = queries.shape
+    e = edge_parent.shape[0]
+    qp = -q % BQ
+    epad = -e % BE
+
+    queries_p = jnp.pad(
+        queries.astype(jnp.int32), ((0, qp), (0, 0)), constant_values=-1
+    )
+    al_p = jnp.pad(ant_len.astype(jnp.int32), (0, qp)).reshape(-1, 1)
+
+    def pad_e(a, fill):
+        return jnp.pad(a, (0, epad), constant_values=fill).reshape(1, -1)
+
+    ep = pad_e(edge_parent.astype(jnp.int32), -7)
+    ei = pad_e(edge_item.astype(jnp.int32), -7)
+    ec = pad_e(edge_child.astype(jnp.int32), -1)
+    ecf = pad_e(edge_conf.astype(jnp.float32), 0.0)
+    esp = pad_e(edge_sup.astype(jnp.float32), 0.0)
+    elf = pad_e(edge_lift.astype(jnp.float32), 0.0)
+
+    qq = queries_p.shape[0]
+    ee = ep.shape[1]
+    n_chunks = ee // BE
+    grid = (qq // BQ,)
+    edge_spec = pl.BlockSpec((1, ee), lambda qi: (0, 0))
+    out_specs = [
+        pl.BlockSpec((BQ, 1), lambda qi: (qi, 0)) for _ in range(5)
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((qq, 1), jnp.int32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.int32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+    ]
+    node, okv, conf, sup, nlift = pl.pallas_call(
+        _make_kernel(width, n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BQ, width), lambda qi: (qi, 0)),
+            pl.BlockSpec((BQ, 1), lambda qi: (qi, 0)),
+            edge_spec, edge_spec, edge_spec,
+            edge_spec, edge_spec, edge_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(queries_p, al_p, ep, ei, ec, ecf, esp, elf)
+    return {
+        "found": okv[:q, 0].astype(bool),
+        "node": node[:q, 0],
+        "confidence": conf[:q, 0],
+        "support": sup[:q, 0],
+        "node_lift": nlift[:q, 0],
+    }

@@ -1,0 +1,9 @@
+"""Launch layer: meshes, dry-run, roofline, train driver.
+
+NOTE: never import ``dryrun`` transitively from here — it sets XLA_FLAGS
+for 512 host devices at import time, which must only happen in a dedicated
+process.
+"""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

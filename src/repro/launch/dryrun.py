@@ -1,0 +1,437 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first initialization, and the dry-run (and only
+the dry-run) needs 512 placeholder host devices to build the production
+meshes.  Tests and benchmarks import nothing from here and see 1 device.
+
+Per cell this script:
+  1. builds the production mesh (16×16 or 2×16×16),
+  2. lowers the right step (train_step / prefill / decode) against
+     ShapeDtypeStruct inputs (no allocation — a 671B model lowers fine),
+  3. compiles, prints ``memory_analysis()`` and ``cost_analysis()``,
+  4. extracts per-device collective bytes from the optimized HLO,
+  5. appends a JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--arch-filter moe]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_shape, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    batch_specs,
+    cache_specs,
+    input_specs,
+    param_specs,
+    shard_tree,
+)
+from repro.models import abstract_params
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.optimizer import OptConfig, pick_optimizer
+from repro.train.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# HLO collective ops and their ring wire-cost multipliers (× output bytes)
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of the (possibly tuple) result shape on the lhs of an op."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# ops that materialize HBM traffic on TPU even under XLA fusion
+_BOUNDARY_OPS = (
+    "dot", "convolution", "reduce", "reduce-window", "scatter", "gather",
+    "sort", "dynamic-update-slice", "dynamic-slice", "transpose", "copy",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "while", "iota",
+)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def boundary_bytes(hlo_text: str) -> float:
+    """Fusion-boundary HBM-traffic estimate (per device).
+
+    Counts result bytes of every op whose output materializes on TPU
+    (matmuls, reductions, data movement, collectives) plus the operand
+    bytes of dots/convolutions (their inputs are read from HBM), and the
+    program arguments once.  Elementwise/broadcast chains are assumed
+    fused away — this is the *TPU-style* counterpart of the CPU cost
+    analysis' unfused "bytes accessed" upper bound.
+    """
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2))
+    total = 0.0
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, sig, op = m.groups()
+        if op == "parameter":
+            total += sizes.get(name, 0)
+            continue
+        if not any(op == b or op.startswith(b) for b in _BOUNDARY_OPS):
+            continue
+        if op == "while":
+            continue  # body ops counted individually
+        total += sizes.get(name, 0)
+        if op in ("dot", "convolution"):
+            # read both operands from HBM
+            tail = line.split("(", 1)[-1]
+            ops = _OPERAND_RE.findall(tail.split(")")[0])
+            for o in ops:
+                total += sizes.get(o, 0)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by op type (output-bytes × ring mult)."""
+    out: Dict[str, float] = {k: 0.0 for k in _MULT}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(sig) * _MULT[kind]
+    out["total"] = sum(out.values())
+    return out
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(mem, k, 0.0) or 0.0)
+    return out
+
+
+def _lower_cell(cfg, shape, mesh, opt=None, seq_override=None):
+    """Lower the right step kind for (cfg, shape) on ``mesh``.
+
+    ``seq_override`` shrinks the *token* sequence (cost-measurement mode)
+    while the prefill cache keeps the cell's true length, so the
+    attention kv extent stays authentic."""
+    import dataclasses as _dc
+
+    aparams, axes = param_specs(cfg, mesh)
+    tok_shape = (
+        _dc.replace(shape, seq_len=seq_override) if seq_override else shape
+    )
+    if shape.kind == "train":
+        if opt is None:
+            opt = pick_optimizer(cfg)
+        opt_sds = jax.eval_shape(opt.init, aparams)
+        opt_sharded = shard_tree(opt_sds, opt.state_axes(axes), mesh)
+        step = make_train_step(cfg, opt)
+        batch = batch_specs(cfg, tok_shape, mesh, with_labels=True)
+        step_idx = jax.ShapeDtypeStruct((), jnp.float32)
+        return jax.jit(step, donate_argnums=(0, 1)).lower(
+            aparams, opt_sharded, batch, step_idx
+        )
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch = batch_specs(cfg, tok_shape, mesh, with_labels=False)
+        cache = cache_specs(
+            cfg, mesh, shape.global_batch,
+            shape.seq_len
+            + (cfg.frontend_len if cfg.frontend != "none" else 0),
+        )
+        return jax.jit(fn, donate_argnums=(1,)).lower(
+            aparams, cache, batch
+        )
+    fn = make_decode_step(cfg)
+    cache = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return jax.jit(fn, donate_argnums=(1,)).lower(aparams, cache, tokens)
+
+
+def _costs(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "bytes_boundary": boundary_bytes(hlo),
+        "collectives": collective_bytes(hlo),
+    }
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, transform=None
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if transform is not None:
+        cfg = transform(cfg)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "n_devices": mesh.devices.size,
+    }
+    with jax.set_mesh(mesh):
+        # 1) the PRODUCTION lowering (scan + remat): proves compile +
+        #    gives the true memory picture.
+        t0 = time.time()
+        lowered = _lower_cell(cfg, shape, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        print(mem)
+
+        # 2) cost measurement.  XLA counts `while` bodies once, so we
+        #    lower UNROLLED variants and extrapolate.  Every HLO op size
+        #    is polynomial (degree ≤2) in the chunk count c (attention is
+        #    quadratic in c for train where kv extent = tokens, affine
+        #    for prefill where kv = fixed cache) and affine in the unit
+        #    count u, so  cost(u, c) = a + b·u + d·c + e·uc + g·c² + h·uc²
+        #    is EXACT; six measurements (u∈{1,2} × c∈{2,3,4}) determine
+        #    it and we evaluate at the cell's true (n_units, n_chunks).
+        #    Decode cells (s=1, no chunk loop) use the 2-point u form.
+        opt = pick_optimizer(cfg) if shape.kind == "train" else None
+        q_chunk = 256
+        if shape.kind in ("train", "prefill"):
+            us, cs = (1, 2), (2, 3, 4)
+            meas = {}
+            for u in us:
+                cfg_u = cfg.scaled(n_units=u, unroll_scans=True)
+                for c in cs:
+                    low = _lower_cell(
+                        cfg_u, shape, mesh, opt=opt,
+                        seq_override=c * q_chunk,
+                    )
+                    meas[(u, c)] = _costs(low.compile())
+            true_c = shape.seq_len / q_chunk
+            costs = _poly_extrapolate(
+                meas, cfg.n_units, true_c,
+                quadratic=(shape.kind == "train"),
+            )
+            record["raw_measurements"] = {
+                f"u{u}c{c}": meas[(u, c)] for (u, c) in meas
+            }
+        else:
+            cfg_a = cfg.scaled(n_units=1, unroll_scans=True)
+            cfg_b = cfg.scaled(n_units=2, unroll_scans=True)
+            ca = _costs(_lower_cell(cfg_a, shape, mesh, opt=opt).compile())
+            cb = _costs(_lower_cell(cfg_b, shape, mesh, opt=opt).compile())
+            n = cfg.n_units
+            costs = {
+                "flops": ca["flops"] + (n - 1) * (cb["flops"] - ca["flops"]),
+                "bytes": ca["bytes"] + (n - 1) * (cb["bytes"] - ca["bytes"]),
+                "bytes_boundary": ca["bytes_boundary"]
+                + (n - 1) * (cb["bytes_boundary"] - ca["bytes_boundary"]),
+                "collectives": {
+                    k: ca["collectives"][k]
+                    + (n - 1) * (cb["collectives"][k] - ca["collectives"][k])
+                    for k in ca["collectives"]
+                },
+            }
+        t3 = time.time()
+
+    record.update(
+        {
+            "lower_seconds": t1 - t0,
+            "compile_seconds": t2 - t1,
+            "cost_measure_seconds": t3 - t2,
+            "memory": _mem_dict(mem),
+            "flops_per_device": costs["flops"],
+            "bytes_per_device": costs["bytes"],
+            "bytes_boundary_per_device": costs["bytes_boundary"],
+            "collective_bytes_per_device": costs["collectives"],
+        }
+    )
+    print({k: record[k] for k in ("flops_per_device", "bytes_per_device")})
+    return record
+
+
+def _poly_extrapolate(
+    meas, n_units: int, true_c: float, quadratic: bool = True
+) -> Dict[str, Any]:
+    """Solve cost(u,c) = a + b·u + d·c + e·uc [+ g·c² + h·uc²] from the
+    (u, c) measurements and evaluate at (n_units, true_c).
+
+    The c² terms exist only for train cells (attention kv extent = token
+    count); prefill/decode kv extents are fixed by the cache, so fitting
+    the affine basis avoids ill-conditioned extrapolation of a spurious
+    quadratic coefficient to c≈128."""
+    import numpy as np
+
+    keys = sorted(meas)
+    if quadratic:
+        basis = lambda u, c: [1.0, u, c, u * c, c * c, u * c * c]
+    else:
+        basis = lambda u, c: [1.0, u, c, u * c]
+    m = np.array([basis(u, c) for (u, c) in keys])
+    target = np.array(basis(n_units, true_c))
+
+    def solve(values):
+        coef, *_ = np.linalg.lstsq(m, np.array(values), rcond=None)
+        return float(np.maximum(target @ coef, 0.0))
+
+    out = {
+        "flops": solve([meas[k]["flops"] for k in keys]),
+        "bytes": solve([meas[k]["bytes"] for k in keys]),
+        "bytes_boundary": solve(
+            [meas[k]["bytes_boundary"] for k in keys]
+        ),
+    }
+    coll_keys = meas[keys[0]]["collectives"].keys()
+    out["collectives"] = {
+        ck: solve([meas[k]["collectives"][ck] for k in keys])
+        for ck in coll_keys
+    }
+    return out
+
+
+def long_500k_applicable(arch: str) -> bool:
+    """long_500k is a decode cell: linear in KV even for full attention,
+    so every arch runs it (DESIGN.md §5)."""
+    return True
+
+
+def recost(out_dir: str):
+    """Update existing cell records with the current cost estimators
+    (bytes_boundary etc.) without redoing the production compile."""
+    import glob
+
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "bytes_boundary_per_device" in rec:
+            continue
+        print(f"[recost] {os.path.basename(path)}", flush=True)
+        try:
+            fresh = run_cell(
+                rec["arch"], rec["shape"], rec["mesh"] == "pod2x16x16"
+            )
+        except Exception:
+            traceback.print_exc()
+            continue
+        # keep the original compile proof / memory; refresh cost fields
+        for k in (
+            "flops_per_device", "bytes_per_device",
+            "bytes_boundary_per_device", "collective_bytes_per_device",
+            "raw_measurements", "cost_measure_seconds",
+        ):
+            if k in fresh:
+                rec[k] = fresh[k]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    print("recost done")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--recost", action="store_true")
+    p.add_argument("--out", default=OUT_DIR)
+    args = p.parse_args()
+
+    if args.recost:
+        recost(args.out)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape.name, mp))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = []
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (exists)")
+            continue
+        print(f"[cell] {tag}", flush=True)
+        try:
+            rec = run_cell(arch, shape, mp)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"[ok] {tag}: compile={rec['compile_seconds']:.1f}s "
+                f"flops/dev={rec['flops_per_device']:.3e} "
+                f"coll/dev={rec['collective_bytes_per_device']['total']:.3e}",
+                flush=True,
+            )
+        except Exception:
+            failures.append(tag)
+            with open(path + ".err", "w") as f:
+                traceback.print_exc(file=f)
+            traceback.print_exc()
+    if failures:
+        print("FAILED CELLS:", failures)
+        raise SystemExit(1)
+    print("all cells ok")
+
+
+if __name__ == "__main__":
+    main()

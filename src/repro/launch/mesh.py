@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module never touches jax device initialization.  The
+single-pod mesh is 16×16 = 256 chips (data, model); the multi-pod mesh is
+2×16×16 = 512 chips (pod, data, model) — the ``pod`` axis carries
+inter-pod data parallelism (DCN-grade collectives only: gradient
+all-reduce), while ``model`` stays intra-pod on ICI.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1×1 mesh over the real local device (tests, examples)."""
+    n = jax.device_count()
+    return jax.make_mesh(
+        (1, n), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

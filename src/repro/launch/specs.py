@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs —
+never device arrays — for the three step kinds:
+
+  train    {tokens, labels [B, S]} (+ frontend_embeds stub)
+  prefill  {tokens [B, S]} + empty decode cache (prefill populates it)
+  decode   {tokens [B, 1]} + a full-length decode cache
+
+Sharding is attached to each struct from the logical-axis rules so
+``jit(...).lower(**specs)`` sees the production layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    SERVING_RULES,
+    logical_to_spec,
+)
+from repro.models import abstract_params, cache_axes, init_cache
+
+
+def _sds(shape, dtype, mesh, axes, rules=None):
+    sharding = NamedSharding(
+        mesh, logical_to_spec(axes, mesh, shape, rules=rules)
+    )
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def shard_tree(tree, axes_tree, mesh: Mesh, rules=None):
+    """ShapeDtypeStruct tree + logical-axes tree → sharded SDS tree."""
+    return jax.tree.map(
+        lambda sds, axes: _sds(sds.shape, sds.dtype, mesh, axes, rules),
+        tree,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, with_labels: bool
+) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((b, s), jnp.int32, mesh, ("batch", "seq")),
+    }
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32, mesh, ("batch", "seq"))
+    if cfg.frontend != "none" and shape.kind != "decode":
+        out["frontend_embeds"] = _sds(
+            (b, cfg.frontend_len, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype), mesh,
+            ("batch", "seq", "embed"),
+        )
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    params, axes = abstract_params(cfg)
+    if cfg.serving:
+        rules = dict(SERVING_RULES)
+        if not cfg.serve_expert_ff_tp:
+            rules["expert_ff"] = None   # replicate expert slices instead
+    else:
+        rules = LOGICAL_RULES
+    return shard_tree(params, axes, mesh, rules=rules), axes
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, jnp.bfloat16)
+    )
+    axes = cache_axes(cfg)
+
+    def fix(sds, ax):
+        ax = tuple(ax)
+        if len(ax) < len(sds.shape):  # scalar 'pos' entries etc.
+            ax = ax + (None,) * (len(sds.shape) - len(ax))
+        return _sds(sds.shape, sds.dtype, mesh, ax)
+
+    return jax.tree.map(
+        fix, cache, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> Dict[str, Any]:
+    """All lowering inputs for one dry-run cell (excl. params/opt)."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, mesh, with_labels=True)}
+    if shape.kind == "prefill":
+        return {
+            "batch": batch_specs(cfg, shape, mesh, with_labels=False),
+            "cache": cache_specs(
+                cfg, mesh, shape.global_batch,
+                shape.seq_len + (cfg.frontend_len
+                                 if cfg.frontend != "none" else 0),
+            ),
+        }
+    if shape.kind == "decode":
+        return {
+            "tokens": _sds(
+                (shape.global_batch, 1), jnp.int32, mesh,
+                ("batch", "seq"),
+            ),
+            "cache": cache_specs(
+                cfg, mesh, shape.global_batch, shape.seq_len
+            ),
+        }
+    raise ValueError(shape.kind)

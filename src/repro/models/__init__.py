@@ -1,0 +1,27 @@
+"""Model zoo substrate: unified decoder LM over the assigned pool."""
+from .model import (
+    abstract_params,
+    cache_axes,
+    count_params_analytic,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    materialize_params,
+)
+from .layers import PV, split_pv
+
+__all__ = [
+    "abstract_params",
+    "cache_axes",
+    "count_params_analytic",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_model",
+    "loss_fn",
+    "materialize_params",
+    "PV",
+    "split_pv",
+]

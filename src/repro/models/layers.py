@@ -1,0 +1,442 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (with chunked
+flash-style softmax for long sequences), SwiGLU MLP.
+
+Parameters are plain pytrees of ``PV`` leaves (array + logical axes); the
+logical axes drive the sharding rules in ``repro.distributed.sharding``.
+All matmuls run in ``cfg.compute_dtype`` (bf16 on TPU) with f32 softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+# ----------------------------------------------------------------------
+# parameter leaves with logical axes
+# ----------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PV:
+    """A parameter leaf: value + logical axis names (aux data)."""
+
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def split_pv(tree):
+    """PV tree → (params, axes) twin trees."""
+    is_pv = lambda x: isinstance(x, PV)
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_pv)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_pv)
+    return params, axes
+
+
+def _key(key, name: str):
+    return jax.random.fold_in(key, hash(name) % (1 << 30))
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def pv(key, name, shape, axes, dtype, fan_in=None, zeros=False, ones=False):
+    if ones:
+        val = jnp.ones(shape, dtype)
+    elif zeros:
+        val = jnp.zeros(shape, dtype)
+    else:
+        val = dense_init(_key(key, name), shape, dtype, fan_in)
+    return PV(val, axes)
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+def init_rmsnorm(key, d, dtype):
+    return {"scale": PV(jnp.ones((d,), jnp.float32), ("embed",))}
+
+
+def rmsnorm(x, params, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# positions: RoPE + sinusoidal
+# ----------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim)
+    )
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., s, d] with d even; positions: [..., s]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., s, d/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate((x1 * cos - x2 * sin, x1 * sin + x2 * cos), -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d):
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate((jnp.sin(ang), jnp.cos(ang)), axis=-1)
+
+
+# ----------------------------------------------------------------------
+# GQA attention
+# ----------------------------------------------------------------------
+def init_attention(key, cfg):
+    d, h, kv, hd = (
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    )
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": pv(key, "wq", (d, h, hd), ("fsdp", "heads", "head_dim"), dt),
+        "wk": pv(key, "wk", (d, kv, hd), ("fsdp", "kv_heads", "head_dim"), dt),
+        "wv": pv(key, "wv", (d, kv, hd), ("fsdp", "kv_heads", "head_dim"), dt),
+        "wo": pv(
+            key, "wo", (h, hd, d), ("heads", "head_dim", "fsdp"), dt,
+            fan_in=h * hd,
+        ),
+    }
+
+
+def _causal_mask(sq, skv, q_offset, sliding_window=0):
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(skv)[None, :]
+    m = ki <= qi
+    if sliding_window > 0:
+        m &= ki > qi - sliding_window
+    return m  # [sq, skv]
+
+
+def _attend(q, k, v, mask, scale):
+    """q: [b,kv,g,sq,d]  k/v: [b,kv,skv,d]  mask: [b?,1?,sq,skv]."""
+    scores = jnp.einsum(
+        "bkgqd,bkpd->bkgqp", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgqp,bkpd->bkgqd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out
+
+
+def _attend_chunked(q, k, v, scale, q_offset, q_chunk, segment_ids,
+                    sliding_window=0, unroll=False, causal_skip=False):
+    """Flash-style: scan over query chunks, full-kv online softmax per
+    chunk with causal masking — peak memory O(q_chunk · skv).
+
+    ``unroll=True`` replaces the scan with a python loop (cost-measurement
+    mode: XLA cost_analysis counts while bodies once).
+
+    ``causal_skip=True`` visits only kv blocks at or before the causal
+    frontier of each query chunk (§Perf knob): in unroll mode the kv
+    extent is a static per-chunk slice; in scan mode an inner
+    dynamic-bound ``fori_loop`` accumulates an online softmax over kv
+    blocks — executed attention flops drop from the full rectangle to the
+    causal triangle (~2× for train).  Only exact when q_offset aligns the
+    frontier to block boundaries (true for our train/prefill paths)."""
+    b, kvh, g, sq, d = q.shape
+    skv = k.shape[2]
+    n_chunks = sq // q_chunk
+    dv = v.shape[-1]
+
+    def q_block(qc_idx):
+        qs = qc_idx * q_chunk
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qs, q_chunk, axis=3)
+        return qs, q_blk
+
+    def mask_for(qs, kv_lo, kv_hi_static, kv_offset=0):
+        mask = _causal_mask(
+            q_chunk, kv_hi_static, q_offset + qs - kv_offset,
+            sliding_window,
+        )
+        if segment_ids is not None:
+            seg_q = jax.lax.dynamic_slice_in_dim(
+                segment_ids, qs, q_chunk, axis=1
+            )
+            seg_k = jax.lax.dynamic_slice_in_dim(
+                segment_ids, kv_lo, kv_hi_static, axis=1
+            ) if kv_offset else segment_ids[:, :kv_hi_static]
+            seg = seg_q[:, :, None] == seg_k[:, None, :]
+            return mask[None] & seg
+        return jnp.broadcast_to(mask[None], (b, q_chunk, kv_hi_static))
+
+    @jax.checkpoint  # flash-style: recompute chunk probs in backward
+    def body(carry, qc_idx):
+        qs, q_blk = q_block(qc_idx)
+        mask = mask_for(qs, 0, skv)
+        return carry, _attend(q_blk, k, v, mask, scale)
+
+    from functools import partial as _partial
+
+    @_partial(jax.checkpoint, static_argnums=(0,))
+    def body_skip_static(qc_idx):
+        """unroll mode: static kv extent = causal frontier.
+
+        Assumes q_offset == 0 at runtime for the extent computation (true
+        for our train and from-scratch-prefill paths); the mask itself
+        still honours a traced q_offset."""
+        qs, q_blk = q_block(jnp.int32(qc_idx))
+        hi = min(skv, (qc_idx + 1) * q_chunk)
+        hi = max(hi, q_chunk)
+        mask = mask_for(qs, 0, hi)
+        out = _attend(q_blk, k[:, :, :hi], v[:, :, :hi], mask, scale)
+        return out
+
+    def _triangle_scan():
+        """scan mode causal skip: one scan over the STATIC list of
+        lower-triangle (q-block, kv-block) pairs — executed attention
+        flops equal the causal triangle exactly, and the static trip list
+        keeps the loop reverse-differentiable."""
+        n_kv = skv // q_chunk
+        pairs = [
+            (qi, ki)
+            for qi in range(n_chunks)
+            for ki in range(min(qi + 1, n_kv))
+        ]
+        qi_arr = jnp.array([p[0] for p in pairs], jnp.int32)
+        ki_arr = jnp.array([p[1] for p in pairs], jnp.int32)
+
+        @jax.checkpoint
+        def step(carry, pair):
+            num, den, mx = carry
+            qi, ki = pair
+            qs = qi * q_chunk
+            ks = ki * q_chunk
+            q_blk = jax.lax.dynamic_slice_in_dim(q, qs, q_chunk, axis=3)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ks, q_chunk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ks, q_chunk, axis=2)
+            s = jnp.einsum(
+                "bkgqd,bkpd->bkgqp", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            qpos = jnp.arange(q_chunk)[:, None] + q_offset + qs
+            kpos = jnp.arange(q_chunk)[None, :] + ks
+            msk = kpos <= qpos
+            if segment_ids is not None:
+                seg_q = jax.lax.dynamic_slice_in_dim(
+                    segment_ids, qs, q_chunk, axis=1
+                )
+                seg_k = jax.lax.dynamic_slice_in_dim(
+                    segment_ids, ks, q_chunk, axis=1
+                )
+                msk = msk[None] & (
+                    seg_q[:, :, None] == seg_k[:, None, :]
+                )
+                msk = msk[:, None, None]
+            else:
+                msk = msk[None, None, None]
+            s = jnp.where(msk, s, -1e30)
+            cur_mx = jax.lax.dynamic_slice_in_dim(mx, qs, q_chunk, axis=3)
+            cur_num = jax.lax.dynamic_slice_in_dim(
+                num, qs, q_chunk, axis=3
+            )
+            cur_den = jax.lax.dynamic_slice_in_dim(
+                den, qs, q_chunk, axis=3
+            )
+            blk_mx = jnp.max(s, axis=-1, keepdims=True)
+            new_mx = jnp.maximum(cur_mx, blk_mx)
+            corr = jnp.exp(cur_mx - new_mx)
+            p = jnp.exp(s - new_mx)
+            new_num = cur_num * corr + jnp.einsum(
+                "bkgqp,bkpd->bkgqd", p.astype(v.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            new_den = cur_den * corr[..., 0] + jnp.sum(p, axis=-1)
+            num = jax.lax.dynamic_update_slice_in_dim(
+                num, new_num, qs, axis=3
+            )
+            den = jax.lax.dynamic_update_slice_in_dim(
+                den, new_den, qs, axis=3
+            )
+            mx = jax.lax.dynamic_update_slice_in_dim(
+                mx, new_mx, qs, axis=3
+            )
+            return (num, den, mx), None
+
+        num0 = jnp.zeros((b, kvh, g, sq, dv), jnp.float32)
+        den0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+        mx0 = jnp.full((b, kvh, g, sq, 1), -jnp.inf, jnp.float32)
+        (num, den, _), _ = jax.lax.scan(
+            step, (num0, den0, mx0), (qi_arr, ki_arr)
+        )
+        return num / jnp.maximum(den[..., None], 1e-30)
+
+    # the skip paths assume the causal frontier starts at kv block 0,
+    # i.e. a static q_offset of 0 (train / from-scratch prefill)
+    if (causal_skip and skv % q_chunk == 0 and sliding_window == 0
+            and isinstance(q_offset, int) and q_offset == 0):
+        if unroll:
+            outs = jnp.stack(
+                [body_skip_static(i) for i in range(n_chunks)]
+            )
+        else:
+            return _triangle_scan().astype(q.dtype) \
+                .reshape(b, kvh, g, sq, dv)
+    elif unroll:
+        outs = jnp.stack(
+            [body(None, jnp.int32(i))[1] for i in range(n_chunks)]
+        )
+    else:
+        _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: [n_chunks, b, kv, g, q_chunk, dv] → [b, kv, g, sq, dv]
+    # (dv may differ from the q/k dim, e.g. MLA nope+rope vs v_head_dim)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, kvh, g, sq, dv)
+    return out
+
+
+def attention(
+    cfg,
+    params,
+    x,                       # [b, s, d]
+    positions,               # [b, s]
+    segment_ids=None,        # [b, s] packed-sequence ids
+    cache: Optional[Dict] = None,
+    q_chunk: int = 256,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+
+    q = jnp.einsum("bsd,dhk->bshk", xc, params["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", xc, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xc, params["wv"].astype(cdt))
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None], cfg.rope_theta
+                       ).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None], cfg.rope_theta
+                       ).swapaxes(1, 2)
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    new_cache = None
+    if cache is not None:
+        # decode: append k/v at cache["pos"], attend over the full cache
+        ck, cv, pos = cache["k"], cache["v"], cache["pos"]
+        k_t = k.swapaxes(1, 2)   # [b, kv, s, d]
+        v_t = v.swapaxes(1, 2)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k_t.astype(ck.dtype),
+                                                 pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v_t.astype(cv.dtype),
+                                                 pos, axis=2)
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        skv = ck.shape[2]
+        qh = q.swapaxes(1, 2).reshape(b, kv, g, s, hd)
+        if s > q_chunk and s % q_chunk == 0:
+            # chunked prefill-into-cache (flash-style, q_offset = pos)
+            out = _attend_chunked(
+                qh, ck.astype(cdt), cv.astype(cdt), scale, pos, q_chunk,
+                None, cfg.sliding_window, unroll=cfg.unroll_scans,
+                causal_skip=cfg.causal_skip,
+            )
+        else:
+            kpos = jnp.arange(skv)[None, None, :]
+            qpos = (pos + jnp.arange(s))[None, :, None]
+            mask = kpos <= qpos
+            if cfg.sliding_window > 0:
+                mask = mask & (kpos > qpos - cfg.sliding_window)
+            mask = jnp.broadcast_to(mask, (b, s, skv))
+            out = _attend(qh, ck.astype(cdt), cv.astype(cdt), mask, scale)
+    else:
+        qh = q.swapaxes(1, 2).reshape(b, kv, g, s, hd)
+        k_t = k.swapaxes(1, 2)
+        v_t = v.swapaxes(1, 2)
+        if s > q_chunk and s % q_chunk == 0:
+            out = _attend_chunked(
+                qh, k_t, v_t, scale, 0, q_chunk, segment_ids,
+                cfg.sliding_window, unroll=cfg.unroll_scans,
+                causal_skip=cfg.causal_skip,
+            )
+        else:
+            mask = _causal_mask(s, s, 0, cfg.sliding_window)
+            if segment_ids is not None:
+                seg = segment_ids[:, :, None] == segment_ids[:, None, :]
+                mask = mask[None] & seg
+            else:
+                mask = jnp.broadcast_to(mask[None], (b, s, s))
+            out = _attend(qh, k_t, v_t, mask, scale)
+
+    out = out.reshape(b, h, s, hd).swapaxes(1, 2)      # [b, s, h, hd]
+    out = constrain(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum(
+        "bshk,hkd->bsd", out.astype(cdt), params["wo"].astype(cdt)
+    )
+    y = constrain(y, ("batch", "seq", "embed"))
+    return y, new_cache
+
+
+def init_attention_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, kv, max_seq, hd), dtype),
+        "v": jnp.zeros((batch, kv, max_seq, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_cache_axes():
+    return {
+        "k": ("batch", "kv_heads", "seq_kv", None),
+        "v": ("batch", "kv_heads", "seq_kv", None),
+        "pos": (),
+    }
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wi": pv(key, "wi", (d, f), ("fsdp", "mlp"), dt),
+        "wg": pv(key, "wg", (d, f), ("fsdp", "mlp"), dt),
+        "wo": pv(key, "wo", (f, d), ("mlp", "fsdp"), dt, fan_in=f),
+    }
+
+
+def mlp(cfg, params, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    h = jnp.einsum("bsd,df->bsf", xc, params["wi"].astype(cdt))
+    gate = jnp.einsum("bsd,df->bsf", xc, params["wg"].astype(cdt))
+    h = jax.nn.silu(gate) * h
+    h = constrain(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(cdt))
+    return constrain(y, ("batch", "seq", "embed"))

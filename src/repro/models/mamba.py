@@ -1,0 +1,284 @@
+"""Mamba2 block — SSD (state-space duality) formulation [arXiv:2405.21060].
+
+The chunked SSD algorithm maps the selective-state-space recurrence onto
+dense matmuls (MXU-native): within-chunk terms are an attention-like
+masked matmul, cross-chunk terms are a short ``lax.scan`` over chunk
+states.  Decode keeps O(1) state per layer: a (d_conv-1)-deep conv window
+and the [heads, head_dim, d_state] SSM state.
+
+Shapes follow the reference ssd_minimal: x [b,s,h,dh], B/C [b,s,g,ds]
+(groups broadcast over heads), dt [b,s,h], A scalar per head.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import PV, init_rmsnorm, pv, rmsnorm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    # in_proj split into shard-aligned projections [z | xBC | dt] so the
+    # model-axis sharding never cross-cuts a slice boundary.
+    gd = s.n_groups * s.d_state
+    return {
+        "w_z": pv(key, "w_z", (d, d_inner), ("fsdp", "mlp"), dt),
+        "w_x": pv(key, "w_x", (d, d_inner), ("fsdp", "mlp"), dt),
+        "w_b": pv(key, "w_b", (d, gd), ("fsdp", "d_state"), dt),
+        "w_c": pv(key, "w_c", (d, gd), ("fsdp", "d_state"), dt),
+        "w_dt": pv(key, "w_dt", (d, n_heads), ("fsdp", "heads"), dt),
+        "conv_x_w": pv(key, "conv_x_w", (s.d_conv, d_inner), (None, "mlp"),
+                       dt, fan_in=s.d_conv),
+        "conv_b_w": pv(key, "conv_b_w", (s.d_conv, gd), (None, "d_state"),
+                       dt, fan_in=s.d_conv),
+        "conv_c_w": pv(key, "conv_c_w", (s.d_conv, gd), (None, "d_state"),
+                       dt, fan_in=s.d_conv),
+        "conv_x_bias": pv(key, "conv_x_bias", (d_inner,), ("mlp",), dt,
+                          zeros=True),
+        "conv_b_bias": pv(key, "conv_b_bias", (gd,), ("d_state",), dt,
+                          zeros=True),
+        "conv_c_bias": pv(key, "conv_c_bias", (gd,), ("d_state",), dt,
+                          zeros=True),
+        "a_log": PV(jnp.zeros((n_heads,), jnp.float32), ("heads",)),
+        "dt_bias": PV(jnp.zeros((n_heads,), jnp.float32), ("heads",)),
+        "d_skip": PV(jnp.ones((n_heads,), jnp.float32), ("heads",)),
+        "norm": init_rmsnorm(key, d_inner, dt),
+        "w_out": pv(key, "w_out", (d_inner, d), ("mlp", "fsdp"), dt,
+                    fan_in=d_inner),
+    }
+
+
+def _segsum(x):
+    """[..., q] → [..., q, q]: L[i, j] = Σ_{k=j+1..i} x_k for i ≥ j.
+
+    exp(L) is the within-chunk decay matrix of the SSD recurrence."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk, init_state=None):
+    """Chunked SSD scan.
+
+    xh   [b, s, h, dh]     (already multiplied by nothing; dt applied here)
+    dt   [b, s, h]         discretization step (post-softplus)
+    a    [h]               negative decay rate (A = -exp(a_log))
+    bmat [b, s, h, ds]     (groups already broadcast to heads)
+    cmat [b, s, h, ds]
+    Returns y [b, s, h, dh], final_state [b, h, dh, ds].
+    """
+    b, s, h, dh = xh.shape
+    ds = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def r(t):  # [b, s, ...] → [b, nc, chunk, ...]
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc, dtc, bc, cc = r(xh), r(dt), r(bmat), r(cmat)
+    da = dtc * a[None, None, None, :]                    # [b,nc,q,h]
+    da_cum = jnp.cumsum(da, axis=2)                      # within-chunk
+    # 1) diagonal (within-chunk) term
+    l = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))       # [b,nc,h,q,q]
+    scores = jnp.einsum("bcqhs,bcphs->bchqp", cc, bc,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum(
+        "bchqp,bchqp,bcphd->bcqhd",
+        scores, l.astype(jnp.float32),
+        (xc * dtc[..., None]).astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    # 2) chunk states
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # [b,nc,q,h]
+    states = jnp.einsum(
+        "bcqhs,bcqh,bcqhd->bchsd",
+        bc, decay_to_end.astype(jnp.float32) * dtc,
+        xc.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )                                                     # [b,nc,h,ds,dh]
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])            # [b,nc,h]
+    if init_state is None:
+        init = jnp.zeros((b, h, ds, dh), jnp.float32)
+    else:
+        init = init_state.astype(jnp.float32)
+
+    def body(carry, inp):
+        st, dec = inp                                     # [b,h,ds,dh],[b,h]
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    (final, prevs) = jax.lax.scan(
+        body,
+        init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    prev_states = prevs.swapaxes(0, 1)                    # [b,nc,h,ds,dh]
+    # 4) off-diagonal (cross-chunk) contribution
+    state_decay = jnp.exp(da_cum)                         # [b,nc,q,h]
+    y_off = jnp.einsum(
+        "bcqhs,bhcsd,bcqh->bcqhd",
+        cc, prev_states.transpose(0, 2, 1, 3, 4),
+        state_decay.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_diag + y_off).reshape(b, s, h, dh)
+    return y, final.swapaxes(-1, -2)                      # [b,h,dh,ds]
+
+
+def mamba_block(
+    cfg,
+    params,
+    x,                           # [b, s, d]
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    g, ds = s_cfg.n_groups, s_cfg.d_state
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+
+    z = jnp.einsum("bsd,de->bse", xc, params["w_z"].astype(cdt))
+    x_in = jnp.einsum("bsd,de->bse", xc, params["w_x"].astype(cdt))
+    b_in = jnp.einsum("bsd,de->bse", xc, params["w_b"].astype(cdt))
+    c_in = jnp.einsum("bsd,de->bse", xc, params["w_c"].astype(cdt))
+    dt_raw = jnp.einsum("bsd,dh->bsh", xc, params["w_dt"].astype(cdt))
+
+    k = s_cfg.d_conv
+    new_cache = None
+
+    def causal_conv(seq, w, bias, prev):
+        """Depthwise causal conv width k; ``prev`` is the (k-1)-deep decode
+        window or None for train (zero left-pad)."""
+        if prev is None:
+            window = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+        else:
+            window = jnp.concatenate((prev.astype(cdt), seq), axis=1)
+        out = sum(
+            window[:, i : i + s, :] * w[i][None, None, :] for i in range(k)
+        )
+        return jax.nn.silu(out + bias), window[:, -(k - 1):, :]
+
+    prev_x = prev_b = prev_c = None
+    if cache is not None:
+        prev_x = cache["conv_x"]
+        prev_b = cache["conv_b"]
+        prev_c = cache["conv_c"]
+    conv_x, win_x = causal_conv(
+        x_in, params["conv_x_w"].astype(cdt),
+        params["conv_x_bias"].astype(cdt), prev_x,
+    )
+    conv_b, win_b = causal_conv(
+        b_in, params["conv_b_w"].astype(cdt),
+        params["conv_b_bias"].astype(cdt), prev_b,
+    )
+    conv_c, win_c = causal_conv(
+        c_in, params["conv_c_w"].astype(cdt),
+        params["conv_c_bias"].astype(cdt), prev_c,
+    )
+
+    xs = conv_x.reshape(b, s, n_heads, s_cfg.head_dim)
+    bmat = conv_b.reshape(b, s, g, ds)
+    cmat = conv_c.reshape(b, s, g, ds)
+    rep = n_heads // g
+    bmat = jnp.repeat(bmat, rep, axis=2)                  # [b,s,h,ds]
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    a = -jnp.exp(params["a_log"])                         # [h]
+
+    if cache is None:
+        chunk = min(s_cfg.chunk, s)
+        y, _final = _ssd_chunked(
+            xs.astype(jnp.float32), dt, a,
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32), chunk,
+        )
+    elif s > 1 and s % s_cfg.chunk == 0:
+        # chunked prefill-into-state: SSD with the cached initial state
+        init_state = cache["ssm"].astype(jnp.float32).swapaxes(-1, -2)
+        y, final = _ssd_chunked(
+            xs.astype(jnp.float32), dt, a,
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            s_cfg.chunk, init_state=init_state,
+        )
+        new_cache = {
+            "conv_x": win_x.astype(cache["conv_x"].dtype),
+            "conv_b": win_b.astype(cache["conv_b"].dtype),
+            "conv_c": win_c.astype(cache["conv_c"].dtype),
+            "ssm": final.astype(cache["ssm"].dtype),
+        }
+    else:
+        # single-/few-step decode: exact recurrence
+        state = cache["ssm"].astype(jnp.float32)          # [b,h,dh,ds]
+
+        def step(carry, inp):
+            st = carry
+            xt, dtt, bt, ct = inp                         # [b,h,dh],[b,h],...
+            dec = jnp.exp(dtt * a[None, :])               # [b,h]
+            st = st * dec[..., None, None] + jnp.einsum(
+                "bhd,bhs->bhds", xt * dtt[..., None], bt
+            )
+            yt = jnp.einsum("bhds,bhs->bhd", st, ct)
+            return st, yt
+
+        xs_t = xs.astype(jnp.float32).transpose(1, 0, 2, 3)
+        dt_t = dt.transpose(1, 0, 2)
+        b_t = bmat.astype(jnp.float32).transpose(1, 0, 2, 3)
+        c_t = cmat.astype(jnp.float32).transpose(1, 0, 2, 3)
+        state, ys = jax.lax.scan(step, state, (xs_t, dt_t, b_t, c_t))
+        y = ys.transpose(1, 0, 2, 3)                      # [b,s,h,dh]
+        new_cache = {
+            "conv_x": win_x.astype(cache["conv_x"].dtype),
+            "conv_b": win_b.astype(cache["conv_b"].dtype),
+            "conv_c": win_c.astype(cache["conv_c"].dtype),
+            "ssm": state.astype(cache["ssm"].dtype),
+        }
+
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(cdt)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    y = constrain(y, ("batch", "seq", "mlp"))
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(cdt))
+    return constrain(out, ("batch", "seq", "embed")), new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    gd = s.n_groups * s.d_state
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, s.d_conv - 1, gd), dtype),
+        "conv_c": jnp.zeros((batch, s.d_conv - 1, gd), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba_cache_axes():
+    return {
+        "conv_x": ("batch", None, "mlp"),
+        "conv_b": ("batch", None, "d_state"),
+        "conv_c": ("batch", None, "d_state"),
+        "ssm": ("batch", "heads", None, "d_state"),
+    }

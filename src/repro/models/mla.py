@@ -1,0 +1,196 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3, arXiv:2405.04434 §2.1).
+
+Train/prefill run the expanded form (per-head k_nope/v up-projected from
+the compressed latent).  Decode runs the ABSORBED form: the KV cache holds
+only the kv_lora latent + the shared rope key, W_uk is folded into the
+query and W_uv into the output — the whole point of MLA (cache bytes per
+token = kv_lora + rope_dim, independent of head count).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import PV, apply_rope, init_rmsnorm, pv, rmsnorm, _attend
+
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = pv(key, "wq_a", (d, m.q_lora_rank), ("fsdp", None), dt)
+        p["q_norm"] = init_rmsnorm(key, m.q_lora_rank, dt)
+        p["wq_b"] = pv(
+            key, "wq_b", (m.q_lora_rank, h, dn + dr),
+            (None, "heads", "qk_dim"), dt,
+        )
+    else:
+        p["wq"] = pv(key, "wq", (d, h, dn + dr),
+                     ("fsdp", "heads", "qk_dim"), dt)
+    p["wkv_a"] = pv(key, "wkv_a", (d, m.kv_lora_rank), ("fsdp", None), dt)
+    p["kv_norm"] = init_rmsnorm(key, m.kv_lora_rank, dt)
+    p["wk_b"] = pv(key, "wk_b", (m.kv_lora_rank, h, dn),
+                   (None, "heads", "qk_dim"), dt)
+    p["wv_b"] = pv(key, "wv_b", (m.kv_lora_rank, h, dv),
+                   (None, "heads", "head_dim"), dt)
+    p["wk_rope"] = pv(key, "wk_rope", (d, dr), ("fsdp", None), dt)
+    p["wo"] = pv(key, "wo", (h, dv, d), ("heads", "head_dim", "fsdp"), dt,
+                 fan_in=h * dv)
+    return p
+
+
+def _queries(cfg, params, xc, positions, cdt):
+    m = cfg.mla
+    dn, dr = m.nope_head_dim, m.rope_head_dim
+    if m.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", xc, params["wq_a"].astype(cdt))
+        qa = rmsnorm(qa, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, params["wq_b"].astype(cdt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", xc, params["wq"].astype(cdt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(
+        q_rope.swapaxes(1, 2), positions[:, None], cfg.rope_theta
+    ).swapaxes(1, 2)
+    return q_nope, q_rope  # [b, s, h, dn], [b, s, h, dr]
+
+
+def mla_attention(
+    cfg,
+    params,
+    x,                        # [b, s, d]
+    positions,                # [b, s]
+    segment_ids=None,
+    cache: Optional[Dict] = None,
+    q_chunk: int = 256,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    scale = 1.0 / jnp.sqrt(dn + dr).astype(jnp.float32)
+
+    q_nope, q_rope = _queries(cfg, params, xc, positions, cdt)
+
+    c = jnp.einsum("bsd,dr->bsr", xc, params["wkv_a"].astype(cdt))
+    c = rmsnorm(c, params["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", xc, params["wk_rope"].astype(cdt))
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)   # [b, s, dr]
+
+    if cache is not None:
+        # -------- absorbed decode over the latent cache --------
+        cc, ckr, pos = cache["ckv"], cache["k_rope"], cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cc, c.astype(cc.dtype), pos, axis=1
+        )
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            ckr, k_rope.astype(ckr.dtype), pos, axis=1
+        )
+        new_cache = {"ckv": cc, "k_rope": ckr, "pos": pos + s}
+        skv = cc.shape[1]
+        # fold W_uk into q:  [b,s,h,dn] x [r,h,dn] -> [b,s,h,r]
+        q_abs = jnp.einsum(
+            "bshn,rhn->bshr", q_nope, params["wk_b"].astype(cdt)
+        )
+
+        def absorbed(qa, qr, q_off):
+            sq = qa.shape[1]
+            scores = (
+                jnp.einsum("bshr,bpr->bhsp", qa, cc.astype(cdt),
+                           preferred_element_type=jnp.float32)
+                + jnp.einsum("bshr,bpr->bhsp", qr, ckr.astype(cdt),
+                             preferred_element_type=jnp.float32)
+            ) * scale
+            kpos = jnp.arange(skv)[None, None, :]
+            qpos = (q_off + jnp.arange(sq))[None, :, None]
+            mask = jnp.broadcast_to(kpos <= qpos, (b, sq, skv))
+            scores = jnp.where(mask[:, None], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum(
+                "bhsp,bpr->bshr", probs.astype(cdt), cc.astype(cdt)
+            )
+            return jnp.einsum(
+                "bshr,rhv->bshv", ctx, params["wv_b"].astype(cdt)
+            )
+
+        if s > q_chunk and s % q_chunk == 0:
+            # chunked absorbed prefill: scan over query chunks
+            nq = s // q_chunk
+
+            def body(_, i):
+                qs = i * q_chunk
+                qa = jax.lax.dynamic_slice_in_dim(q_abs, qs, q_chunk, 1)
+                qr = jax.lax.dynamic_slice_in_dim(q_rope, qs, q_chunk, 1)
+                return None, absorbed(qa, qr, pos + qs)
+
+            if cfg.unroll_scans:
+                outs = jnp.stack(
+                    [body(None, jnp.int32(i))[1] for i in range(nq)]
+                )
+            else:
+                _, outs = jax.lax.scan(body, None, jnp.arange(nq))
+            out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+        else:
+            out = absorbed(q_abs, q_rope, pos)
+    else:
+        # -------- expanded train/prefill --------
+        k_nope = jnp.einsum("bsr,rhn->bshn", c, params["wk_b"].astype(cdt))
+        v = jnp.einsum("bsr,rhv->bshv", c, params["wv_b"].astype(cdt))
+        k_nope = constrain(k_nope, ("batch", "seq", "heads", None))
+        v = constrain(v, ("batch", "seq", "heads", None))
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))
+        q = jnp.concatenate((q_nope, q_rope), -1)     # [b, s, h, dn+dr]
+        k = jnp.concatenate((k_nope, k_rope_h), -1)
+        qh = q.swapaxes(1, 2)[:, :, None]             # [b, h, 1, s, k]
+        kh = k.swapaxes(1, 2)                         # [b, h, s, k]
+        vh = v.swapaxes(1, 2)
+        from .layers import _attend_chunked, _causal_mask
+
+        if s > q_chunk and s % q_chunk == 0:
+            out = _attend_chunked(qh, kh, vh, scale, 0, q_chunk,
+                                  segment_ids, unroll=cfg.unroll_scans)
+        else:
+            mask = _causal_mask(s, s, 0)
+            if segment_ids is not None:
+                seg = segment_ids[:, :, None] == segment_ids[:, None, :]
+                mask = mask[None] & seg
+            else:
+                mask = jnp.broadcast_to(mask[None], (b, s, s))
+            out = _attend(qh, kh, vh, mask, scale)
+        out = out.reshape(b, h, s, dv).swapaxes(1, 2)  # [b, s, h, dv]
+        new_cache = None
+
+    out = constrain(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshv,hvd->bsd", out.astype(cdt),
+                   params["wo"].astype(cdt))
+    return constrain(y, ("batch", "seq", "embed")), new_cache
+
+
+def init_mla_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_axes():
+    """The latent cache is tiny (kv_lora+rope per token — MLA's point), so
+    it is NOT seq-sharded: sharding seq over `model` would turn every
+    absorbed-attention context contraction into a cross-shard psum
+    (measured ~2.0s of prefill collectives, §Perf iteration 3b);
+    replicated it is 37 MB per 32k row and the contraction is local."""
+    return {
+        "ckv": ("batch", None, None),
+        "k_rope": ("batch", None, None),
+        "pos": (),
+    }

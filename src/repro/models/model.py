@@ -1,0 +1,497 @@
+"""Unified decoder LM over the assigned architecture pool.
+
+Structure: embed (+ optional stub frontend) → prefix layers (unrolled) →
+``lax.scan`` over identical units (stacked params, O(1) HLO in depth,
+optionally rematerialized) → suffix layers → final norm → LM head
+(+ optional DeepSeek-style MTP head).
+
+Entry points:
+  init_model(cfg, key)            → PV param tree (value + logical axes)
+  abstract_params(cfg)            → ShapeDtypeStruct tree + axes tree
+  forward(cfg, params, batch)     → logits (+aux) for train/prefill
+  loss_fn(cfg, params, batch)     → scalar LM loss (+ MTP aux if enabled)
+  init_cache(cfg, batch, max_seq) → decode cache pytree (+ axes tree)
+  decode_step(cfg, params, cache, tokens) → (logits, new cache)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import constrain
+from .layers import (
+    PV,
+    apply_rope,
+    attention,
+    attention_cache_axes,
+    init_attention,
+    init_attention_cache,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    pv,
+    rmsnorm,
+    sinusoidal_pos,
+    split_pv,
+)
+from .mla import (
+    init_mla,
+    init_mla_cache,
+    mla_attention,
+    mla_cache_axes,
+)
+from .mamba import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_block,
+    mamba_cache_axes,
+)
+from .moe import init_moe, moe
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    p: Dict[str, Any] = {"ln_mix": init_rmsnorm(key, cfg.d_model, None)}
+    if spec.mixer == "attn":
+        p["mixer"] = init_attention(key, cfg)
+    elif spec.mixer == "mla":
+        p["mixer"] = init_mla(key, cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = init_mamba(key, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "mlp":
+        p["ln_ffn"] = init_rmsnorm(key, cfg.d_model, None)
+        p["ffn"] = init_mlp(key, cfg)
+    elif spec.ffn == "moe":
+        p["ln_ffn"] = init_rmsnorm(key, cfg.d_model, None)
+        p["ffn"] = init_moe(key, cfg)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+    return p
+
+
+def _prepend_layers_axis(tree):
+    return jax.tree.map(
+        lambda p: PV(p.value, ("layers",) + tuple(p.axes)),
+        tree,
+        is_leaf=lambda x: isinstance(x, PV),
+    )
+
+
+def init_model(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_pre, k_unit, k_suf, k_head, k_mtp, k_fr = jax.random.split(
+        key, 7
+    )
+    params: Dict[str, Any] = {
+        "embed": pv(
+            k_embed, "embed", (cfg.vocab_size, cfg.d_model),
+            ("vocab", "fsdp"), dt, fan_in=cfg.d_model,
+        ),
+        "final_norm": init_rmsnorm(k_head, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = pv(
+            k_head, "lm_head", (cfg.d_model, cfg.vocab_size),
+            ("fsdp", "vocab"), dt,
+        )
+    if cfg.frontend != "none":
+        params["frontend_proj"] = pv(
+            k_fr, "frontend_proj", (cfg.d_model, cfg.d_model),
+            ("fsdp", None), dt,
+        )
+    params["prefix"] = [
+        _init_layer(jax.random.fold_in(k_pre, i), cfg, spec)
+        for i, spec in enumerate(cfg.prefix)
+    ]
+    params["suffix"] = [
+        _init_layer(jax.random.fold_in(k_suf, i), cfg, spec)
+        for i, spec in enumerate(cfg.suffix)
+    ]
+
+    def unit_init(k):
+        return {
+            str(i): _init_layer(jax.random.fold_in(k, i), cfg, spec)
+            for i, spec in enumerate(cfg.unit)
+        }
+
+    unit_keys = jax.random.split(k_unit, cfg.n_units)
+    stacked = jax.vmap(unit_init)(unit_keys)
+    params["units"] = _prepend_layers_axis(stacked)
+
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": pv(k_mtp, "mtp_proj", (2 * cfg.d_model, cfg.d_model),
+                       ("fsdp", None), dt),
+            "norm_h": init_rmsnorm(k_mtp, cfg.d_model, dt),
+            "norm_e": init_rmsnorm(k_mtp, cfg.d_model, dt),
+            "block": _init_layer(k_mtp, cfg, LayerSpec("attn", "mlp"))
+            if cfg.mla is None
+            else _init_layer(k_mtp, cfg, LayerSpec("mla", "mlp")),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct param tree, logical-axes tree) — no allocation."""
+    key = jax.random.PRNGKey(0)
+    pv_tree = jax.eval_shape(partial(init_model, cfg), key)
+    return split_pv(pv_tree)
+
+
+def materialize_params(cfg: ModelConfig, key):
+    params, axes = split_pv(init_model(cfg, key))
+    return params, axes
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+def _apply_layer(
+    cfg, spec: LayerSpec, p, h, positions, segment_ids, cache
+):
+    """One residual block; returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    mix_in = rmsnorm(h, p["ln_mix"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix_out, new_cache = attention(
+            cfg, p["mixer"], mix_in, positions, segment_ids, cache
+        )
+    elif spec.mixer == "mla":
+        mix_out, new_cache = mla_attention(
+            cfg, p["mixer"], mix_in, positions, segment_ids, cache
+        )
+    else:
+        mix_out, new_cache = mamba_block(cfg, p["mixer"], mix_in, cache)
+    h = h + mix_out
+    if spec.ffn != "none":
+        f_in = rmsnorm(h, p["ln_ffn"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            f_out, aux = moe(cfg, p["ffn"], f_in)
+        else:
+            f_out = mlp(cfg, p["ffn"], f_in)
+        h = h + f_out
+    return h, new_cache, aux
+
+
+def _apply_unit(cfg, p_unit, h, positions, segment_ids, cache_unit):
+    """Apply every layer of one unit; cache_unit is a dict keyed like
+    p_unit (or None)."""
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.unit):
+        ci = cache_unit[str(i)] if cache_unit is not None else None
+        h, nc, aux = _apply_layer(
+            cfg, spec, p_unit[str(i)], h, positions, segment_ids, ci
+        )
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[str(i)] = nc
+    return h, (new_caches if cache_unit is not None else None), aux_total
+
+
+def _embed_tokens(cfg, params, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    emb = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.pos_embed == "sinusoidal":
+        pass  # added in forward once positions are known
+    return emb
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jax.Array],
+    cache=None,
+    logits_mode: str = "all",        # "all" | "last"
+) -> Tuple[jax.Array, Dict[str, jax.Array], Any]:
+    """Returns (logits [b, s, vocab], extras, new_cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    segment_ids = batch.get("segment_ids")
+    h = _embed_tokens(cfg, params, tokens)
+
+    front_len = 0
+    if cfg.frontend != "none" and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(h.dtype)
+        fe = jnp.einsum(
+            "bfd,de->bfe", fe,
+            params["frontend_proj"].astype(h.dtype),
+        )
+        h = jnp.concatenate((fe, h), axis=1)
+        front_len = fe.shape[1]
+    if positions is None:
+        start = cache_position(cache) if cache is not None else 0
+        positions = start + jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(positions, (b, h.shape[1]))
+    if cfg.pos_embed == "sinusoidal":
+        h = h + sinusoidal_pos(positions, cfg.d_model).astype(h.dtype)
+    h = constrain(h, ("batch", "seq", "embed"))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"prefix": [], "units": None, "suffix": []} \
+        if cache is not None else None
+
+    for i, spec in enumerate(cfg.prefix):
+        ci = cache["prefix"][i] if cache is not None else None
+        h, nc, aux = _apply_layer(
+            cfg, spec, params["prefix"][i], h, positions, segment_ids, ci
+        )
+        aux_total += aux
+        if cache is not None:
+            new_cache["prefix"].append(nc)
+
+    # scanned units
+    def unit_body(carry, xs):
+        hh, aux_sum = carry
+        p_unit, cache_unit = xs
+        hh, ncache, aux = _apply_unit(
+            cfg, p_unit, hh, positions, segment_ids, cache_unit
+        )
+        return (hh, aux_sum + aux), ncache
+
+    body = unit_body
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(unit_body, policy=policy)
+    cache_units = cache["units"] if cache is not None else None
+    if cfg.unroll_scans:
+        # cost-measurement mode: python loop so cost_analysis sees every
+        # unit (XLA counts while bodies once)
+        new_units_list = []
+        for u in range(cfg.n_units):
+            p_u = jax.tree.map(lambda x: x[u], params["units"])
+            c_u = (
+                jax.tree.map(lambda x: x[u], cache_units)
+                if cache_units is not None else None
+            )
+            (h, aux_total), nc_u = body((h, aux_total), (p_u, c_u))
+            new_units_list.append(nc_u)
+        if cache is not None:
+            new_cache["units"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_units_list
+            )
+    elif cache is None:
+        (h, aux_total), _ = jax.lax.scan(
+            lambda c, p: body(c, (p, None)), (h, aux_total),
+            params["units"],
+        )
+    else:
+        (h, aux_total), new_units = jax.lax.scan(
+            body, (h, aux_total), (params["units"], cache_units)
+        )
+        new_cache["units"] = new_units
+
+    for i, spec in enumerate(cfg.suffix):
+        ci = cache["suffix"][i] if cache is not None else None
+        h, nc, aux = _apply_layer(
+            cfg, spec, params["suffix"][i], h, positions, segment_ids, ci
+        )
+        aux_total += aux
+        if cache is not None:
+            new_cache["suffix"].append(nc)
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if front_len:
+        h = h[:, front_len:, :]
+    if logits_mode == "last":
+        logits = unembed(cfg, params, h[:, -1:, :])
+    else:
+        logits = unembed(cfg, params, h)
+    extras = {"aux_loss": aux_total, "hidden": h}
+    return logits, extras, new_cache
+
+
+def unembed(cfg, params, h):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(cdt)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h.astype(cdt), w,
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ----------------------------------------------------------------------
+# loss
+# ----------------------------------------------------------------------
+def _ce(logits, labels, mask):
+    """Sharding-friendly CE: logsumexp + one-hot dot, no vocab gather
+    (``take_along_axis`` over a model-sharded vocab dim would all-gather
+    the full logits — 12.9 GB/device at smollm train_4k)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    logits, extras, _ = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    loss = _ce(logits, labels, mask)
+    total = loss + 1e-3 * extras["aux_loss"]
+    metrics = {"lm_loss": loss, "aux_loss": extras["aux_loss"]}
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(cfg, params, batch, extras["hidden"])
+        total = total + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    return total, metrics
+
+
+def _mtp_loss(cfg, params, batch, hidden):
+    """DeepSeek-V3 MTP (depth 1): predict t+2 from (h_t, emb(t+1))."""
+    p = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rmsnorm(hidden[:, :-1], p["norm_h"], cfg.norm_eps)
+    e = jnp.take(params["embed"], tokens[:, 1:], axis=0).astype(cdt)
+    e = rmsnorm(e, p["norm_e"], cfg.norm_eps)
+    x = jnp.einsum(
+        "bsd,dk->bsk", jnp.concatenate((h, e), -1).astype(cdt),
+        p["proj"].astype(cdt),
+    )
+    b, s1, _ = x.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(s1, dtype=jnp.int32)[None], (b, s1)
+    )
+    spec = cfg.unit[-1] if cfg.unit[-1].ffn == "mlp" else LayerSpec(
+        cfg.unit[-1].mixer, "mlp"
+    )
+    spec = LayerSpec(spec.mixer, "mlp")
+    x, _, _ = _apply_layer(cfg, spec, p["block"], x, positions, None, None)
+    logits = unembed(cfg, params, x)
+    # target at position i is labels[i+1] = t_{i+2}
+    return _ce(logits[:, :-1], labels[:, 2:], mask[:, 2:])
+
+
+# ----------------------------------------------------------------------
+# decode cache
+# ----------------------------------------------------------------------
+def _layer_cache(cfg, spec: LayerSpec, batch, max_seq, dtype):
+    if spec.mixer == "attn":
+        return init_attention_cache(cfg, batch, max_seq, dtype)
+    if spec.mixer == "mla":
+        return init_mla_cache(cfg, batch, max_seq, dtype)
+    return init_mamba_cache(cfg, batch, dtype)
+
+
+def _layer_cache_axes(spec: LayerSpec):
+    if spec.mixer == "attn":
+        return attention_cache_axes()
+    if spec.mixer == "mla":
+        return mla_cache_axes()
+    return mamba_cache_axes()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    def unit_cache():
+        return {
+            str(i): _layer_cache(cfg, spec, batch, max_seq, dtype)
+            for i, spec in enumerate(cfg.unit)
+        }
+
+    one = unit_cache()
+    units = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_units,) + x.shape), one
+    )
+    return {
+        "prefix": [
+            _layer_cache(cfg, spec, batch, max_seq, dtype)
+            for spec in cfg.prefix
+        ],
+        "units": units,
+        "suffix": [
+            _layer_cache(cfg, spec, batch, max_seq, dtype)
+            for spec in cfg.suffix
+        ],
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    def with_layers(tree):
+        return jax.tree.map(
+            lambda axes: ("layers",) + tuple(axes),
+            tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    return {
+        "prefix": [_layer_cache_axes(s) for s in cfg.prefix],
+        "units": with_layers(
+            {str(i): _layer_cache_axes(s) for i, s in enumerate(cfg.unit)}
+        ),
+        "suffix": [_layer_cache_axes(s) for s in cfg.suffix],
+    }
+
+
+def cache_position(cache) -> jax.Array:
+    """Current sequence position from any attention-family cache entry.
+
+    ``pos`` counters are int32 scalars in unrolled layers and 1-D
+    [n_units] arrays inside the stacked unit cache (every unit holds the
+    same value)."""
+    for v in jax.tree.leaves(cache):
+        if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.integer):
+            if v.ndim == 0:
+                return v
+            if v.ndim == 1:
+                return v[0]
+    return jnp.zeros((), jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One serving step: tokens [b, k] appended at the cache position."""
+    logits, _extras, new_cache = forward(
+        cfg, params, {"tokens": tokens}, cache=cache
+    )
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+# parameter counting (roofline MODEL_FLOPS)
+# ----------------------------------------------------------------------
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    params, _ = abstract_params(cfg)
+    total = 0
+    moe_routed = 0
+
+    def visit(path, leaf):
+        nonlocal total, moe_routed
+        n = int(math.prod(leaf.shape))
+        total += n
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        # routed expert weights are the only ≥3-D ffn leaves
+        # ([E, d, f] or stacked [layers, E, d, f])
+        if "ffn" in keys and any(
+            k in ("wi", "wg", "wo") for k in keys
+        ) and leaf.ndim >= 3:
+            moe_routed += n
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    if active_only and cfg.moe is not None and cfg.moe.n_routed > 0:
+        frac = cfg.moe.top_k / cfg.moe.n_routed
+        total = total - moe_routed + int(moe_routed * frac)
+    return total

@@ -1,0 +1,375 @@
+"""Mixture-of-Experts FFN (DeepSeek-style shared + routed experts).
+
+Two implementations, selected by ``MoEConfig.impl``:
+
+- ``dense``     every expert on every token, gated by router probs.  Exact
+                (no capacity drops); used for reduced/smoke configs and as
+                the correctness oracle for the EP path.
+- ``alltoall``  production expert parallelism under ``shard_map``: experts
+                are sharded over the ``model`` mesh axis; tokens (which are
+                model-replicated activations) are locally sorted by expert,
+                packed into capacity buffers, run through the local experts
+                as dense [E_local, capacity, d] matmuls (MXU-shaped), and
+                un-sorted; partial outputs are psum-reduced over ``model``
+                — the same collective TP already pays for the FFN, so EP
+                adds compute locality at no extra collective class.
+                Expert weights are additionally FSDP-sharded over
+                (pod, data) and all-gathered per layer (ZeRO-3).
+
+Router: softmax → top-k, probs renormalized over the selected experts
+(DeepSeek), plus the standard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain
+from .layers import PV, pv
+
+
+def init_moe(key, cfg):
+    mo = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "router": pv(key, "router", (d, mo.n_routed), (None, "expert"),
+                     jnp.dtype(jnp.float32)),
+        "wi": pv(key, "moe_wi", (mo.n_routed, d, mo.d_expert),
+                 ("expert", "fsdp", "expert_ff"), dt),
+        "wg": pv(key, "moe_wg", (mo.n_routed, d, mo.d_expert),
+                 ("expert", "fsdp", "expert_ff"), dt),
+        "wo": pv(key, "moe_wo", (mo.n_routed, mo.d_expert, d),
+                 ("expert", "expert_ff", "fsdp"), dt, fan_in=mo.d_expert),
+    }
+    if mo.n_shared:
+        p["shared_wi"] = pv(key, "shared_wi", (d, mo.d_expert * mo.n_shared),
+                            ("fsdp", "mlp"), dt)
+        p["shared_wg"] = pv(key, "shared_wg", (d, mo.d_expert * mo.n_shared),
+                            ("fsdp", "mlp"), dt)
+        p["shared_wo"] = pv(key, "shared_wo", (mo.d_expert * mo.n_shared, d),
+                            ("mlp", "fsdp"), dt, fan_in=mo.d_expert)
+    return p
+
+
+def _router(cfg, params, x2d):
+    """x2d: [T, d] → (probs [T, k], ids [T, k], aux_loss scalar)."""
+    mo = cfg.moe
+    logits = jnp.einsum(
+        "td,de->te", x2d.astype(jnp.float32), params["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, mo.top_k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+    )
+    # load-balance aux (Switch): E * Σ_e f_e · P_e
+    pe = jnp.mean(probs, axis=0)
+    fe = jnp.mean(
+        jnp.sum(
+            jax.nn.one_hot(top_i, mo.n_routed, dtype=jnp.float32), axis=1
+        ),
+        axis=0,
+    )
+    aux = mo.n_routed * jnp.sum(pe * fe)
+    return top_p, top_i, aux
+
+
+def _expert_ffn(cdt, wi, wg, wo, x):
+    """x: [E, C, d] dense per-expert SwiGLU."""
+    h = jnp.einsum("ecd,edf->ecf", x, wi.astype(cdt))
+    g = jnp.einsum("ecd,edf->ecf", x, wg.astype(cdt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo.astype(cdt))
+
+
+def _shared_ffn(cfg, params, xc, cdt):
+    h = jnp.einsum("bsd,df->bsf", xc, params["shared_wi"].astype(cdt))
+    g = jnp.einsum("bsd,df->bsf", xc, params["shared_wg"].astype(cdt))
+    h = jax.nn.silu(g) * h
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, params["shared_wo"].astype(cdt))
+
+
+# ----------------------------------------------------------------------
+# dense (exact) implementation
+# ----------------------------------------------------------------------
+def moe_dense(cfg, params, x) -> Tuple[jax.Array, jax.Array]:
+    mo = cfg.moe
+    b, s, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    x2d = xc.reshape(-1, d)
+    top_p, top_i, aux = _router(cfg, params, x2d)
+    gates = jnp.sum(
+        jax.nn.one_hot(top_i, mo.n_routed, dtype=jnp.float32)
+        * top_p[..., None],
+        axis=1,
+    )  # [T, E]
+    h = jnp.einsum("td,edf->tef", x2d, params["wi"].astype(cdt))
+    g = jnp.einsum("td,edf->tef", x2d, params["wg"].astype(cdt))
+    o = jnp.einsum(
+        "tef,efd->ted", jax.nn.silu(g) * h, params["wo"].astype(cdt)
+    )
+    y = jnp.einsum("ted,te->td", o.astype(jnp.float32), gates)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    if mo.n_shared:
+        y = y + _shared_ffn(cfg, params, xc, cdt).astype(x.dtype)
+    return y, aux
+
+
+# ----------------------------------------------------------------------
+# expert-parallel (production) implementation
+# ----------------------------------------------------------------------
+def _capacity(n_tokens: int, cfg) -> int:
+    mo = cfg.moe
+    cap = int(n_tokens * mo.top_k * mo.capacity_factor / mo.n_routed)
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_alltoall(cfg, params, x) -> Tuple[jax.Array, jax.Array]:
+    """EP under shard_map.  Token activations enter model-replicated and
+    (pod, data)-sharded on batch; experts live on the model axis."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.shape:
+        return moe_dense(cfg, params, x)
+    mo = cfg.moe
+    b, s, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ep = mesh.shape["model"]
+    if mo.n_routed % ep != 0:
+        return moe_dense(cfg, params, x)
+    e_local = mo.n_routed // ep
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    batch_axes = dp_axes if (dp_axes and b % _extent(mesh, dp_axes) == 0) \
+        else ()
+
+    tokens_local = (b // max(_extent(mesh, batch_axes), 1)) * s
+    cap = _capacity(tokens_local, cfg)
+
+    def body(x_blk, router_w, wi, wg, wo):
+        # x_blk: [b_l, s, d] model-replicated; w*: [E_l, ...] local experts
+        bl = x_blk.shape[0]
+        x2d = x_blk.astype(cdt).reshape(-1, d)           # [T, d]
+        t = x2d.shape[0]
+        logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router_w)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, mo.top_k)
+        top_p = top_p / jnp.maximum(
+            jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+        )
+        pe = jnp.mean(probs, axis=0)
+        fe = jnp.mean(
+            jnp.sum(jax.nn.one_hot(top_i, mo.n_routed, dtype=jnp.float32),
+                    axis=1),
+            axis=0,
+        )
+        aux = mo.n_routed * jnp.sum(pe * fe)
+
+        my = jax.lax.axis_index("model")
+        lo = my * e_local
+        flat_e = top_i.reshape(-1)                       # [T*k]
+        flat_w = top_p.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t), mo.top_k)
+        local = (flat_e >= lo) & (flat_e < lo + e_local)
+        leid = jnp.where(local, flat_e - lo, e_local)    # dustbin = E_l
+        order = jnp.argsort(leid, stable=True)
+        s_eid = leid[order]
+        s_tok = flat_t[order]
+        s_w = flat_w[order]
+        # position within expert group
+        starts = jnp.searchsorted(s_eid, jnp.arange(e_local + 1))
+        pos_in_e = jnp.arange(s_eid.shape[0]) - starts[
+            jnp.clip(s_eid, 0, e_local)
+        ]
+        keep = (s_eid < e_local) & (pos_in_e < cap)
+        slot = jnp.where(keep, s_eid * cap + pos_in_e, e_local * cap)
+        buf = jnp.zeros((e_local * cap + 1, d), cdt)
+        buf = buf.at[slot].set(
+            jnp.where(keep[:, None], x2d[s_tok], 0.0).astype(cdt)
+        )
+        eb = buf[: e_local * cap].reshape(e_local, cap, d)
+        out = _expert_ffn(cdt, wi, wg, wo, eb)           # [E_l, cap, d]
+        out_flat = out.reshape(e_local * cap, d)
+        gathered = jnp.where(
+            keep[:, None], out_flat[jnp.clip(slot, 0, e_local * cap - 1)],
+            0.0,
+        )
+        y2d = jnp.zeros((t, d), jnp.float32)
+        y2d = y2d.at[s_tok].add(
+            gathered.astype(jnp.float32) * s_w[:, None]
+        )
+        if cfg.moe_psum_bf16:   # §Perf knob: halve the EP psum payload
+            y2d = jax.lax.psum(y2d.astype(jnp.bfloat16), "model")
+            y2d = y2d.astype(jnp.float32)
+        else:
+            y2d = jax.lax.psum(y2d, "model")
+        aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return y2d.reshape(bl, s, d).astype(x.dtype), aux
+
+    bspec = P(batch_axes if batch_axes else None, None, None)
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            bspec,
+            P(None, None),        # router: replicated (routes ALL experts)
+            P("model", None, None),
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"])
+
+    if mo.n_shared:
+        y = y + _shared_ffn(
+            cfg, params, x.astype(cdt), cdt
+        ).astype(x.dtype)
+    return y, aux
+
+
+def _extent(mesh, axes) -> int:
+    e = 1
+    for a in axes:
+        e *= mesh.shape[a]
+    return e
+
+
+# ----------------------------------------------------------------------
+# serving implementation (§Perf): experts TP'd over (model × data)
+# ----------------------------------------------------------------------
+def moe_serve_tp(cfg, params, x) -> Tuple[jax.Array, jax.Array]:
+    """Serving MoE: expert dim over ``model``, expert FFN hidden over
+    ``data`` — no FSDP weight gathers at all.  Tokens (tiny at decode) are
+    all-gathered over ``data``; each device computes its expert-slice on
+    all tokens and the partial outputs psum over both axes (ff-slices sum
+    over data, expert contributions over model)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.shape:
+        return moe_dense(cfg, params, x)
+    mo = cfg.moe
+    b, s, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ep = mesh.shape["model"]
+    ff_axes = tuple(a for a in ("data",) if a in mesh.shape)
+    if mo.n_routed % ep != 0 or (
+        ff_axes and mo.d_expert % _extent(mesh, ff_axes) != 0
+    ):
+        return moe_alltoall(cfg, params, x)
+    e_local = mo.n_routed // ep
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    batch_axes = dp_axes if (dp_axes and b % _extent(mesh, dp_axes) == 0) \
+        else ()
+    tokens_global = b * s
+    cap = max(
+        8, -(-int(tokens_global * mo.top_k * mo.capacity_factor
+                  / mo.n_routed) // 8) * 8,
+    )
+
+    def body(x_blk, router_w, wi, wg, wo):
+        bl = x_blk.shape[0]
+        x_all = x_blk
+        for a in batch_axes:
+            x_all = jax.lax.all_gather(x_all, a, axis=0, tiled=True)
+        x2d = x_all.astype(cdt).reshape(-1, d)             # [T_global, d]
+        t = x2d.shape[0]
+        logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router_w)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, mo.top_k)
+        top_p = top_p / jnp.maximum(
+            jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+        )
+        aux = mo.n_routed * jnp.sum(
+            jnp.mean(probs, axis=0)
+            * jnp.mean(jnp.sum(jax.nn.one_hot(
+                top_i, mo.n_routed, dtype=jnp.float32), axis=1), axis=0)
+        )
+
+        my = jax.lax.axis_index("model")
+        lo = my * e_local
+        flat_e = top_i.reshape(-1)
+        flat_w = top_p.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t), mo.top_k)
+        local = (flat_e >= lo) & (flat_e < lo + e_local)
+        leid = jnp.where(local, flat_e - lo, e_local)
+        order = jnp.argsort(leid, stable=True)
+        s_eid, s_tok, s_w = leid[order], flat_t[order], flat_w[order]
+        starts = jnp.searchsorted(s_eid, jnp.arange(e_local + 1))
+        pos_in_e = jnp.arange(s_eid.shape[0]) - starts[
+            jnp.clip(s_eid, 0, e_local)
+        ]
+        keep = (s_eid < e_local) & (pos_in_e < cap)
+        slot = jnp.where(keep, s_eid * cap + pos_in_e, e_local * cap)
+        buf = jnp.zeros((e_local * cap + 1, d), cdt)
+        buf = buf.at[slot].set(
+            jnp.where(keep[:, None], x2d[s_tok], 0.0).astype(cdt)
+        )
+        eb = buf[: e_local * cap].reshape(e_local, cap, d)
+        out = _expert_ffn(cdt, wi, wg, wo, eb)   # ff-slice partial sums
+        out_flat = out.reshape(e_local * cap, d)
+        gathered = jnp.where(
+            keep[:, None],
+            out_flat[jnp.clip(slot, 0, e_local * cap - 1)], 0.0,
+        )
+        y2d = jnp.zeros((t, d), jnp.float32)
+        y2d = y2d.at[s_tok].add(
+            gathered.astype(jnp.float32) * s_w[:, None]
+        )
+        psum_axes = ("model",) + ff_axes
+        if cfg.moe_psum_bf16:
+            y2d = jax.lax.psum(
+                y2d.astype(jnp.bfloat16), psum_axes
+            ).astype(jnp.float32)
+        else:
+            y2d = jax.lax.psum(y2d, psum_axes)
+        aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+            # slice this shard's batch rows back out
+            di = jax.lax.axis_index(batch_axes[-1])
+            if len(batch_axes) == 2:
+                di = di + jax.lax.axis_index(batch_axes[0]) * \
+                    mesh.shape[batch_axes[-1]]
+            y3d = y2d.reshape(-1, s, d)
+            y_loc = jax.lax.dynamic_slice_in_dim(
+                y3d, di * bl, bl, axis=0
+            )
+        else:
+            y_loc = y2d.reshape(bl, s, d)
+        return y_loc.astype(x.dtype), aux
+
+    ff_spec = ff_axes[0] if ff_axes else None
+    bspec = P(batch_axes if batch_axes else None, None, None)
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            bspec,
+            P(None, None),
+            P("model", None, ff_spec),
+            P("model", None, ff_spec),
+            P("model", ff_spec, None),
+        ),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"])
+
+    if mo.n_shared:
+        cdt = jnp.dtype(cfg.compute_dtype)
+        y = y + _shared_ffn(
+            cfg, params, x.astype(cdt), cdt
+        ).astype(x.dtype)
+    return y, aux
+
+
+def moe(cfg, params, x) -> Tuple[jax.Array, jax.Array]:
+    if cfg.serving and cfg.moe.impl != "dense" and cfg.serve_expert_ff_tp:
+        return moe_serve_tp(cfg, params, x)
+    if cfg.moe.impl == "alltoall":
+        return moe_alltoall(cfg, params, x)
+    return moe_dense(cfg, params, x)

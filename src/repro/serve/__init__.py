@@ -1,0 +1,4 @@
+"""Serving substrate: prefill/decode steps + trie-backed speculation."""
+from .engine import make_decode_step, make_prefill_step
+
+__all__ = ["make_decode_step", "make_prefill_step"]

@@ -1,0 +1,48 @@
+"""Serving steps: prefill (populate cache, last-token logits) and decode
+(one token per step against the KV/SSM cache).
+
+Both are pure functions of (params, cache, tokens) so the launcher can jit
+them with donated caches — the cache buffer is updated in place on device.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.model import decode_step
+
+
+def make_prefill_step(cfg):
+    def prefill(params, cache, batch):
+        logits, _extras, new_cache = forward(
+            cfg, params, batch, cache=cache, logits_mode="last"
+        )
+        return logits, new_cache
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens)
+
+    return decode
+
+
+def greedy_generate(cfg, params, cache, prompt_tokens, n_steps: int):
+    """Host loop: prefill the prompt then greedy-decode ``n_steps``."""
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    logits, cache = prefill(params, cache, {"tokens": prompt_tokens})
+    out = []
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(n_steps):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(
+            jnp.int32
+        )
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,7 @@
+"""Training substrate: optimizers, train step, checkpointing, elasticity."""
+from .optimizer import AdamW, Adafactor, OptConfig, pick_optimizer
+from .train_step import make_train_step
+
+__all__ = [
+    "AdamW", "Adafactor", "OptConfig", "pick_optimizer", "make_train_step",
+]

@@ -1,0 +1,145 @@
+"""Fault-tolerant checkpointing: versioned, atomic, hash-verified, async.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json(sha256, treedef, step)
+Writes go to ``step_<N>.tmp`` and are renamed only after fsync — a crash
+mid-save can never corrupt the latest checkpoint.  ``restore_latest``
+verifies content hashes and falls back to the previous step on corruption.
+A background thread makes ``save_async`` non-blocking for the train loop.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def _tree_sig(treedef) -> str:
+    return hashlib.sha256(str(treedef).encode()).hexdigest()[:16]
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None):
+    """Atomic checkpoint write; returns the final directory path."""
+    leaves, treedef = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, *leaves)
+    with open(arrays_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "sha256": digest,
+        "treedef": _tree_sig(treedef),
+        "extra": extra or {},
+    }
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """One background writer thread; ``wait()`` joins outstanding saves."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree, extra=None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = list_steps(self.ckpt_dir)
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                ignore_errors=True,
+            )
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def _load_step(ckpt_dir: str, step: int, tree_like):
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays_path = os.path.join(path, "arrays.npz")
+    with open(arrays_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checksum mismatch at step {step}")
+    leaves_like, treedef = jax.tree.flatten(tree_like)
+    if _tree_sig(treedef) != manifest["treedef"]:
+        raise IOError(f"treedef mismatch at step {step}")
+    with np.load(arrays_path) as data:
+        leaves = [data[f"arr_{i}"] for i in range(manifest["n_leaves"])]
+    restored = [
+        np.asarray(l).astype(like.dtype).reshape(like.shape)
+        for l, like in zip(leaves, leaves_like)
+    ]
+    return treedef.unflatten(restored), manifest
+
+
+def restore_latest(ckpt_dir: str, tree_like):
+    """Newest valid checkpoint, falling back past corrupted ones.
+
+    Returns (tree, manifest) or (None, None) when nothing restorable."""
+    for step in reversed(list_steps(ckpt_dir)):
+        try:
+            return _load_step(ckpt_dir, step, tree_like)
+        except Exception:
+            continue
+    return None, None

@@ -1,0 +1,66 @@
+"""Straggler detection and elastic re-meshing (large-scale runnability).
+
+- ``StragglerDetector``: per-step wall-time EWMA + deviation score; flags
+  sustained slowdowns (the signal a real fleet uses to evict a slow host).
+- ``remesh_state``: reshard a (params, opt_state) pytree onto a new mesh —
+  the elastic-scaling primitive used after shrinking/growing the device
+  pool.  Works from host-replicated arrays (restored checkpoints), so the
+  recovery path is checkpoint → remesh → resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import logical_to_spec
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    alpha: float = 0.1            # EWMA weight
+    threshold: float = 2.0        # flag when step > threshold × EWMA
+    patience: int = 3             # consecutive slow steps before firing
+    _ewma: Optional[float] = None
+    _var: float = 0.0
+    _slow_streak: int = 0
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True when a sustained straggle is detected."""
+        if self._ewma is None:
+            self._ewma = seconds
+            return False
+        slow = seconds > self.threshold * self._ewma
+        if slow:
+            self._slow_streak += 1
+        else:
+            self._slow_streak = 0
+            self._ewma = (
+                (1 - self.alpha) * self._ewma + self.alpha * seconds
+            )
+        if self._slow_streak >= self.patience:
+            self.events.append(
+                {"step": step, "seconds": seconds, "ewma": self._ewma}
+            )
+            self._slow_streak = 0
+            return True
+        return False
+
+
+def remesh_state(tree, axes_tree, new_mesh: Mesh):
+    """Re-place every leaf onto ``new_mesh`` with its logical sharding.
+
+    The leaves may live on any (old) mesh or on host; ``jax.device_put``
+    performs the resharding transfer."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x
+    )
+
+    def place(x, axes):
+        spec = logical_to_spec(tuple(axes), new_mesh, x.shape)
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(place, tree, axes_tree, is_leaf=None)

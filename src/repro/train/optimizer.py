@@ -1,0 +1,182 @@
+"""Optimizers in pure JAX: AdamW and factored Adafactor.
+
+``pick_optimizer(cfg)`` selects Adafactor for ≥100B-parameter models so the
+optimizer state stays O(sum-of-dims) instead of O(params) — the standard
+large-model memory recipe (DESIGN.md §6).  Both optimizers expose
+``init(params) → state`` and ``update(grads, state, params, step) →
+(new_params, new_state)`` and ``state_axes(param_axes)`` so the state
+shards exactly like its parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # "adamw" | "adafactor"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(ocfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(ocfg.warmup_steps, 1))
+    return ocfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ----------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------
+class AdamW:
+    def __init__(self, ocfg: OptConfig):
+        self.cfg = ocfg
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def state_axes(self, param_axes):
+        return {"m": param_axes, "v": param_axes}
+
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, c.clip_norm)
+        lr = lr_schedule(c, step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - c.b1 ** t
+        bc2 = 1.0 - c.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = c.b1 * m + (1 - c.b1) * g
+            v = c.b2 * v + (1 - c.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            step_ = mh / (jnp.sqrt(vh) + c.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step_ = step_ + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}, gnorm
+
+
+# ----------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ----------------------------------------------------------------------
+class Adafactor:
+    def __init__(self, ocfg: OptConfig):
+        self.cfg = ocfg
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params):
+        def st(p):
+            if self._factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(st, params)}
+
+    def state_axes(self, param_axes):
+        def ax(axes):
+            axes = tuple(axes)
+            if len(axes) >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        )
+        return {"f": jax.tree.map(ax, param_axes, is_leaf=is_axes)}
+
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, c.clip_norm)
+        lr = lr_schedule(c, step)
+        beta = 1.0 - (step + 1.0) ** -0.8   # t^-0.8 decay (Adafactor paper)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            if self._factored(p):
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), 1e-30
+                    ) + c.eps
+                )
+                cfac = jax.lax.rsqrt(vc + c.eps)
+                step_ = g * rfac[..., None] * cfac[..., None, :]
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                step_ = g * jax.lax.rsqrt(v + c.eps)
+                new_st = {"v": v}
+            # RMS-clip the update (Adafactor d=1.0)
+            rms = jnp.sqrt(jnp.mean(step_ * step_) + 1e-30)
+            step_ = step_ / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                step_ = step_ + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), new_st
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = {"f": tdef.unflatten([o[1] for o in outs])}
+        return new_params, new_state, gnorm
+
+
+def pick_optimizer(model_cfg, ocfg: Optional[OptConfig] = None):
+    """Adafactor at ≥100B params, AdamW below (overridable)."""
+    if ocfg is None:
+        ocfg = OptConfig()
+    if ocfg.name == "adafactor":
+        return Adafactor(ocfg)
+    if ocfg.name == "adamw":
+        from repro.models import count_params_analytic
+
+        if count_params_analytic(model_cfg) >= 100e9:
+            return Adafactor(dataclasses.replace(ocfg, name="adafactor"))
+        return AdamW(ocfg)
+    raise ValueError(ocfg.name)

@@ -1,0 +1,75 @@
+"""Train-step factory: grads (+optional microbatch accumulation) →
+clip → optimizer → new params.
+
+Microbatch accumulation runs as a ``lax.scan`` over the leading split of
+the batch, which both bounds activation memory and — because XLA overlaps
+the per-microbatch gradient reduce-scatter with the next microbatch's
+compute — is the standard collective/compute overlap trick at scale.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+
+
+def make_train_step(
+    cfg,
+    optimizer,
+    microbatches: int = 1,
+    grad_transform: Optional[Callable] = None,
+):
+    """Returns step(params, opt_state, batch, step_idx) → (params,
+    opt_state, metrics).  ``grad_transform`` hooks gradient compression."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, step_idx):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, one):
+                loss, metrics, grads = grads_of(params, one)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, grads)
+                return (acc_g, acc_l + loss), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), metrics_stack = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(
+                lambda m: jnp.mean(m, axis=0), metrics_stack
+            )
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        params, opt_state, gnorm = optimizer.update(
+            grads, opt_state, params, step_idx
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,234 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Every Pallas kernel is swept over shapes (incl. non-tile-multiple sizes,
+which exercise the padding paths) and dtypes, and asserted allclose against
+``ref.py``.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import (
+    rule_search_ref,
+    support_count_ref,
+    trie_reduce_ref,
+)
+from repro.kernels.support_count import support_count_pallas
+from repro.kernels.rule_search import rule_search_pallas
+from repro.kernels.trie_reduce import trie_reduce_pallas
+from repro.kernels.ops import (
+    dense_from_bitmaps,
+    members_from_candidates,
+    rule_search,
+    support_count,
+)
+
+
+# ----------------------------------------------------------------------
+# support_count
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "t,i,c", [(8, 5, 3), (100, 40, 17), (256, 128, 128), (301, 169, 200),
+              (1024, 333, 65)]
+)
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.bfloat16, jnp.float32])
+def test_support_count_sweep(t, i, c, dtype):
+    rng = np.random.RandomState(t * 1000 + i + c)
+    tx = (rng.rand(t, i) < 0.2).astype(np.float32)
+    member = np.zeros((c, i), np.float32)
+    lengths = np.zeros((c,), np.int32)
+    for row in range(c):
+        k = rng.randint(1, min(5, i) + 1)
+        items = rng.choice(i, size=k, replace=False)
+        member[row, items] = 1.0
+        lengths[row] = k
+
+    out = support_count_pallas(
+        jnp.asarray(tx, dtype), jnp.asarray(member, dtype),
+        jnp.asarray(lengths), interpret=True,
+    )
+    ref = support_count_ref(
+        jnp.asarray(tx), jnp.asarray(member), jnp.asarray(lengths)
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # and against brute-force truth
+    truth = np.array(
+        [
+            int(((tx @ member[j]) == lengths[j]).sum())
+            for j in range(c)
+        ],
+        np.int32,
+    )
+    np.testing.assert_array_equal(np.asarray(out), truth)
+
+
+def test_support_count_padding_rows_ignored():
+    tx = jnp.ones((4, 3), jnp.float32)
+    member = jnp.zeros((2, 3), jnp.float32)
+    lengths = jnp.array([-1, -1], jnp.int32)  # padding sentinel rows
+    out = support_count_pallas(tx, member, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), [0, 0])
+
+
+def test_members_from_candidates():
+    cands = jnp.array([[0, 2, -1], [1, -1, -1]], jnp.int32)
+    m = members_from_candidates(cands, 4)
+    np.testing.assert_array_equal(
+        np.asarray(m), [[1, 0, 1, 0], [0, 1, 0, 0]]
+    )
+
+
+def test_dense_from_bitmaps_roundtrip():
+    from repro.arm.transactions import TransactionDB
+
+    rng = np.random.RandomState(7)
+    txs = [
+        set(rng.choice(20, size=rng.randint(1, 8), replace=False))
+        for _ in range(67)
+    ]
+    db = TransactionDB(txs, n_items=20)
+    dense = dense_from_bitmaps(db.item_bitmaps)
+    assert dense.shape[1] == 20
+    for tid, t in enumerate(txs):
+        row = set(np.nonzero(dense[tid])[0].tolist())
+        assert row == set(t)
+
+
+def test_support_count_op_equals_db():
+    from repro.arm.datasets import paper_example_db
+
+    db = paper_example_db()
+    cands, lens = db.candidate_matrix(
+        [(5, 2), (5, 2, 0), (1,), (0, 12)], 3
+    )
+    out = support_count(cands, lens, item_bitmaps=db.item_bitmaps)
+    truth = [db.itemset_count(tuple(c[c >= 0])) for c in np.asarray(cands)]
+    np.testing.assert_array_equal(np.asarray(out), truth)
+
+
+# ----------------------------------------------------------------------
+# rule_search
+# ----------------------------------------------------------------------
+def _random_trie_arrays(rng, n_nodes, n_items, max_children=4):
+    """Random well-formed trie edge arrays + node metric columns."""
+    parent = np.full((n_nodes,), -1, np.int32)
+    item = np.full((n_nodes,), -1, np.int32)
+    depth = np.zeros((n_nodes,), np.int32)
+    edges = []
+    used = {0: set()}
+    for nid in range(1, n_nodes):
+        p = rng.randint(0, nid)
+        tries = 0
+        while len(used.setdefault(p, set())) >= min(max_children, n_items):
+            p = rng.randint(0, nid)
+            tries += 1
+            if tries > 50:
+                break
+        avail = [x for x in range(n_items) if x not in used[p]]
+        if not avail:
+            continue
+        it = int(rng.choice(avail))
+        used[p].add(it)
+        used[nid] = set()
+        parent[nid] = p
+        item[nid] = it
+        depth[nid] = depth[p] + 1
+        edges.append((p, it, nid))
+    edges.sort()
+    e = np.array(edges, np.int32).reshape(-1, 3)
+    conf = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
+    sup = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
+    lift = rng.rand(n_nodes).astype(np.float32) * 2
+    return {
+        "edge_parent": e[:, 0],
+        "edge_item": e[:, 1],
+        "edge_child": e[:, 2],
+        "edge_conf": conf[e[:, 2]],
+        "edge_sup": sup[e[:, 2]],
+        "edge_lift": lift[e[:, 2]],
+        "node_parent": parent,
+        "node_item": item,
+        "node_depth": depth,
+    }
+
+
+@pytest.mark.parametrize(
+    "n_nodes,n_items,q,width",
+    [(5, 4, 3, 2), (50, 12, 40, 5), (200, 30, 129, 7), (512, 64, 256, 4)],
+)
+def test_rule_search_sweep(n_nodes, n_items, q, width):
+    rng = np.random.RandomState(n_nodes + q)
+    arrs = _random_trie_arrays(rng, n_nodes, n_items)
+    queries = rng.randint(-1, n_items, size=(q, width)).astype(np.int32)
+    ant_len = rng.randint(0, width + 1, size=(q,)).astype(np.int32)
+
+    args = [
+        jnp.asarray(arrs[k])
+        for k in (
+            "edge_parent", "edge_item", "edge_child",
+            "edge_conf", "edge_sup", "edge_lift",
+        )
+    ]
+    out = rule_search_pallas(
+        *args, jnp.asarray(queries), jnp.asarray(ant_len), interpret=True
+    )
+    ref = rule_search_ref(*args, jnp.asarray(queries), jnp.asarray(ant_len))
+    np.testing.assert_array_equal(
+        np.asarray(out["found"]), np.asarray(ref["found"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out["node"]), np.asarray(ref["node"])
+    )
+    for k in ("support", "confidence", "node_lift"):
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]), rtol=1e-6
+        )
+
+
+def test_rule_search_walks_real_trie():
+    """End-to-end: kernel answers == pointer trie answers on real data."""
+    from repro.arm.datasets import paper_example_db
+    from repro.core.builder import build_flat_table, build_trie_of_rules
+    from repro.core.array_trie import FrozenTrie
+
+    db = paper_example_db()
+    res = build_trie_of_rules(db, 0.3, miner="fpgrowth")
+    _, rules, _ = build_flat_table(db, res.itemsets)
+    fz = FrozenTrie.freeze(res.trie)
+    q, al = fz.canonicalize_queries(
+        [r.antecedent for r in rules], [r.consequent for r in rules]
+    )
+    out = rule_search(fz, q, al)
+    for i, r in enumerate(rules):
+        assert bool(out["found"][i])
+        np.testing.assert_allclose(
+            float(out["support"][i]), r.metrics.support, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            float(out["confidence"][i]), r.metrics.confidence, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            float(out["lift"][i]), r.metrics.lift, rtol=1e-4
+        )
+
+
+# ----------------------------------------------------------------------
+# trie_reduce
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 7, 100, 8192, 8193, 20000])
+def test_trie_reduce_sweep(n):
+    rng = np.random.RandomState(n)
+    sup = rng.rand(n).astype(np.float32)
+    conf = rng.rand(n).astype(np.float32)
+    depth = rng.randint(0, 5, size=(n,)).astype(np.int32)
+    out = trie_reduce_pallas(
+        jnp.asarray(sup), jnp.asarray(conf), jnp.asarray(depth),
+        interpret=True,
+    )
+    ref = trie_reduce_ref(
+        jnp.asarray(sup), jnp.asarray(conf), jnp.asarray(depth)
+    )
+    for a, b in zip(out, ref):
+        if np.isfinite(float(b)):
+            np.testing.assert_allclose(float(a), float(b), rtol=1e-5)

@@ -1,0 +1,134 @@
+"""Additional property tests: metric inequalities, query order-invariance,
+ordered-ngram trie identities (paper Eq. 1 on the serving side)."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.arm.rulegen import prefix_split_rules
+from repro.arm.transactions import TransactionDB
+from repro.core.array_trie import FrozenTrie, batched_rule_search
+from repro.core.builder import build_trie_of_rules
+from repro.data.corpus_rules import NgramTrie
+
+
+@st.composite
+def dbs(draw):
+    n_items = draw(st.integers(4, 12))
+    n_tx = draw(st.integers(5, 30))
+    txs = [
+        draw(st.sets(st.integers(0, n_items - 1), min_size=1, max_size=5))
+        for _ in range(n_tx)
+    ]
+    return TransactionDB(txs, n_items=n_items)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dbs())
+def test_metric_inequalities(db):
+    """0 ≤ conf ≤ 1; sup(rule) ≤ min(sup(A), sup(C)); lift·sup(C) = conf."""
+    res = build_trie_of_rules(db, 0.2, miner="fpgrowth")
+    for r in prefix_split_rules(res.itemsets, db):
+        m = r.metrics
+        assert -1e-12 <= m.confidence <= 1 + 1e-12
+        assert m.support <= db.support(r.antecedent) + 1e-12
+        assert m.support <= db.support(r.consequent) + 1e-12
+        sup_c = db.support(r.consequent)
+        if sup_c > 0:
+            assert math.isclose(
+                m.lift * sup_c, m.confidence, rel_tol=1e-9, abs_tol=1e-12
+            )
+
+
+@settings(max_examples=15, deadline=None)
+@given(dbs(), st.randoms(use_true_random=False))
+def test_query_order_invariance(db, rnd):
+    """Item order inside A and C must not affect the answer (the trie
+    canonicalizes by global frequency)."""
+    res = build_trie_of_rules(db, 0.2, miner="fpgrowth")
+    rules = prefix_split_rules(res.itemsets, db)
+    if not rules:
+        return
+    fz = FrozenTrie.freeze(res.trie)
+    dt = fz.device_arrays()
+    ants, cons = [], []
+    for r in rules[:20]:
+        a, c = list(r.antecedent), list(r.consequent)
+        rnd.shuffle(a)
+        rnd.shuffle(c)
+        ants.append(a)
+        cons.append(c)
+    q, al = fz.canonicalize_queries(ants, cons)
+    out = batched_rule_search(dt, q, al)
+    for i, r in enumerate(rules[:20]):
+        assert bool(out["found"][i])
+        np.testing.assert_allclose(
+            float(out["confidence"][i]), r.metrics.confidence, rtol=1e-5
+        )
+        m = res.trie.search_rule(ants[i], cons[i])
+        assert m is not None
+        assert math.isclose(
+            m.confidence, r.metrics.confidence, rel_tol=1e-9
+        )
+
+
+@st.composite
+def token_rows(draw):
+    vocab = draw(st.integers(3, 8))
+    n = draw(st.integers(10, 60))
+    return [draw(st.lists(st.integers(0, vocab - 1),
+                          min_size=n, max_size=n))]
+
+
+@settings(max_examples=25, deadline=None)
+@given(token_rows())
+def test_ngram_trie_identities(rows):
+    """Ordered-trie node stats equal raw n-gram counts, and compound
+    confidence of any path equals count(path)/count(first item) — the
+    paper's Eq. 1 specialized to ordered sequences."""
+    from collections import Counter
+
+    n = 3
+    t = NgramTrie(n=n).fit(rows)
+    row = rows[0]
+    prefix_counts = Counter()
+    total = max(0, len(row) - n + 1)
+    for i in range(len(row) - n + 1):
+        g = tuple(row[i : i + n])
+        for k in range(1, n + 1):
+            prefix_counts[g[:k]] += 1
+    for path, node in t.trie.all_paths():
+        assert math.isclose(
+            node.support, prefix_counts[path] / max(total, 1),
+            rel_tol=1e-9,
+        )
+        parent = prefix_counts[path[:-1]] if len(path) > 1 else total
+        assert math.isclose(
+            node.confidence, prefix_counts[path] / max(parent, 1),
+            rel_tol=1e-9,
+        )
+        # Eq. 1: product of confidences along the path telescopes
+        prod = 1.0
+        for k in range(1, len(path) + 1):
+            nk = t.trie.find_path(path[:k])
+            prod_step = nk.confidence
+            prod *= prod_step
+        assert math.isclose(
+            prod, prefix_counts[path] / max(total, 1), rel_tol=1e-9
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(token_rows())
+def test_ngram_propose_is_greedy_argmax(rows):
+    t = NgramTrie(n=3).fit(rows)
+    row = rows[0]
+    ctx = tuple(row[:2])
+    draft, conf = t.propose(ctx, max_tokens=1, min_confidence=0.0)
+    node = t.trie.find_path(ctx)
+    if node is None or not node.children:
+        assert draft == []
+        return
+    best = max(node.children.values(), key=lambda c: c.confidence)
+    assert draft == [best.item]
+    assert math.isclose(conf, best.confidence, rel_tol=1e-9)

@@ -1,0 +1,137 @@
+"""End-to-end system tests: the paper pipeline + the LM framework stack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arm.datasets import grocery_db, paper_example_db
+from repro.core import (
+    FrozenTrie,
+    batched_rule_search,
+    build_flat_table,
+    build_trie_of_rules,
+)
+from repro.data.corpus_rules import NgramTrie, mine_corpus_rules
+from repro.data.pipeline import PipelineConfig, TokenPipeline, synthetic_corpus
+
+
+class TestPaperPipelineEndToEnd:
+    def test_grocery_three_representations_agree(self):
+        db = grocery_db()
+        res = build_trie_of_rules(db, 0.008, miner="fpgrowth")
+        table, rules, _ = build_flat_table(db, res.itemsets)
+        fz = FrozenTrie.freeze(res.trie)
+        dt = fz.device_arrays()
+        q, al = fz.canonicalize_queries(
+            [r.antecedent for r in rules], [r.consequent for r in rules]
+        )
+        out = batched_rule_search(dt, q, al)
+        assert bool(np.asarray(out["found"]).all())
+        np.testing.assert_allclose(
+            np.asarray(out["support"]),
+            [r.metrics.support for r in rules], rtol=1e-5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["confidence"]),
+            [r.metrics.confidence for r in rules], rtol=1e-5,
+        )
+
+    def test_fpmax_vs_fpgrowth_tries_are_consistent(self):
+        db = paper_example_db()
+        full = build_trie_of_rules(db, 0.3, miner="fpgrowth")
+        maxi = build_trie_of_rules(db, 0.3, miner="fpmax")
+        # every fpmax path exists in the fpgrowth trie w/ equal metrics
+        for path, node in maxi.trie.all_paths():
+            other = full.trie.find_path(path)
+            assert other is not None
+            assert other.support == pytest.approx(node.support)
+            assert other.confidence == pytest.approx(node.confidence)
+
+    def test_miner_kernel_parity(self):
+        """Apriori counting through the Pallas kernel == pure numpy."""
+        from repro.arm.apriori import apriori
+
+        db = paper_example_db()
+        a = apriori(db, 0.3, use_kernel=False)
+        b = apriori(db, 0.3, use_kernel=True)
+        assert a == b
+
+
+class TestCorpusIntegration:
+    def test_mine_corpus_rules_finds_boilerplate(self):
+        from repro.data.corpus_rules import boilerplate_paths
+
+        docs = synthetic_corpus(200, seed=3)
+        pipe = TokenPipeline(
+            docs, PipelineConfig(seq_len=256, global_batch=4)
+        )
+        res, db = mine_corpus_rules(
+            pipe._rows[:120, :-1], min_support=0.03, window=10, stride=5
+        )
+        assert len(res.trie) > 0
+        paths = boilerplate_paths(res, min_depth=3, min_confidence=0.5)
+        assert paths, "injected template should surface as long paths"
+
+    def test_ngram_trie_probabilities(self):
+        rows = [[1, 2, 3, 4, 1, 2, 3, 5, 1, 2, 3, 4]]
+        t = NgramTrie(n=3).fit(rows)
+        node = t.trie.find_path((1, 2))
+        assert node is not None
+        # after (1,2) always 3
+        child = node.children[3]
+        assert child.confidence == pytest.approx(1.0)
+        # after (2,3): 4 twice, 5 once
+        n23 = t.trie.find_path((2, 3))
+        assert n23.children[4].confidence == pytest.approx(2 / 3)
+        assert n23.children[5].confidence == pytest.approx(1 / 3)
+        draft, conf = t.propose((1, 2), max_tokens=2, min_confidence=0.1)
+        assert draft[0] == 3
+
+    def test_spec_decode_greedy_equivalence(self):
+        """Speculative output == vanilla greedy output (tiny model)."""
+        from repro.configs.base import LayerSpec, ModelConfig
+        from repro.models import init_cache, materialize_params
+        from repro.serve.engine import greedy_generate
+        from repro.serve.spec_decode import speculative_generate
+
+        cfg = ModelConfig(
+            name="t", d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+            d_ff=64, vocab_size=64, unit=(LayerSpec("attn", "mlp"),),
+            n_units=2, remat=False, tie_embeddings=True,
+        )
+        params, _ = materialize_params(cfg, jax.random.PRNGKey(0))
+        rows = [list(np.random.RandomState(0).randint(0, 64, 64))]
+        trie = NgramTrie(n=3).fit(rows)
+        prompt = np.array([[1, 2, 3]], np.int32)
+        n = 12
+        out_s, stats = speculative_generate(
+            cfg, params, init_cache(cfg, 1, 64, jnp.float32),
+            prompt, trie, n, max_draft=3, min_confidence=0.0,
+        )
+        out_g, _ = greedy_generate(
+            cfg, params, init_cache(cfg, 1, 64, jnp.float32),
+            jnp.asarray(prompt), n,
+        )
+        np.testing.assert_array_equal(
+            out_s[0], np.asarray(out_g)[0][:n]
+        )
+
+
+class TestExamples:
+    """Examples must at least import and expose main()."""
+
+    @pytest.mark.parametrize(
+        "mod", ["quickstart", "train_lm", "corpus_patterns",
+                "speculative_serve"]
+    )
+    def test_example_imports(self, mod):
+        import importlib.util
+        import os
+
+        path = os.path.join(
+            os.path.dirname(__file__), "..", "examples", f"{mod}.py"
+        )
+        spec = importlib.util.spec_from_file_location(mod, path)
+        m = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(m)
+        assert hasattr(m, "main")

@@ -1,0 +1,163 @@
+"""Unit tests for the Trie of Rules core (paper §3)."""
+import numpy as np
+import pytest
+
+from repro.arm.datasets import paper_example_db, grocery_db
+from repro.arm.fpgrowth import fpgrowth, fpmax
+from repro.core.builder import build_flat_table, build_trie_of_rules
+from repro.core.metrics import (
+    RuleMetrics,
+    compound_confidence,
+    confidence,
+    lift,
+    rule_metrics,
+    support,
+)
+
+L = {c: i for i, c in enumerate("abcdefghijklmnopqrs")}
+
+
+@pytest.fixture(scope="module")
+def paper_build():
+    db = paper_example_db()
+    res = build_trie_of_rules(db, 0.3, miner="fpgrowth")
+    return db, res
+
+
+class TestMetrics:
+    def test_support_confidence_lift(self):
+        assert support(3, 5) == 0.6
+        assert confidence(0.6, 0.8) == pytest.approx(0.75)
+        assert lift(0.75, 0.6) == pytest.approx(1.25)
+        m = rule_metrics(0.6, 0.8, 0.6)
+        assert m.support == pytest.approx(0.6)
+        assert m.confidence == pytest.approx(0.75)
+        assert m.lift == pytest.approx(1.25)
+
+    def test_zero_guards(self):
+        assert confidence(0.5, 0.0) == 0.0
+        assert lift(0.5, 0.0) == 0.0
+
+    def test_compound_confidence_product(self):
+        assert compound_confidence([0.5, 0.4]) == pytest.approx(0.2)
+        assert compound_confidence([]) == 1.0
+
+
+class TestPaperExample:
+    """The Fig. 4-6 walk-through."""
+
+    def test_frequent_items(self, paper_build):
+        db, _ = paper_build
+        counts = db.item_counts()
+        expect = {"f": 4, "c": 4, "a": 3, "b": 3, "m": 3, "p": 3}
+        for ch, n in expect.items():
+            assert counts[L[ch]] == n
+
+    def test_fpmax_is_maximal(self, paper_build):
+        db, _ = paper_build
+        maximal = fpmax(db, 0.3)
+        everything = fpgrowth(db, 0.3)
+        for s in maximal:
+            for extra in range(db.n_items):
+                if extra not in s:
+                    assert frozenset(s | {extra}) not in everything
+
+    def test_rule_fc_to_a(self, paper_build):
+        """Fig. 6: the rule (antecedent path)->(node a)."""
+        db, res = paper_build
+        m = res.trie.search_rule([L["c"], L["f"]], [L["a"]])
+        assert m is not None
+        # Support({c,f,a}) = 3/5 in Fig. 4a
+        assert m.support == pytest.approx(0.6)
+        assert m.confidence == pytest.approx(
+            db.support([L["c"], L["f"], L["a"]])
+            / db.support([L["c"], L["f"]])
+        )
+        assert m.lift == pytest.approx(m.confidence / db.support([L["a"]]))
+
+    def test_compound_consequent_identity(self, paper_build):
+        """Eq. 4: Conf(A→C,D) = Conf(A→C)·Conf(A,C→D)."""
+        db, res = paper_build
+        ab_c = res.trie.search_rule([L["c"]], [L["f"]])
+        abc_d = res.trie.search_rule([L["c"], L["f"]], [L["a"]])
+        ab_cd = res.trie.search_rule([L["c"]], [L["f"], L["a"]])
+        assert ab_cd.confidence == pytest.approx(
+            ab_c.confidence * abc_d.confidence
+        )
+
+    def test_missing_rule_returns_none(self, paper_build):
+        _, res = paper_build
+        assert res.trie.search_rule([L["p"]], [L["f"]]) is None
+        assert res.trie.search_rule([L["s"]], [L["k"]]) is None
+
+    def test_annotation_matches_db(self, paper_build):
+        db, res = paper_build
+        for path, node in res.trie.all_paths():
+            assert node.support == pytest.approx(db.support(path))
+            parent_sup = db.support(path[:-1]) if len(path) > 1 else 1.0
+            assert node.confidence == pytest.approx(
+                node.support / parent_sup
+            )
+
+
+class TestTrieVsFlatTable:
+    """The two representations must answer identically (fair Fig. 8-13)."""
+
+    @pytest.fixture(scope="class")
+    def built(self):
+        db = paper_example_db()
+        res = build_trie_of_rules(db, 0.3, miner="fpgrowth")
+        table, rules, _ = build_flat_table(db, res.itemsets)
+        return db, res, table, rules
+
+    def test_every_rule_found_in_both(self, built):
+        _, res, table, rules = built
+        for r in rules:
+            tm = res.trie.search_rule(r.antecedent, r.consequent)
+            fm = table.search_rule(r.antecedent, r.consequent)
+            assert tm is not None and fm is not None
+            assert tm.support == pytest.approx(fm.support)
+            assert tm.confidence == pytest.approx(fm.confidence)
+            assert tm.lift == pytest.approx(fm.lift)
+
+    def test_top_n_agree(self, built):
+        _, res, table, rules = built
+        for metric in ("support", "confidence", "lift"):
+            n = max(1, len(rules) // 10)
+            top_table = table.top_n(n, metric)
+            vals_table = sorted(
+                getattr(r.metrics, metric) for r in top_table
+            )
+            # Trie top-N is over single-consequent rules (nodes); every
+            # node rule is also a table row, so node top-N values must be
+            # dominated by table top-N values of the same count.
+            top_trie = res.trie.top_n(n, metric)
+            vals_trie = sorted(getattr(nd, metric) for nd in top_trie)
+            assert vals_trie[-1] <= vals_table[-1] + 1e-12
+
+    def test_traversal_counts(self, built):
+        _, res, table, rules = built
+        assert len(list(res.trie.traverse())) == len(res.trie)
+        assert len(list(table.traverse())) == len(rules)
+
+    def test_compression(self, built):
+        """Prefix sharing: trie stores ≤ cells than the flat table."""
+        _, res, table, rules = built
+        trie_cells = len(res.trie) * 4  # item + 3 metrics per node
+        assert trie_cells < table.memory_cells()
+
+
+class TestGroceryScale:
+    def test_build_and_search(self):
+        db = grocery_db()
+        res = build_trie_of_rules(db, 0.01, miner="fpgrowth")
+        assert len(res.trie) == len(res.itemsets)
+        table, rules, _ = build_flat_table(db, res.itemsets)
+        assert len(rules) > len(res.itemsets)
+        rng = np.random.RandomState(0)
+        for idx in rng.choice(len(rules), size=50, replace=False):
+            r = rules[idx]
+            tm = res.trie.search_rule(r.antecedent, r.consequent)
+            assert tm is not None
+            assert tm.support == pytest.approx(r.metrics.support)
+            assert tm.confidence == pytest.approx(r.metrics.confidence)

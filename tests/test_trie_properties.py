@@ -1,0 +1,188 @@
+"""Hypothesis property tests for the system's invariants.
+
+Random transaction databases → the Trie of Rules must satisfy the paper's
+structural guarantees regardless of the data.
+"""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.arm.rulegen import prefix_split_rules
+from repro.arm.transactions import TransactionDB
+from repro.arm.fpgrowth import fpgrowth, fpmax
+from repro.core.array_trie import (
+    FrozenTrie,
+    batched_rule_search,
+    top_n_nodes,
+    traverse_reduce,
+)
+from repro.core.builder import build_flat_table, build_trie_of_rules
+
+
+@st.composite
+def transaction_dbs(draw):
+    n_items = draw(st.integers(min_value=3, max_value=14))
+    n_tx = draw(st.integers(min_value=4, max_value=40))
+    txs = []
+    for _ in range(n_tx):
+        size = draw(st.integers(min_value=1, max_value=min(6, n_items)))
+        tx = draw(
+            st.sets(
+                st.integers(min_value=0, max_value=n_items - 1),
+                min_size=1,
+                max_size=size,
+            )
+        )
+        txs.append(tx)
+    return TransactionDB(txs, n_items=n_items)
+
+
+@st.composite
+def db_and_minsup(draw):
+    db = draw(transaction_dbs())
+    minsup = draw(st.sampled_from([0.1, 0.2, 0.3, 0.5]))
+    return db, minsup
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_and_minsup())
+def test_support_monotone_along_paths(case):
+    """Child support ≤ parent support on every trie edge (anti-monotone)."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    for _, node in res.trie.all_paths():
+        parent_sup = (
+            node.parent.support
+            if node.parent is not None and node.parent.depth > 0
+            else 1.0
+        )
+        assert node.support <= parent_sup + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_and_minsup())
+def test_every_mined_rule_retrievable(case):
+    """Completeness: every canonical rule is findable with exact metrics."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    rules = prefix_split_rules(res.itemsets, db)
+    for r in rules:
+        m = res.trie.search_rule(r.antecedent, r.consequent)
+        assert m is not None
+        assert math.isclose(m.support, r.metrics.support, abs_tol=1e-12)
+        assert math.isclose(
+            m.confidence, r.metrics.confidence, abs_tol=1e-12
+        )
+        assert math.isclose(m.lift, r.metrics.lift, abs_tol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_and_minsup())
+def test_compound_confidence_factorizes(case):
+    """Eq. 4 holds for every length-≥3 path and every split pair."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    for path, _ in res.trie.all_paths():
+        if len(path) < 3:
+            continue
+        for i in range(1, len(path) - 1):
+            for j in range(i + 1, len(path)):
+                left = res.trie.search_rule(path[:i], path[i:j])
+                right = res.trie.search_rule(path[:j], path[j:])
+                full = res.trie.search_rule(path[:i], path[i:])
+                assert left and right and full
+                assert math.isclose(
+                    full.confidence,
+                    left.confidence * right.confidence,
+                    rel_tol=1e-9,
+                    abs_tol=1e-12,
+                )
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_and_minsup())
+def test_array_trie_equals_pointer_trie(case):
+    """The frozen SoA encoding answers exactly like the pointer trie."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    rules = prefix_split_rules(res.itemsets, db)
+    if not rules:
+        return
+    fz = FrozenTrie.freeze(res.trie)
+    dt = fz.device_arrays()
+    q, al = fz.canonicalize_queries(
+        [r.antecedent for r in rules], [r.consequent for r in rules]
+    )
+    out = batched_rule_search(dt, q, al)
+    for i, r in enumerate(rules):
+        assert bool(out["found"][i])
+        np.testing.assert_allclose(
+            float(out["support"][i]), r.metrics.support, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            float(out["confidence"][i]), r.metrics.confidence, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            float(out["lift"][i]), r.metrics.lift, rtol=1e-4, atol=1e-6
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_and_minsup())
+def test_array_trie_rejects_absent_rules(case):
+    """Soundness: rules not in the trie are reported not-found."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    fz = FrozenTrie.freeze(res.trie)
+    dt = fz.device_arrays()
+    # An item id beyond the universe can never be in the trie.
+    ghost = db.n_items + 3
+    q, al = fz.canonicalize_queries([[ghost]], [[ghost]])
+    out = batched_rule_search(dt, q, al)
+    assert not bool(out["found"][0])
+    assert float(out["support"][0]) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(db_and_minsup())
+def test_traverse_and_topn_consistency(case):
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    fz = FrozenTrie.freeze(res.trie)
+    dt = fz.device_arrays()
+    agg = traverse_reduce(dt)
+    assert int(agg["n_rules"]) == len(res.trie)
+    if len(res.trie) >= 3:
+        vals, _ = top_n_nodes(dt, dt.support, 3)
+        expect = sorted(
+            (nd.support for _, nd in res.trie.all_paths()), reverse=True
+        )[:3]
+        np.testing.assert_allclose(
+            np.sort(np.asarray(vals))[::-1], expect, rtol=1e-6
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_and_minsup())
+def test_fpgrowth_equals_apriori(case):
+    """Two independent miners agree on the frequent itemsets + counts."""
+    from repro.arm.apriori import apriori
+
+    db, minsup = case
+    a = fpgrowth(db, minsup, max_len=6)
+    b = apriori(db, minsup, max_len=6)
+    assert a == b
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_and_minsup())
+def test_fpmax_subset_of_fpgrowth_and_maximal(case):
+    db, minsup = case
+    allsets = fpgrowth(db, minsup, max_len=6)
+    maxsets = fpmax(db, minsup, max_len=6)
+    for s, c in maxsets.items():
+        assert allsets.get(s) == c
+    for s in allsets:
+        has_superset = any(s < t for t in allsets)
+        assert (s in maxsets) == (not has_superset)
