@@ -1,0 +1,22 @@
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke bench-search bench
+
+# tier-1 verification (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# tiny-trie smoke of the search benchmarks; writes to a separate JSON so
+# it never clobbers the full-run perf-trajectory artifact
+bench-smoke:
+	$(PY) -m benchmarks.run --only search --smoke \
+		--json-out BENCH_rule_search_smoke.json
+
+# full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
+bench-search:
+	$(PY) -m benchmarks.run --only rule_search_kernels
+
+# every paper figure + kernel benches
+bench:
+	$(PY) -m benchmarks.run

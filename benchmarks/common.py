@@ -27,6 +27,22 @@ def time_per_call(fn: Callable, n: int = 100, warmup: int = 3) -> float:
     return (time.perf_counter() - t0) / n
 
 
+def time_per_call_median(
+    fn: Callable, n: int = 100, warmup: int = 3
+) -> float:
+    """Median seconds per call — robust to GC/dispatch stragglers, which
+    matters for sub-millisecond lanes in comparison benchmarks."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
 def time_each(fns: Sequence[Callable]) -> List[float]:
     """Individually timed calls (paper Fig 9: per-rule distributions)."""
     out = []

@@ -8,6 +8,7 @@ beyond-paper lane.
 """
 from __future__ import annotations
 
+import json
 import random
 import time
 from typing import List
@@ -17,20 +18,46 @@ import numpy as np
 from repro.arm.datasets import grocery_db, online_retail_db
 from repro.core.builder import build_flat_table, build_trie_of_rules
 from repro.core.array_trie import (
+    DeviceTrie,
     FrozenTrie,
     batched_rule_search,
+    csr_offsets_from_edges,
     top_n_nodes,
     traverse_reduce,
 )
 
-from .common import Row, paired_t_test, time_each, time_per_call
+from .common import (
+    Row,
+    paired_t_test,
+    time_each,
+    time_per_call,
+    time_per_call_median,
+)
 
 GROCERY_MINSUP = 0.005
 MINSUP_SWEEP = (0.005, 0.0065, 0.008, 0.0095, 0.011, 0.0135)
 
+# knobs set by benchmarks.run before dispatch
+SMOKE = False                            # tiny sizes for CI smoke runs
+JSON_OUT = "BENCH_rule_search.json"      # machine-readable perf trajectory
+
+# (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
+# with E, so the largest trie runs a single batch size.  Q=2048 is the
+# batched-serving shape; mid-range Q (384-1024) hits an XLA-CPU gather
+# scheduling quirk that penalizes the CSR oracle's scattered bucket
+# starts despite it issuing ~3x fewer gathers than the full-table search.
+SEARCH_KERNEL_SIZES = (
+    (1_000, (128, 2048)),
+    (10_000, (128, 2048)),
+    (100_000, (128,)),
+)
+SEARCH_KERNEL_SIZES_SMOKE = ((256, (64,)),)
+
 
 def _grocery_setup(minsup=GROCERY_MINSUP, miner="fpgrowth"):
     db = grocery_db()
+    if SMOKE:  # tiny ruleset for CI smoke runs
+        minsup = max(minsup, 0.03)
     res = build_trie_of_rules(db, minsup, miner=miner)
     table, rules, flat_secs = build_flat_table(db, res.itemsets)
     return db, res, table, rules, flat_secs
@@ -42,7 +69,8 @@ def _grocery_setup(minsup=GROCERY_MINSUP, miner="fpgrowth"):
 def bench_search() -> List[Row]:
     _, res, table, rules, _ = _grocery_setup()
     rng = random.Random(0)
-    sample = rules if len(rules) <= 4000 else rng.sample(rules, 4000)
+    cap = 200 if SMOKE else 4000
+    sample = rules if len(rules) <= cap else rng.sample(rules, cap)
 
     trie_times = time_each(
         [
@@ -76,9 +104,11 @@ def bench_search() -> List[Row]:
 def bench_search_scaling() -> List[Row]:
     rows: List[Row] = []
     rng = random.Random(1)
-    for minsup in MINSUP_SWEEP:
+    sweep = MINSUP_SWEEP[:2] if SMOKE else MINSUP_SWEEP
+    cap = 100 if SMOKE else 800
+    for minsup in sweep:
         _, res, table, rules, _ = _grocery_setup(minsup)
-        sample = rules if len(rules) <= 800 else rng.sample(rules, 800)
+        sample = rules if len(rules) <= cap else rng.sample(rules, cap)
         t_mean = sum(
             time_each(
                 [
@@ -255,3 +285,181 @@ def bench_batched_search() -> List[Row]:
             f"vs_pointer=x{(seq / sec):.1f}",
         )
     ]
+
+
+# ----------------------------------------------------------------------
+# beyond-paper: seed full-sweep kernel vs CSR fused kernel vs jnp oracles
+# ----------------------------------------------------------------------
+def _synthetic_csr_trie(n_edges: int, root_fanout: int = 0,
+                        fanout: int = 8, seed: int = 0):
+    """Deterministic synthetic trie at a target edge count: a hub root with
+    ``root_fanout`` children (exercises the chunked bucket sweep) over a
+    ``fanout``-ary body.  Construction is O(E) numpy; edges come out
+    (parent, item)-sorted by construction.
+
+    The default root fanout scales with trie size (like the number of
+    frequent single items scales with a shrinking minsup), capped at 256.
+    """
+    n_nodes = n_edges + 1
+    parent = np.full(n_nodes, -1, np.int32)
+    item = np.full(n_nodes, -1, np.int32)
+    if root_fanout <= 0:
+        root_fanout = min(256, max(16, n_edges // 16))
+    r = min(root_fanout, n_edges)
+    first = np.arange(1, r + 1)
+    parent[first] = 0
+    item[first] = (first - 1).astype(np.int32)
+    rest = np.arange(r + 1, n_nodes)
+    parent[rest] = ((rest - r - 1) // fanout + 1).astype(np.int32)
+    item[rest] = ((rest - r - 1) % fanout).astype(np.int32)
+    depth = np.zeros(n_nodes, np.int32)
+    for nid in range(1, n_nodes):
+        depth[nid] = depth[parent[nid]] + 1
+    rng = np.random.RandomState(seed)
+    conf = (rng.rand(n_nodes) * 0.9 + 0.05).astype(np.float32)
+    sup = (rng.rand(n_nodes) * 0.9 + 0.05).astype(np.float32)
+    lift = (rng.rand(n_nodes) * 2).astype(np.float32)
+    edge_parent = parent[1:].copy()
+    edge_item = item[1:].copy()
+    edge_child = np.arange(1, n_nodes, dtype=np.int32)
+    offsets, max_fanout = csr_offsets_from_edges(edge_parent, n_nodes)
+    return {
+        "node_parent": parent, "node_item": item, "node_depth": depth,
+        "confidence": conf, "support": sup, "lift": lift,
+        "edge_parent": edge_parent, "edge_item": edge_item,
+        "edge_child": edge_child,
+        "child_offsets": offsets, "max_fanout": max_fanout,
+    }
+
+
+def _search_queries(arrs, q: int, width: int, seed: int = 1):
+    """Half real root→node paths (random antecedent split), half junk."""
+    rng = np.random.RandomState(seed)
+    n_nodes = arrs["node_parent"].shape[0]
+    n_items = int(arrs["edge_item"].max()) + 1
+    queries = np.full((q, width), -1, np.int32)
+    ant_len = np.zeros((q,), np.int32)
+    for row in range(q):
+        if row % 2 == 0 and n_nodes > 1:
+            nid = rng.randint(1, n_nodes)
+            path = []
+            while nid > 0 and len(path) < width:
+                path.append(int(arrs["node_item"][nid]))
+                nid = int(arrs["node_parent"][nid])
+            path = path[::-1]
+            queries[row, : len(path)] = path
+            ant_len[row] = rng.randint(0, len(path) + 1)
+        else:
+            k = rng.randint(1, width + 1)
+            queries[row, :k] = rng.randint(0, n_items, size=k)
+            ant_len[row] = rng.randint(0, k + 1)
+    return queries, ant_len
+
+
+def bench_rule_search_kernels() -> List[Row]:
+    """Seed full-sweep kernel vs the CSR fused kernel vs the two jnp oracle
+    layouts, across trie sizes and batch sizes.  Emits CSV rows AND the
+    machine-readable ``BENCH_rule_search.json`` perf-trajectory file."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import rule_search
+    from repro.kernels.rule_search import (
+        rule_search_fused_pallas,
+        rule_search_pallas,
+    )
+
+    interp = jax.default_backend() != "tpu"
+    width = 6
+    sizes = SEARCH_KERNEL_SIZES_SMOKE if SMOKE else SEARCH_KERNEL_SIZES
+    rows: List[Row] = []
+    results = []
+    for n_edges, batch_sizes in sizes:
+        arrs = _synthetic_csr_trie(n_edges)
+        edge_cols = ("edge_parent", "edge_item", "edge_child")
+        ep, ei, ec = (jnp.asarray(arrs[k]) for k in edge_cols)
+        ecf, esp, elf = (
+            jnp.asarray(arrs[k])[jnp.asarray(arrs["edge_child"])]
+            for k in ("confidence", "support", "lift")
+        )
+        co = jnp.asarray(arrs["child_offsets"])
+        mf = arrs["max_fanout"]
+        seed_edges = {
+            "edge_parent": ep, "edge_item": ei, "edge_child": ec,
+            "edge_conf": ecf, "edge_sup": esp, "edge_lift": elf,
+            "child_offsets": None, "max_fanout": 0,
+        }
+        dt_csr = DeviceTrie(
+            node_item=jnp.asarray(arrs["node_item"]),
+            node_parent=jnp.asarray(arrs["node_parent"]),
+            node_depth=jnp.asarray(arrs["node_depth"]),
+            support=jnp.asarray(arrs["support"]),
+            confidence=jnp.asarray(arrs["confidence"]),
+            lift=jnp.asarray(arrs["lift"]),
+            edge_parent=ep, edge_item=ei, edge_child=ec,
+            child_offsets=co, max_fanout=mf,
+        )
+        dt_seed = dataclasses.replace(
+            dt_csr, child_offsets=None, max_fanout=0
+        )
+        for q in batch_sizes:
+            queries, ant_len = _search_queries(arrs, q, width)
+            qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
+
+            lanes = {
+                "sweep_kernel": lambda: rule_search_pallas(
+                    ep, ei, ec, ecf, esp, elf, qj, alj, interpret=interp
+                )["node"].block_until_ready(),
+                "seed_full_2launch": lambda: rule_search(
+                    None, qj, alj, edges=seed_edges
+                )["lift"].block_until_ready(),
+                "csr_fused_kernel": lambda: rule_search_fused_pallas(
+                    co, ei, ec, ecf, esp, elf, qj, alj,
+                    max_fanout=mf, interpret=interp,
+                )["lift"].block_until_ready(),
+                "oracle_binsearch": lambda: batched_rule_search(
+                    dt_seed, qj, alj
+                )["lift"].block_until_ready(),
+                "oracle_csr": lambda: batched_rule_search(
+                    dt_csr, qj, alj
+                )["lift"].block_until_ready(),
+            }
+            kernel_reps = 3 if n_edges >= 100_000 else 5
+            us = {}
+            for name, fn in lanes.items():
+                # the jnp oracle lanes are cheap — more reps tame
+                # dispatch-overhead noise at small sizes
+                n_reps = 30 if name.startswith("oracle") else kernel_reps
+                us[name] = time_per_call_median(fn, n=n_reps, warmup=2) * 1e6
+            speedup = us["sweep_kernel"] / us["csr_fused_kernel"]
+            oracle_speedup = us["oracle_binsearch"] / us["oracle_csr"]
+            results.append({
+                "n_edges": n_edges,
+                "n_nodes": n_edges + 1,
+                "batch": q,
+                "width": width,
+                "max_fanout": mf,
+                "us_per_call": us,
+                "speedup_fused_vs_sweep": speedup,
+                "speedup_oracle_csr_vs_binsearch": oracle_speedup,
+            })
+            for name, val in us.items():
+                rows.append(Row(
+                    f"rule_search_E{n_edges}_Q{q}_{name}", val,
+                    f"fused_vs_sweep=x{speedup:.2f};"
+                    f"oracle_csr_vs_binsearch=x{oracle_speedup:.2f}",
+                ))
+    if JSON_OUT:
+        payload = {
+            "bench": "rule_search_kernels",
+            "backend": jax.default_backend(),
+            "interpret": interp,
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "results": results,
+        }
+        with open(JSON_OUT, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows

@@ -22,13 +22,25 @@ BENCHES = [
     ("traversal_8x", paper_figs.bench_traversal),
     ("compression", paper_figs.bench_compression),
     ("batched_search", paper_figs.bench_batched_search),
+    ("rule_search_kernels", paper_figs.bench_rule_search_kernels),
 ]
 
 
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--only", default=None, help="substring filter")
+    parser.add_argument(
+        "--smoke", action="store_true",
+        help="tiny trie sizes (CI smoke run)",
+    )
+    parser.add_argument(
+        "--json-out", default="BENCH_rule_search.json",
+        help="path for the rule-search perf-trajectory JSON "
+             "('' disables writing)",
+    )
     args = parser.parse_args()
+    paper_figs.SMOKE = args.smoke
+    paper_figs.JSON_OUT = args.json_out
 
     print("name,us_per_call,derived")
     failed = []

@@ -12,6 +12,7 @@ from .array_trie import (
     FrozenTrie,
     batched_rule_search,
     child_lookup,
+    csr_offsets_from_edges,
     reconstruct_paths,
     top_n_nodes,
     traverse_reduce,
@@ -29,6 +30,7 @@ __all__ = [
     "DeviceTrie",
     "batched_rule_search",
     "child_lookup",
+    "csr_offsets_from_edges",
     "reconstruct_paths",
     "top_n_nodes",
     "traverse_reduce",

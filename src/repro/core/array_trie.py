@@ -1,4 +1,4 @@
-"""Frozen Trie of Rules — TPU-native structure-of-arrays encoding.
+"""Frozen Trie of Rules — TPU-native structure-of-arrays / CSR encoding.
 
 This is the hardware adaptation of the paper's data structure (DESIGN.md §2):
 the pointer trie is frozen once into flat arrays
@@ -6,20 +6,30 @@ the pointer trie is frozen once into flat arrays
     node_item / node_parent / node_depth          int32[N]
     support / confidence / lift                   float32[N]   (metric columns)
     edge_parent / edge_item / edge_child          int32[E]     (sorted lex)
+    child_offsets                                 int32[N+1]   (CSR buckets)
 
-and every paper operation becomes a vectorized array program:
+``child_offsets`` is the CSR row index over the lex-sorted edge table: node
+``p``'s outgoing edges occupy ``edge_*[child_offsets[p]:child_offsets[p+1]]``,
+item-sorted within the bucket (the array analogue of the modified FP-tree
+header table, arXiv:1504.07018).  ``max_fanout`` — the widest bucket — is
+precomputed at freeze time and bounds every per-step scan.
 
-    rule search   — batched root→down descent; each step is a lexicographic
-                    binary search over the sorted edge table (no pointers),
+Every paper operation becomes a vectorized array program:
+
+    rule search   — batched root→down descent; each step is a binary search
+                    *inside the active node's child bucket* (O(log fanout),
+                    not O(log E)) via the CSR offsets,
     top-N         — ``jax.lax.top_k`` over a metric column,
     traversal     — full-column reductions over the node arrays,
     compound conf — segment-product of confidences along the walked path
                     (paper Eq. 1-4).
 
 Node ids are assigned in BFS order at freeze time so level-order traversal is
-contiguous.  The same edge-table descent runs inside the Pallas kernel
+contiguous.  The same CSR bucket descent runs inside the fused Pallas kernel
 (``repro.kernels.rule_search``); this module is the jnp reference/production
-path for CPU/GPU/TPU-without-kernel.
+path for CPU/GPU/TPU-without-kernel.  A ``DeviceTrie`` with
+``child_offsets=None`` falls back to the seed full-table lexicographic
+binary search (kept for comparison benchmarks).
 """
 from __future__ import annotations
 
@@ -39,6 +49,23 @@ from .trie import TrieNode, TrieOfRules
 NO_NODE = np.int32(-1)
 
 
+def csr_offsets_from_edges(
+    edge_parent: np.ndarray, n_nodes: int
+) -> Tuple[np.ndarray, int]:
+    """CSR row index over a (parent, item)-sorted edge table.
+
+    Returns ``(child_offsets int32[N+1], max_fanout)`` where node ``p``'s
+    bucket is ``[child_offsets[p], child_offsets[p+1])``.
+    """
+    counts = np.bincount(
+        np.asarray(edge_parent, dtype=np.int64), minlength=n_nodes
+    )
+    offsets = np.zeros((n_nodes + 1,), dtype=np.int32)
+    np.cumsum(counts, out=offsets[1:])
+    max_fanout = int(counts.max()) if counts.size else 0
+    return offsets, max_fanout
+
+
 @dataclass
 class FrozenTrie:
     """Immutable SoA trie; arrays are numpy on host, moved to jnp lazily."""
@@ -54,6 +81,14 @@ class FrozenTrie:
     edge_child: np.ndarray     # int32[E]
     item_order: np.ndarray     # int32[n_items] frequency rank -> item
     item_rank: np.ndarray      # int32[max_item+1] item -> frequency rank
+    child_offsets: Optional[np.ndarray] = None  # int32[N+1] CSR buckets
+    max_fanout: int = 0        # widest child bucket (bounds per-step scans)
+
+    def __post_init__(self):
+        if self.child_offsets is None:
+            self.child_offsets, self.max_fanout = csr_offsets_from_edges(
+                self.edge_parent, self.node_item.shape[0]
+            )
 
     @property
     def n_nodes(self) -> int:
@@ -170,6 +205,8 @@ class FrozenTrie:
             edge_parent=jnp.asarray(self.edge_parent),
             edge_item=jnp.asarray(self.edge_item),
             edge_child=jnp.asarray(self.edge_child),
+            child_offsets=jnp.asarray(self.child_offsets),
+            max_fanout=self.max_fanout,
         )
 
     def path_items(self, node_id: int) -> Tuple[Item, ...]:
@@ -184,7 +221,13 @@ class FrozenTrie:
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class DeviceTrie:
-    """The on-device view (a pytree of jnp arrays)."""
+    """The on-device view (a pytree of jnp arrays).
+
+    ``child_offsets`` is the CSR row index over the edge table; ``None``
+    selects the seed full-table binary-search path.  ``max_fanout`` is
+    static metadata (pytree aux) so jitted callers can size the bucket
+    search at trace time.
+    """
 
     node_item: jax.Array
     node_parent: jax.Array
@@ -195,18 +238,21 @@ class DeviceTrie:
     edge_parent: jax.Array
     edge_item: jax.Array
     edge_child: jax.Array
+    child_offsets: Optional[jax.Array] = None
+    max_fanout: int = 0
 
     def tree_flatten(self):
         fields = (
             self.node_item, self.node_parent, self.node_depth,
             self.support, self.confidence, self.lift,
             self.edge_parent, self.edge_item, self.edge_child,
+            self.child_offsets,
         )
-        return fields, None
+        return fields, self.max_fanout
 
     @classmethod
     def tree_unflatten(cls, aux, fields):
-        return cls(*fields)
+        return cls(*fields[:9], child_offsets=fields[9], max_fanout=aux)
 
 
 # ----------------------------------------------------------------------
@@ -247,21 +293,46 @@ def _n_search_steps(n_edges: int) -> int:
 def child_lookup(
     trie: DeviceTrie, parents: jax.Array, items: jax.Array
 ) -> jax.Array:
-    """Batched child id for (parent, item); -1 where no such edge."""
+    """Batched child id for (parent, item); -1 where no such edge.
+
+    With CSR ``child_offsets`` the binary search is confined to the
+    parent's child bucket — ``O(log max_fanout)`` steps instead of
+    ``O(log E)``.  Without them (seed layout) it falls back to the
+    full-table lexicographic search.
+    """
     e = trie.edge_parent.shape[0]
     if e == 0:
         return jnp.full_like(parents, -1)
-    idx = _lex_binary_search(
-        trie.edge_parent, trie.edge_item, parents, items,
-        _n_search_steps(e),
-    )
-    idxc = jnp.minimum(idx, e - 1)
-    found = (
-        (idx < e)
-        & (trie.edge_parent[idxc] == parents)
-        & (trie.edge_item[idxc] == items)
-    )
-    return jnp.where(found, trie.edge_child[idxc], -1)
+    if trie.child_offsets is None:
+        idx = _lex_binary_search(
+            trie.edge_parent, trie.edge_item, parents, items,
+            _n_search_steps(e),
+        )
+        idxc = jnp.minimum(idx, e - 1)
+        found = (
+            (idx < e)
+            & (trie.edge_parent[idxc] == parents)
+            & (trie.edge_item[idxc] == items)
+        )
+        return jnp.where(found, trie.edge_child[idxc], -1)
+
+    n = trie.child_offsets.shape[0] - 1
+    p_ok = (parents >= 0) & (parents < n)
+    p = jnp.clip(parents, 0, n - 1)
+    lo = trie.child_offsets[p]
+    bucket_hi = trie.child_offsets[p + 1]
+    hi = bucket_hi
+    # Lower bound of `items` inside the item-sorted bucket.  Fixed
+    # iteration count from the static max_fanout keeps this trace-friendly.
+    for _ in range(_n_search_steps(max(trie.max_fanout, 1))):
+        mid = (lo + hi) // 2
+        midc = jnp.minimum(mid, e - 1)
+        less = trie.edge_item[midc] < items
+        lo = jnp.where(less, mid + 1, lo)
+        hi = jnp.where(less, hi, mid)
+    loc = jnp.minimum(lo, e - 1)
+    found = p_ok & (lo < bucket_hi) & (trie.edge_item[loc] == items)
+    return jnp.where(found, trie.edge_child[loc], -1)
 
 
 @partial(jax.jit, static_argnames=())

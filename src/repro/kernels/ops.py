@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .support_count import support_count_pallas
-from .rule_search import rule_search_pallas
+from .rule_search import rule_search_fused_pallas, rule_search_pallas
 from .trie_reduce import trie_reduce_pallas
 
 
@@ -72,16 +72,27 @@ def dense_from_bitmaps(item_bitmaps: np.ndarray) -> np.ndarray:
 # ----------------------------------------------------------------------
 def edge_metric_arrays(trie) -> Dict[str, jax.Array]:
     """Edge-annotated metrics: child-node metrics gathered onto edges once
-    at freeze time, so the kernel needs no gathers (DeviceTrie or
-    FrozenTrie accepted)."""
+    at freeze time, so the kernel needs no per-step metric gathers
+    (DeviceTrie or FrozenTrie accepted).
+
+    Also carries the CSR child-bucket index (``child_offsets`` +
+    ``max_fanout``) when the trie has one; the fused single-launch kernel
+    needs it, and the full-sweep kernel ignores it.
+    """
     child = jnp.asarray(trie.edge_child, jnp.int32)
+    safe_child = jnp.maximum(child, 0)  # E == 0 → empty gather stays valid
+    offsets = getattr(trie, "child_offsets", None)
     return {
         "edge_parent": jnp.asarray(trie.edge_parent, jnp.int32),
         "edge_item": jnp.asarray(trie.edge_item, jnp.int32),
         "edge_child": child,
-        "edge_conf": jnp.asarray(trie.confidence)[child],
-        "edge_sup": jnp.asarray(trie.support)[child],
-        "edge_lift": jnp.asarray(trie.lift)[child],
+        "edge_conf": jnp.asarray(trie.confidence)[safe_child],
+        "edge_sup": jnp.asarray(trie.support)[safe_child],
+        "edge_lift": jnp.asarray(trie.lift)[safe_child],
+        "child_offsets": (
+            None if offsets is None else jnp.asarray(offsets, jnp.int32)
+        ),
+        "max_fanout": int(getattr(trie, "max_fanout", 0)),
     }
 
 
@@ -91,12 +102,25 @@ def rule_search(
     ant_len,               # int32 [Q]
     edges: Optional[Dict[str, jax.Array]] = None,
 ) -> Dict[str, jax.Array]:
-    """Batched rule search with full paper metrics (compound lift incl.)."""
+    """Batched rule search with full paper metrics (compound lift incl.).
+
+    With a CSR child-bucket index this is ONE fused kernel launch (bucket
+    descent + consequent walk + Eq. 1-4 lift in-kernel).  Without one
+    (seed layout) it falls back to two full-sweep launches.
+    """
     if edges is None:
         edges = edge_metric_arrays(trie)
     queries = jnp.asarray(queries, jnp.int32)
     ant_len = jnp.asarray(ant_len, jnp.int32)
     interp = _interpret()
+
+    if edges.get("child_offsets") is not None:
+        return rule_search_fused_pallas(
+            edges["child_offsets"], edges["edge_item"],
+            edges["edge_child"], edges["edge_conf"], edges["edge_sup"],
+            edges["edge_lift"], queries, ant_len,
+            max_fanout=edges["max_fanout"], interpret=interp,
+        )
 
     full = rule_search_pallas(
         edges["edge_parent"], edges["edge_item"], edges["edge_child"],

@@ -90,6 +90,51 @@ def rule_search_ref(
     }
 
 
+def rule_search_fused_ref(
+    edge_parent: jax.Array,   # int32 [E]
+    edge_item: jax.Array,     # int32 [E]
+    edge_child: jax.Array,    # int32 [E]
+    edge_conf: jax.Array,     # f32   [E]
+    edge_sup: jax.Array,      # f32   [E]
+    edge_lift: jax.Array,     # f32   [E]
+    queries: jax.Array,       # int32 [Q, L]  (-1 padded)
+    ant_len: jax.Array,       # int32 [Q]
+) -> Dict[str, jax.Array]:
+    """Ground truth for the fused CSR kernel: full metrics in one pass,
+    compound lift included (main walk + root-anchored consequent walk).
+
+    Deliberately layout-agnostic — full-table matching, no CSR — so it
+    cross-checks the bucket-windowed descent against independent logic.
+    """
+    main = rule_search_ref(
+        edge_parent, edge_item, edge_child,
+        edge_conf, edge_sup, edge_lift, queries, ant_len,
+    )
+    width = queries.shape[1]
+    cols = jnp.arange(width, dtype=jnp.int32)[None, :]
+    cons_q = jnp.where(cols >= ant_len[:, None], queries, -1)
+    cons = rule_search_ref(
+        edge_parent, edge_item, edge_child,
+        edge_conf, edge_sup, edge_lift,
+        cons_q, jnp.zeros_like(ant_len),
+    )
+    seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
+    single = (seq_len - ant_len) == 1
+    con_sup = cons["support"]
+    lift = jnp.where(
+        single,
+        main["node_lift"],
+        jnp.where(con_sup > 0, main["confidence"] / con_sup, 0.0),
+    )
+    return {
+        "found": main["found"],
+        "node": main["node"],
+        "support": main["support"],
+        "confidence": main["confidence"],
+        "lift": jnp.where(main["found"], lift, 0.0),
+    }
+
+
 # ----------------------------------------------------------------------
 # trie_reduce — full-ruleset traversal reductions (the 8× traversal op)
 # ----------------------------------------------------------------------

@@ -1,24 +1,34 @@
-"""Pallas TPU kernel: batched Trie-of-Rules descent (the paper's search op).
+"""Pallas TPU kernels: batched Trie-of-Rules descent (the paper's search op).
 
-The pointer-trie walk (paper Fig. 8) is re-expressed for TPU as a
-broadcast-compare against the lex-sorted edge table (DESIGN.md §2):
+Two kernels share this module:
 
-    per step s:  match[q, e] = (edge_parent[e] == node[q])
-                             & (edge_item[e]  == queries[q, s])
-                 child[q]    = max_e( match ? edge_child : -1 )
+``rule_search_fused_pallas`` — the production path.  The edge table is laid
+out in CSR child buckets (``array_trie.FrozenTrie.freeze``): node ``p``'s
+outgoing edges are contiguous at ``child_offsets[p]:child_offsets[p+1]``,
+item-sorted.  Each descent step gathers only the active node's bucket,
+padded to a tile-aligned ``max_fanout`` window:
 
-Metrics ride ON THE EDGES (edge_conf/edge_sup/edge_lift are the child
-node's Step-3 annotations), so the walk needs no gather at all — masked
-max-reductions only, which the VPU executes at full lane width.  This is
-the deliberate complexity-for-vectorization trade: O(E) compares per step
-instead of O(log E) pointer hops, a win whenever the edge table is
-VMEM-resident (E ≲ 10^5; larger tries use ``array_trie.batched_rule_search``,
-the jnp binary-search path).
+    per step s:  start[q] = child_offsets[node[q]]
+                 match[q, f] = (f < fanout(node[q]))
+                             & (edge_item[start[q]+f] == queries[q, s])
+                 child[q]    = max_f( match ? edge_child[start[q]+f] : -1 )
 
-Tiling: grid over query tiles (BQ rows); the edge table is streamed through
-VMEM in BE-wide chunks inside each descent step via an unrolled loop on the
-whole (1, E) block.  Compound-consequent lift is assembled by the ops
-wrapper from a second consequent-only invocation (paper Eq. 1-4).
+so the per-step work is O(max_fanout) per query instead of O(E).  Hub
+nodes (buckets wider than one BF tile — typically just the root) are
+handled by a chunked sweep over their window (the ``n_fan_chunks`` loop).
+The consequent-only walk needed for compound lift (paper Eq. 1-4) runs
+fused inside the SAME kernel body, so a full-metric ``rule_search`` is one
+``pallas_call`` launch returning found/node/support/confidence/lift.
+
+``rule_search_pallas`` — the seed full-sweep kernel, kept as the benchmark
+baseline and as the fallback when no CSR offsets are available.  It
+broadcast-compares every query against the ENTIRE lex-sorted edge table at
+every step (O(E) compares per step, streamed through VMEM in BE-wide
+chunks), and returns per-node metrics only; compound lift needs a second
+consequent-only invocation by the ops wrapper.
+
+Metrics ride ON THE EDGES in both kernels (edge_conf/edge_sup/edge_lift
+are the child node's Step-3 annotations gathered at freeze time).
 """
 from __future__ import annotations
 
@@ -29,7 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BQ = 128    # queries per tile
-BE = 2048   # edge-table chunk per compare sweep
+BE = 2048   # edge-table chunk per compare sweep (full-sweep kernel)
+BF = 128    # fan-out tile: CSR bucket window granularity (fused kernel)
 
 
 def _make_kernel(width: int, n_chunks: int):
@@ -101,6 +112,18 @@ def _make_kernel(width: int, n_chunks: int):
     return kernel
 
 
+def _all_not_found(q: int, lift_key: str) -> dict:
+    """Result dict for degenerate searches (empty trie / zero-width query)."""
+    z = jnp.zeros((q,), jnp.float32)
+    return {
+        "found": jnp.zeros((q,), bool),
+        "node": jnp.full((q,), -1, jnp.int32),
+        "confidence": z,
+        "support": z,
+        lift_key: z,
+    }
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rule_search_pallas(
     edge_parent: jax.Array,   # int32 [E]
@@ -115,6 +138,10 @@ def rule_search_pallas(
 ):
     q, width = queries.shape
     e = edge_parent.shape[0]
+    if e == 0 or width == 0:
+        # Nothing to descend into: every rule is absent.  Returning here
+        # avoids tracing a zero-chunk kernel over an empty edge table.
+        return _all_not_found(q, "node_lift")
     qp = -q % BQ
     epad = -e % BE
 
@@ -167,4 +194,193 @@ def rule_search_pallas(
         "confidence": conf[:q, 0],
         "support": sup[:q, 0],
         "node_lift": nlift[:q, 0],
+    }
+
+
+# ----------------------------------------------------------------------
+# fused CSR kernel: bucket descent + consequent walk + compound lift
+# ----------------------------------------------------------------------
+def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
+    def kernel(
+        q_ref, al_ref,
+        co_ref, ei_ref, ec_ref, econf_ref, esup_ref, elift_ref,
+        node_ref, ok_ref, conf_ref, sup_ref, lift_ref,
+    ):
+        bq = q_ref.shape[0]
+        qs = q_ref[...]
+        ant_len = al_ref[...][:, 0]
+        co = co_ref[...][0]
+        ei = ei_ref[...][0]
+        ec = ec_ref[...][0]
+        ecf = econf_ref[...][0]
+        esp = esup_ref[...][0]
+        elf = elift_ref[...][0]
+
+        def bucket_scan(nodes, items):
+            """Child + edge metrics for (nodes, items) by scanning only each
+            node's CSR bucket, BF lanes at a time (chunked for hub nodes)."""
+            start = co[nodes]
+            count = co[nodes + 1] - start
+            child = jnp.full((bq,), -1, jnp.int32)
+            b_conf = jnp.zeros((bq,), jnp.float32)
+            b_sup = jnp.zeros((bq,), jnp.float32)
+            b_lift = jnp.zeros((bq,), jnp.float32)
+            for f in range(n_fan_chunks):
+                offs = (
+                    jax.lax.broadcasted_iota(jnp.int32, (bq, BF), 1)
+                    + f * BF
+                )
+                valid = offs < count[:, None]
+                idx = jnp.clip(start[:, None] + offs, 0, e_pad - 1)
+                match = valid & (ei[idx] == items[:, None])
+                child = jnp.maximum(
+                    child, jnp.max(jnp.where(match, ec[idx], -1), axis=1)
+                )
+                b_conf = jnp.maximum(
+                    b_conf, jnp.max(jnp.where(match, ecf[idx], 0.0), axis=1)
+                )
+                b_sup = jnp.maximum(
+                    b_sup, jnp.max(jnp.where(match, esp[idx], 0.0), axis=1)
+                )
+                b_lift = jnp.maximum(
+                    b_lift, jnp.max(jnp.where(match, elf[idx], 0.0), axis=1)
+                )
+            return child, b_conf, b_sup, b_lift
+
+        # main walk state (full rule path)
+        node = jnp.zeros((bq,), jnp.int32)
+        ok = jnp.ones((bq,), jnp.bool_)
+        conf = jnp.ones((bq,), jnp.float32)
+        sup = jnp.zeros((bq,), jnp.float32)
+        nlift = jnp.zeros((bq,), jnp.float32)
+        # fused consequent-only walk state (root-anchored, Eq. 1-4 lift)
+        cnode = jnp.zeros((bq,), jnp.int32)
+        cok = jnp.ones((bq,), jnp.bool_)
+        csup = jnp.zeros((bq,), jnp.float32)
+
+        for s in range(width):
+            item = qs[:, s]
+            has_item = item >= 0
+            in_cons = s >= ant_len
+
+            active = has_item & ok
+            child, e_conf, e_sup, e_lift = bucket_scan(
+                jnp.where(active, node, 0), item
+            )
+            hit = child >= 0
+            ok = jnp.where(active, hit, ok)
+            node = jnp.where(active & hit, child, node)
+            conf = jnp.where(active & hit & in_cons, conf * e_conf, conf)
+            sup = jnp.where(active & hit, e_sup, sup)
+            nlift = jnp.where(active & hit, e_lift, nlift)
+
+            c_active = has_item & in_cons & cok
+            cchild, _, c_sup, _ = bucket_scan(
+                jnp.where(c_active, cnode, 0), item
+            )
+            chit = cchild >= 0
+            cok = jnp.where(c_active, chit, cok)
+            cnode = jnp.where(c_active & chit, cchild, cnode)
+            csup = jnp.where(c_active & chit, c_sup, csup)
+
+        found = ok & (node > 0)
+        seq_len = jnp.sum((qs >= 0).astype(jnp.int32), axis=1)
+        single = (seq_len - ant_len) == 1
+        con_sup = jnp.where(cok & (cnode > 0), csup, 0.0)
+        conf_out = jnp.where(found, conf, 0.0)
+        lift = jnp.where(
+            single,
+            nlift,
+            jnp.where(con_sup > 0, conf / con_sup, 0.0),
+        )
+        node_ref[...] = jnp.where(found, node, -1)[:, None]
+        ok_ref[...] = found.astype(jnp.int32)[:, None]
+        conf_ref[...] = conf_out[:, None]
+        sup_ref[...] = jnp.where(found, sup, 0.0)[:, None]
+        lift_ref[...] = jnp.where(found, lift, 0.0)[:, None]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_fanout", "interpret")
+)
+def rule_search_fused_pallas(
+    child_offsets: jax.Array,  # int32 [N+1] CSR buckets over the edge table
+    edge_item: jax.Array,      # int32 [E] item-sorted within each bucket
+    edge_child: jax.Array,     # int32 [E]
+    edge_conf: jax.Array,      # f32 [E]
+    edge_sup: jax.Array,       # f32 [E]
+    edge_lift: jax.Array,      # f32 [E]
+    queries: jax.Array,        # int32 [Q, L]
+    ant_len: jax.Array,        # int32 [Q]
+    max_fanout: int = 0,       # static: widest bucket (sizes the window)
+    interpret: bool = False,
+):
+    """Single-launch rule search with full paper metrics (compound lift
+    included): CSR bucket descent + fused consequent-only walk."""
+    q, width = queries.shape
+    e = edge_item.shape[0]
+    if e == 0 or width == 0:
+        return _all_not_found(q, "lift")
+
+    fan = max(int(max_fanout), 1)
+    n_fan_chunks = -(-fan // BF)
+
+    qp = -q % BQ
+    queries_p = jnp.pad(
+        queries.astype(jnp.int32), ((0, qp), (0, 0)), constant_values=-1
+    )
+    al_p = jnp.pad(ant_len.astype(jnp.int32), (0, qp)).reshape(-1, 1)
+
+    e_pad = e + (-e % BF)
+    co_len = child_offsets.shape[0]
+    co_pad = co_len + (-co_len % BF)
+    co = jnp.pad(
+        child_offsets.astype(jnp.int32), (0, co_pad - co_len),
+        constant_values=e,
+    ).reshape(1, -1)
+
+    def pad_e(a, fill):
+        return jnp.pad(a, (0, e_pad - e), constant_values=fill).reshape(1, -1)
+
+    ei = pad_e(edge_item.astype(jnp.int32), -7)
+    ec = pad_e(edge_child.astype(jnp.int32), -1)
+    ecf = pad_e(edge_conf.astype(jnp.float32), 0.0)
+    esp = pad_e(edge_sup.astype(jnp.float32), 0.0)
+    elf = pad_e(edge_lift.astype(jnp.float32), 0.0)
+
+    qq = queries_p.shape[0]
+    grid = (qq // BQ,)
+    co_spec = pl.BlockSpec((1, co_pad), lambda qi: (0, 0))
+    edge_spec = pl.BlockSpec((1, e_pad), lambda qi: (0, 0))
+    out_specs = [
+        pl.BlockSpec((BQ, 1), lambda qi: (qi, 0)) for _ in range(5)
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((qq, 1), jnp.int32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.int32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+    ]
+    node, okv, conf, sup, lift = pl.pallas_call(
+        _make_fused_kernel(width, n_fan_chunks, e_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BQ, width), lambda qi: (qi, 0)),
+            pl.BlockSpec((BQ, 1), lambda qi: (qi, 0)),
+            co_spec, edge_spec, edge_spec,
+            edge_spec, edge_spec, edge_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(queries_p, al_p, co, ei, ec, ecf, esp, elf)
+    return {
+        "found": okv[:q, 0].astype(bool),
+        "node": node[:q, 0],
+        "confidence": conf[:q, 0],
+        "support": sup[:q, 0],
+        "lift": lift[:q, 0],
     }

@@ -10,20 +10,29 @@ all-reduce), while ``model`` stays intra-pod on ICI.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types on the mesh
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto everywhere
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Degenerate 1×1 mesh over the real local device (tests, examples)."""
     n = jax.device_count()
-    return jax.make_mesh(
-        (1, n), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return _make_mesh((1, n), ("data", "model"))

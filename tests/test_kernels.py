@@ -9,13 +9,18 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core.array_trie import csr_offsets_from_edges
 from repro.kernels.ref import (
+    rule_search_fused_ref,
     rule_search_ref,
     support_count_ref,
     trie_reduce_ref,
 )
 from repro.kernels.support_count import support_count_pallas
-from repro.kernels.rule_search import rule_search_pallas
+from repro.kernels.rule_search import (
+    rule_search_fused_pallas,
+    rule_search_pallas,
+)
 from repro.kernels.trie_reduce import trie_reduce_pallas
 from repro.kernels.ops import (
     dense_from_bitmaps,
@@ -181,6 +186,49 @@ def test_rule_search_sweep(n_nodes, n_items, q, width):
         np.asarray(out["node"]), np.asarray(ref["node"])
     )
     for k in ("support", "confidence", "node_lift"):
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(ref[k]), rtol=1e-6
+        )
+
+
+@pytest.mark.parametrize(
+    "n_nodes,n_items,q,width",
+    [(5, 4, 3, 2), (50, 12, 40, 5), (200, 30, 129, 7), (512, 64, 256, 4)],
+)
+def test_rule_search_fused_sweep(n_nodes, n_items, q, width):
+    """Fused CSR kernel ≡ layout-agnostic full-table reference (incl. the
+    compound lift it computes in-kernel)."""
+    rng = np.random.RandomState(n_nodes + q)
+    arrs = _random_trie_arrays(rng, n_nodes, n_items)
+    queries = rng.randint(-1, n_items, size=(q, width)).astype(np.int32)
+    ant_len = rng.randint(0, width + 1, size=(q,)).astype(np.int32)
+    offsets, max_fanout = csr_offsets_from_edges(
+        arrs["edge_parent"], n_nodes
+    )
+
+    args = [
+        jnp.asarray(arrs[k])
+        for k in (
+            "edge_item", "edge_child",
+            "edge_conf", "edge_sup", "edge_lift",
+        )
+    ]
+    out = rule_search_fused_pallas(
+        jnp.asarray(offsets), *args,
+        jnp.asarray(queries), jnp.asarray(ant_len),
+        max_fanout=max_fanout, interpret=True,
+    )
+    ref = rule_search_fused_ref(
+        jnp.asarray(arrs["edge_parent"]), *args,
+        jnp.asarray(queries), jnp.asarray(ant_len),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out["found"]), np.asarray(ref["found"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out["node"]), np.asarray(ref["node"])
+    )
+    for k in ("support", "confidence", "lift"):
         np.testing.assert_allclose(
             np.asarray(out[k]), np.asarray(ref[k]), rtol=1e-6
         )

@@ -3,6 +3,9 @@ ordered-ngram trie identities (paper Eq. 1 on the serving side)."""
 import math
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.arm.rulegen import prefix_split_rules

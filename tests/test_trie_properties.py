@@ -6,6 +6,9 @@ structural guarantees regardless of the data.
 import math
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.arm.rulegen import prefix_split_rules
