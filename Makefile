@@ -1,21 +1,48 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench-search bench
+.PHONY: test lint bench-smoke bench-gate bench-baseline bench-search \
+	bench-topk bench
 
 # tier-1 verification (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
-# tiny-trie smoke of the search benchmarks; writes to a separate JSON so
-# it never clobbers the full-run perf-trajectory artifact
+# static checks (ruff config lives in pyproject.toml)
+lint:
+	$(PY) -m ruff check src tests benchmarks examples
+
+# tiny-trie smoke of the search + ranked-extraction benchmarks; writes to
+# separate JSONs so it never clobbers the full-run perf-trajectory artifacts
 bench-smoke:
 	$(PY) -m benchmarks.run --only search --smoke \
-		--json-out BENCH_rule_search_smoke.json
+		--json-out BENCH_rule_search_smoke.json --json-out-topk ''
+	$(PY) -m benchmarks.run --only topk --smoke \
+		--json-out '' --json-out-topk BENCH_topk_smoke.json
+
+# CI bench gate: fresh smoke run vs the committed baseline
+# (benchmarks/baselines/, ratio-based: fails on >2x relative slowdown of
+# the fused rule-search kernel)
+bench-gate:
+	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
+		--json-out /tmp/bench_fresh_smoke.json --json-out-topk ''
+	$(PY) benchmarks/check_regression.py \
+		--fresh /tmp/bench_fresh_smoke.json
+
+# refresh the committed gate baseline (explicit — bench-smoke never
+# touches it)
+bench-baseline:
+	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
+		--json-out benchmarks/baselines/rule_search_smoke.json \
+		--json-out-topk ''
 
 # full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
 bench-search:
 	$(PY) -m benchmarks.run --only rule_search_kernels
+
+# segmented top-k rank kernel vs lax.top_k vs full-sort oracles
+bench-topk:
+	$(PY) -m benchmarks.run --only topk
 
 # every paper figure + kernel benches
 bench:

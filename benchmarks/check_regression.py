@@ -1,0 +1,96 @@
+"""CI bench gate: fail on fused rule-search kernel regressions.
+
+Compares a fresh ``--smoke`` run of ``bench_rule_search_kernels`` against
+the committed baseline JSON.  The gate is RATIO-based so it tolerates
+hardware differences between the baseline machine and the CI runner: what
+is compared is the fused kernel's speedup over the seed full-sweep kernel
+*measured within the same run* (``speedup_fused_vs_sweep``), not absolute
+microseconds.  A fresh speedup below ``baseline / max-ratio`` for any
+matching (n_edges, batch) config fails the gate.
+
+The committed baseline lives at ``benchmarks/baselines/rule_search_smoke.json``
+and is refreshed only by the explicit ``make bench-baseline`` target —
+routine ``make bench-smoke`` runs write elsewhere and can never silently
+rebase the gate.
+
+Usage (see ``make bench-gate``)::
+
+    python -m benchmarks.run --only rule_search_kernels --smoke \
+        --json-out /tmp/bench_fresh_smoke.json --json-out-topk ''
+    python benchmarks/check_regression.py \
+        --fresh /tmp/bench_fresh_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_results(path: str):
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"bench-gate: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    return {
+        (r["n_edges"], r["batch"]): r for r in payload.get("results", [])
+    }
+
+
+def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
+    baseline = load_results(baseline_path)
+    fresh = load_results(fresh_path)
+    common = sorted(set(baseline) & set(fresh))
+    if not common:
+        print(
+            f"bench-gate: no overlapping (n_edges, batch) configs between "
+            f"{baseline_path} and {fresh_path}", file=sys.stderr,
+        )
+        return 2
+    failures = 0
+    for key in common:
+        base = float(baseline[key]["speedup_fused_vs_sweep"])
+        new = float(fresh[key]["speedup_fused_vs_sweep"])
+        floor = base / max_ratio
+        verdict = "OK" if new >= floor else "REGRESSION"
+        print(
+            f"bench-gate E={key[0]} Q={key[1]}: fused_vs_sweep "
+            f"baseline=x{base:.2f} fresh=x{new:.2f} "
+            f"floor=x{floor:.2f} -> {verdict}"
+        )
+        if new < floor:
+            failures += 1
+    if failures:
+        print(
+            f"bench-gate: {failures}/{len(common)} config(s) regressed "
+            f">{max_ratio:.1f}x vs {baseline_path}", file=sys.stderr,
+        )
+        return 1
+    print(f"bench-gate: {len(common)} config(s) within {max_ratio:.1f}x")
+    return 0
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--baseline",
+        default="benchmarks/baselines/rule_search_smoke.json",
+        help="committed smoke baseline JSON",
+    )
+    parser.add_argument(
+        "--fresh", required=True,
+        help="freshly produced smoke JSON to gate",
+    )
+    parser.add_argument(
+        "--max-ratio", type=float, default=2.0,
+        help="maximum tolerated relative slowdown of the fused kernel's "
+             "in-run speedup (default 2.0)",
+    )
+    args = parser.parse_args()
+    sys.exit(check(args.baseline, args.fresh, args.max_ratio))
+
+
+if __name__ == "__main__":
+    main()

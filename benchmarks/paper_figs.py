@@ -21,10 +21,10 @@ from repro.core.array_trie import (
     DeviceTrie,
     FrozenTrie,
     batched_rule_search,
-    csr_offsets_from_edges,
     top_n_nodes,
     traverse_reduce,
 )
+from repro.core.synthetic import synthetic_csr_trie, synthetic_search_queries
 
 from .common import (
     Row,
@@ -40,6 +40,7 @@ MINSUP_SWEEP = (0.005, 0.0065, 0.008, 0.0095, 0.011, 0.0135)
 # knobs set by benchmarks.run before dispatch
 SMOKE = False                            # tiny sizes for CI smoke runs
 JSON_OUT = "BENCH_rule_search.json"      # machine-readable perf trajectory
+JSON_OUT_TOPK = "BENCH_topk.json"        # ranked-extraction perf trajectory
 
 # (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
 # with E, so the largest trie runs a single batch size.  Q=2048 is the
@@ -290,70 +291,9 @@ def bench_batched_search() -> List[Row]:
 # ----------------------------------------------------------------------
 # beyond-paper: seed full-sweep kernel vs CSR fused kernel vs jnp oracles
 # ----------------------------------------------------------------------
-def _synthetic_csr_trie(n_edges: int, root_fanout: int = 0,
-                        fanout: int = 8, seed: int = 0):
-    """Deterministic synthetic trie at a target edge count: a hub root with
-    ``root_fanout`` children (exercises the chunked bucket sweep) over a
-    ``fanout``-ary body.  Construction is O(E) numpy; edges come out
-    (parent, item)-sorted by construction.
-
-    The default root fanout scales with trie size (like the number of
-    frequent single items scales with a shrinking minsup), capped at 256.
-    """
-    n_nodes = n_edges + 1
-    parent = np.full(n_nodes, -1, np.int32)
-    item = np.full(n_nodes, -1, np.int32)
-    if root_fanout <= 0:
-        root_fanout = min(256, max(16, n_edges // 16))
-    r = min(root_fanout, n_edges)
-    first = np.arange(1, r + 1)
-    parent[first] = 0
-    item[first] = (first - 1).astype(np.int32)
-    rest = np.arange(r + 1, n_nodes)
-    parent[rest] = ((rest - r - 1) // fanout + 1).astype(np.int32)
-    item[rest] = ((rest - r - 1) % fanout).astype(np.int32)
-    depth = np.zeros(n_nodes, np.int32)
-    for nid in range(1, n_nodes):
-        depth[nid] = depth[parent[nid]] + 1
-    rng = np.random.RandomState(seed)
-    conf = (rng.rand(n_nodes) * 0.9 + 0.05).astype(np.float32)
-    sup = (rng.rand(n_nodes) * 0.9 + 0.05).astype(np.float32)
-    lift = (rng.rand(n_nodes) * 2).astype(np.float32)
-    edge_parent = parent[1:].copy()
-    edge_item = item[1:].copy()
-    edge_child = np.arange(1, n_nodes, dtype=np.int32)
-    offsets, max_fanout = csr_offsets_from_edges(edge_parent, n_nodes)
-    return {
-        "node_parent": parent, "node_item": item, "node_depth": depth,
-        "confidence": conf, "support": sup, "lift": lift,
-        "edge_parent": edge_parent, "edge_item": edge_item,
-        "edge_child": edge_child,
-        "child_offsets": offsets, "max_fanout": max_fanout,
-    }
-
-
-def _search_queries(arrs, q: int, width: int, seed: int = 1):
-    """Half real root→node paths (random antecedent split), half junk."""
-    rng = np.random.RandomState(seed)
-    n_nodes = arrs["node_parent"].shape[0]
-    n_items = int(arrs["edge_item"].max()) + 1
-    queries = np.full((q, width), -1, np.int32)
-    ant_len = np.zeros((q,), np.int32)
-    for row in range(q):
-        if row % 2 == 0 and n_nodes > 1:
-            nid = rng.randint(1, n_nodes)
-            path = []
-            while nid > 0 and len(path) < width:
-                path.append(int(arrs["node_item"][nid]))
-                nid = int(arrs["node_parent"][nid])
-            path = path[::-1]
-            queries[row, : len(path)] = path
-            ant_len[row] = rng.randint(0, len(path) + 1)
-        else:
-            k = rng.randint(1, width + 1)
-            queries[row, :k] = rng.randint(0, n_items, size=k)
-            ant_len[row] = rng.randint(0, k + 1)
-    return queries, ant_len
+# (synthetic fixtures shared with the tests: repro.core.synthetic)
+_synthetic_csr_trie = synthetic_csr_trie
+_search_queries = synthetic_search_queries
 
 
 def bench_rule_search_kernels() -> List[Row]:
@@ -461,5 +401,131 @@ def bench_rule_search_kernels() -> List[Row]:
             "results": results,
         }
         with open(JSON_OUT, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# beyond-paper: segmented top-k rank kernel vs lax.top_k vs a full sort
+# (the paper's "sorting is the base for many knowledge discovery methods"
+#  workload, over the DFS-contiguous layout)
+# ----------------------------------------------------------------------
+TOPK_SIZES = (10_000, 100_000, 1_000_000)   # n_nodes
+TOPK_SIZES_SMOKE = (2_048,)
+TOPK_KS = (10, 100)
+TOPK_KS_SMOKE = (10,)
+TOPK_METRICS = ("confidence", "lift", "leverage", "conviction")
+TOPK_METRICS_SMOKE = ("confidence",)
+
+
+def bench_topk_rank() -> List[Row]:
+    """Segmented top-k kernel vs the ``lax.top_k`` oracle vs a FULL-sort
+    oracle, whole-trie and antecedent-prefix-subtree scoped, across
+    N x k x metric.  Asserts kernel/oracle bit-parity at every config
+    (the acceptance evidence at 1e5/1e6 nodes) and emits CSV rows plus
+    the machine-readable ``BENCH_topk.json`` perf-trajectory file."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.metrics_inkernel import rank_score
+    from repro.kernels.rank import topk_rank_pallas
+    from repro.kernels.ref import topk_rank_ref
+
+    interp = jax.default_backend() != "tpu"
+    sizes = TOPK_SIZES_SMOKE if SMOKE else TOPK_SIZES
+    ks = TOPK_KS_SMOKE if SMOKE else TOPK_KS
+    metrics = TOPK_METRICS_SMOKE if SMOKE else TOPK_METRICS
+
+    @functools.partial(jax.jit, static_argnames=("k", "metric"))
+    def full_sort_topk(sup, conf, lif, dep, lo, hi, *, k, metric):
+        """The flat-table way: score everything, run a FULL descending
+        sort, slice the head."""
+        n = sup.shape[0]
+        score = rank_score(metric, sup, conf, lif)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        masked = jnp.where(
+            (pos >= lo) & (pos < hi) & (dep >= 1), score, -jnp.inf
+        )
+        order = jnp.argsort(-masked)
+        idx = order[:k]
+        return masked[idx], idx
+
+    rows: List[Row] = []
+    results = []
+    for n_nodes in sizes:
+        arrs = synthetic_csr_trie(n_nodes - 1)
+        d2n = arrs["dfs_to_node"]
+        cols = tuple(
+            jnp.asarray(arrs[c][d2n])
+            for c in ("support", "confidence", "lift", "node_depth")
+        )
+        # antecedent-prefix range: the first hub child's subtree
+        p_lo = int(arrs["dfs_order"][1])
+        p_hi = p_lo + int(arrs["subtree_size"][1])
+        for k in ks:
+            for metric in metrics:
+                kv, kp = topk_rank_pallas(
+                    *cols, 0, n_nodes, k=k, metric=metric, interpret=interp
+                )
+                rv, rp = topk_rank_ref(*cols, 0, n_nodes, k=k, metric=metric)
+                np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+                np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+
+                lanes = {
+                    "segmented_kernel": lambda: topk_rank_pallas(
+                        *cols, 0, n_nodes, k=k, metric=metric,
+                        interpret=interp,
+                    )[0].block_until_ready(),
+                    "topk_oracle": lambda: topk_rank_ref(
+                        *cols, 0, n_nodes, k=k, metric=metric
+                    )[0].block_until_ready(),
+                    "full_sort": lambda: full_sort_topk(
+                        *cols, 0, n_nodes, k=k, metric=metric
+                    )[0].block_until_ready(),
+                    "segmented_kernel_prefix": lambda: topk_rank_pallas(
+                        *cols, p_lo, p_hi, k=k, metric=metric,
+                        interpret=interp,
+                    )[0].block_until_ready(),
+                    "full_sort_prefix": lambda: full_sort_topk(
+                        *cols, p_lo, p_hi, k=k, metric=metric
+                    )[0].block_until_ready(),
+                }
+                n_reps = 3 if n_nodes >= 1_000_000 else 5
+                us = {
+                    name: time_per_call_median(fn, n=n_reps, warmup=2) * 1e6
+                    for name, fn in lanes.items()
+                }
+                speedup = us["full_sort"] / us["segmented_kernel"]
+                p_speedup = (
+                    us["full_sort_prefix"] / us["segmented_kernel_prefix"]
+                )
+                results.append({
+                    "n_nodes": n_nodes,
+                    "k": k,
+                    "metric": metric,
+                    "prefix_range": [p_lo, p_hi],
+                    "us_per_call": us,
+                    "speedup_kernel_vs_fullsort": speedup,
+                    "speedup_kernel_vs_fullsort_prefix": p_speedup,
+                    "kernel_oracle_bit_identical": True,
+                })
+                for name, val in us.items():
+                    rows.append(Row(
+                        f"topk_N{n_nodes}_k{k}_{metric}_{name}", val,
+                        f"kernel_vs_fullsort=x{speedup:.2f};"
+                        f"prefix=x{p_speedup:.2f}",
+                    ))
+    if JSON_OUT_TOPK:
+        payload = {
+            "bench": "topk_rank",
+            "backend": jax.default_backend(),
+            "interpret": interp,
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "results": results,
+        }
+        with open(JSON_OUT_TOPK, "w") as f:
             json.dump(payload, f, indent=2)
     return rows

@@ -23,6 +23,7 @@ BENCHES = [
     ("compression", paper_figs.bench_compression),
     ("batched_search", paper_figs.bench_batched_search),
     ("rule_search_kernels", paper_figs.bench_rule_search_kernels),
+    ("topk_rank_kernel", paper_figs.bench_topk_rank),
 ]
 
 
@@ -38,9 +39,15 @@ def main() -> None:
         help="path for the rule-search perf-trajectory JSON "
              "('' disables writing)",
     )
+    parser.add_argument(
+        "--json-out-topk", default="BENCH_topk.json",
+        help="path for the ranked-extraction perf-trajectory JSON "
+             "('' disables writing)",
+    )
     args = parser.parse_args()
     paper_figs.SMOKE = args.smoke
     paper_figs.JSON_OUT = args.json_out
+    paper_figs.JSON_OUT_TOPK = args.json_out_topk
 
     print("name,us_per_call,derived")
     failed = []

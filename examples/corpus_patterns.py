@@ -7,7 +7,6 @@ Token windows become transactions; the mined trie surfaces boilerplate
 "terms and conditions..." template), and the compression statistics show
 the prefix-sharing win over a flat rule table.
 """
-import numpy as np
 
 from repro.core.builder import build_flat_table
 from repro.data.corpus_rules import boilerplate_paths, mine_corpus_rules

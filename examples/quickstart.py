@@ -87,6 +87,21 @@ def main():
     print(f"traverse_reduce: {int(agg['n_rules'])} rules, "
           f"mean conf {float(agg['mean_conf']):.3f}")
 
+    # --- segmented ranked extraction (DFS-contiguous subtrees) ----------
+    from repro.kernels import top_k_rules
+
+    best = top_k_rules(fz, 5, metric="conviction", min_depth=2)
+    print("\ntop-5 rules by conviction (segmented rank kernel):")
+    for nid, val in zip(np.asarray(best["node"]), np.asarray(best["values"])):
+        if nid < 0:
+            break
+        print(f"  {fz.path_items(int(nid))}  conviction={float(val):.2f}")
+    anchor = int(fz.item_order[0])  # most frequent item
+    scoped = top_k_rules(fz, 3, metric="lift", prefix=(anchor,))
+    live = int(np.sum(np.asarray(scoped["node"]) >= 0))
+    print(f"top-3 by lift under antecedent prefix ({anchor},): "
+          f"{live} rules (one contiguous DFS range)")
+
 
 if __name__ == "__main__":
     main()

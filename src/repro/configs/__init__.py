@@ -1,7 +1,6 @@
 """Architecture registry: ``--arch <id>`` → ModelConfig."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
 
 from .base import ModelConfig, ShapeConfig, SHAPES, get_shape
 

@@ -11,7 +11,7 @@ and suffix layers are unrolled (e.g. DeepSeek-V3's first-3 dense layers).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import List, Optional, Tuple
 
 

@@ -13,6 +13,7 @@ from .array_trie import (
     batched_rule_search,
     child_lookup,
     csr_offsets_from_edges,
+    dfs_layout,
     reconstruct_paths,
     top_n_nodes,
     traverse_reduce,
@@ -31,6 +32,7 @@ __all__ = [
     "batched_rule_search",
     "child_lookup",
     "csr_offsets_from_edges",
+    "dfs_layout",
     "reconstruct_paths",
     "top_n_nodes",
     "traverse_reduce",

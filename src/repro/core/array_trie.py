@@ -7,6 +7,7 @@ the pointer trie is frozen once into flat arrays
     support / confidence / lift                   float32[N]   (metric columns)
     edge_parent / edge_item / edge_child          int32[E]     (sorted lex)
     child_offsets                                 int32[N+1]   (CSR buckets)
+    dfs_order / subtree_size / dfs_to_node        int32[N]     (DFS layout)
 
 ``child_offsets`` is the CSR row index over the lex-sorted edge table: node
 ``p``'s outgoing edges occupy ``edge_*[child_offsets[p]:child_offsets[p+1]]``,
@@ -25,7 +26,15 @@ Every paper operation becomes a vectorized array program:
                     (paper Eq. 1-4).
 
 Node ids are assigned in BFS order at freeze time so level-order traversal is
-contiguous.  The same CSR bucket descent runs inside the fused Pallas kernel
+contiguous.  On top of that, freeze emits a DFS pre-order relabeling
+(``dfs_order``: node id -> pre-order position, ``subtree_size``: node id ->
+subtree node count, ``dfs_to_node``: the inverse permutation), following the
+DFS-contiguous relabeling of memory-efficient trie mining
+(arXiv:2202.06834): every antecedent-prefix subtree is the contiguous
+position range ``[dfs_order[v], dfs_order[v] + subtree_size[v])``, which is
+what the segmented top-k rank kernel (``repro.kernels.rank``) masks to.
+
+The same CSR bucket descent runs inside the fused Pallas kernel
 (``repro.kernels.rule_search``); this module is the jnp reference/production
 path for CPU/GPU/TPU-without-kernel.  A ``DeviceTrie`` with
 ``child_offsets=None`` falls back to the seed full-table lexicographic
@@ -66,6 +75,82 @@ def csr_offsets_from_edges(
     return offsets, max_fanout
 
 
+def dfs_layout(
+    node_parent: np.ndarray,
+    node_depth: np.ndarray,
+    edge_parent: np.ndarray,
+    edge_child: np.ndarray,
+    child_offsets: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """DFS pre-order relabeling of a frozen trie (vectorized, host-side).
+
+    Children are visited in CSR bucket order (item-sorted), so the DFS
+    position order is deterministic.  Returns
+
+        dfs_order     int32[N]  node id -> pre-order position (root = 0)
+        subtree_size  int32[N]  node id -> |subtree(node)| (incl. itself)
+        dfs_to_node   int32[N]  pre-order position -> node id (inverse perm)
+
+    and guarantees node ``v``'s subtree occupies exactly the contiguous
+    position range ``[dfs_order[v], dfs_order[v] + subtree_size[v])``.
+
+    Vectorized per depth level instead of a per-node stack walk:
+    subtree sizes accumulate bottom-up level by level, and a node's
+    pre-order position is ``pos(parent) + 1 + sum(subtree sizes of earlier
+    siblings)`` where the sibling sum is an exclusive segmented cumsum over
+    the CSR buckets.  Level membership comes from one stable depth argsort
+    (O(N log N) total), so chain-shaped tries stay linear-ish rather than
+    O(N * max_depth).
+    """
+    node_parent = np.asarray(node_parent, np.int64)
+    node_depth = np.asarray(node_depth, np.int64)
+    edge_parent = np.asarray(edge_parent, np.int64)
+    edge_child = np.asarray(edge_child, np.int64)
+    child_offsets = np.asarray(child_offsets, np.int64)
+    n = node_parent.shape[0]
+    empty = np.zeros((0,), np.int32)
+    if n == 0:
+        return empty, empty, empty
+
+    max_depth = int(node_depth.max()) if n else 0
+    # node ids grouped by depth: by_depth[bounds[d]:bounds[d+1]] = level d
+    by_depth = np.argsort(node_depth, kind="stable")
+    bounds = np.searchsorted(
+        node_depth[by_depth], np.arange(max_depth + 2)
+    )
+
+    subtree_size = np.ones((n,), np.int64)
+    for d in range(max_depth, 0, -1):
+        nids = by_depth[bounds[d]:bounds[d + 1]]
+        np.add.at(subtree_size, node_parent[nids], subtree_size[nids])
+
+    # Exclusive prefix of subtree sizes within each CSR bucket = the number
+    # of pre-order slots consumed by a child's earlier siblings.
+    sizes = subtree_size[edge_child]
+    cum = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    earlier_siblings = cum - cum[child_offsets[edge_parent]]
+
+    # edges grouped by child depth, for the top-down position sweep
+    e_depth = node_depth[edge_child]
+    e_by_depth = np.argsort(e_depth, kind="stable")
+    e_bounds = np.searchsorted(
+        e_depth[e_by_depth], np.arange(max_depth + 2)
+    )
+    pos = np.zeros((n,), np.int64)
+    for d in range(1, max_depth + 1):
+        eids = e_by_depth[e_bounds[d]:e_bounds[d + 1]]
+        pos[edge_child[eids]] = (
+            pos[edge_parent[eids]] + 1 + earlier_siblings[eids]
+        )
+    dfs_to_node = np.zeros((n,), np.int32)
+    dfs_to_node[pos] = np.arange(n, dtype=np.int32)
+    return (
+        pos.astype(np.int32),
+        subtree_size.astype(np.int32),
+        dfs_to_node,
+    )
+
+
 @dataclass
 class FrozenTrie:
     """Immutable SoA trie; arrays are numpy on host, moved to jnp lazily."""
@@ -83,11 +168,19 @@ class FrozenTrie:
     item_rank: np.ndarray      # int32[max_item+1] item -> frequency rank
     child_offsets: Optional[np.ndarray] = None  # int32[N+1] CSR buckets
     max_fanout: int = 0        # widest child bucket (bounds per-step scans)
+    dfs_order: Optional[np.ndarray] = None     # int32[N] node -> DFS pos
+    subtree_size: Optional[np.ndarray] = None  # int32[N] node -> |subtree|
+    dfs_to_node: Optional[np.ndarray] = None   # int32[N] DFS pos -> node
 
     def __post_init__(self):
         if self.child_offsets is None:
             self.child_offsets, self.max_fanout = csr_offsets_from_edges(
                 self.edge_parent, self.node_item.shape[0]
+            )
+        if self.dfs_order is None:
+            self.dfs_order, self.subtree_size, self.dfs_to_node = dfs_layout(
+                self.node_parent, self.node_depth,
+                self.edge_parent, self.edge_child, self.child_offsets,
             )
 
     @property
@@ -207,6 +300,9 @@ class FrozenTrie:
             edge_child=jnp.asarray(self.edge_child),
             child_offsets=jnp.asarray(self.child_offsets),
             max_fanout=self.max_fanout,
+            dfs_order=jnp.asarray(self.dfs_order),
+            subtree_size=jnp.asarray(self.subtree_size),
+            dfs_to_node=jnp.asarray(self.dfs_to_node),
         )
 
     def path_items(self, node_id: int) -> Tuple[Item, ...]:
@@ -226,7 +322,9 @@ class DeviceTrie:
     ``child_offsets`` is the CSR row index over the edge table; ``None``
     selects the seed full-table binary-search path.  ``max_fanout`` is
     static metadata (pytree aux) so jitted callers can size the bucket
-    search at trace time.
+    search at trace time.  ``dfs_order`` / ``subtree_size`` /
+    ``dfs_to_node`` carry the DFS-contiguous relabeling consumed by the
+    segmented top-k rank path (``None`` on tries frozen without one).
     """
 
     node_item: jax.Array
@@ -240,6 +338,9 @@ class DeviceTrie:
     edge_child: jax.Array
     child_offsets: Optional[jax.Array] = None
     max_fanout: int = 0
+    dfs_order: Optional[jax.Array] = None
+    subtree_size: Optional[jax.Array] = None
+    dfs_to_node: Optional[jax.Array] = None
 
     def tree_flatten(self):
         fields = (
@@ -247,12 +348,17 @@ class DeviceTrie:
             self.support, self.confidence, self.lift,
             self.edge_parent, self.edge_item, self.edge_child,
             self.child_offsets,
+            self.dfs_order, self.subtree_size, self.dfs_to_node,
         )
         return fields, self.max_fanout
 
     @classmethod
     def tree_unflatten(cls, aux, fields):
-        return cls(*fields[:9], child_offsets=fields[9], max_fanout=aux)
+        return cls(
+            *fields[:9], child_offsets=fields[9], max_fanout=aux,
+            dfs_order=fields[10], subtree_size=fields[11],
+            dfs_to_node=fields[12],
+        )
 
 
 # ----------------------------------------------------------------------
@@ -406,7 +512,9 @@ def batched_rule_search(
     conf = jnp.where(found, conf, 0.0)
     # Single-item consequent: the final node's Step-3 lift IS the rule lift
     # (conf == node confidence there).  Compound consequents divide by the
-    # consequent-path Support when that path exists in the trie.
+    # consequent-path Support when that path exists in the trie.  Same
+    # Eq. 1-4 select as kernels/metrics_inkernel.compound_lift (kept local:
+    # core must not depend on the kernels package).
     seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
     single = (seq_len - ant_len) == 1
     node_lift = jnp.where(found, trie.lift[jnp.maximum(node, 0)], 0.0)
@@ -441,13 +549,18 @@ def traverse_reduce(trie: DeviceTrie):
     """The traversal benchmark op: visit every rule once and reduce its
     metrics (sum/max/count over the node columns)."""
     mask = trie.node_depth > 0
+    n = jnp.sum(mask)
     sup = jnp.where(mask, trie.support, 0.0)
     conf = jnp.where(mask, trie.confidence, 0.0)
     return {
-        "n_rules": jnp.sum(mask),
+        "n_rules": n,
         "support_sum": jnp.sum(sup),
-        "confidence_max": jnp.max(jnp.where(mask, trie.confidence, -jnp.inf)),
-        "mean_conf": jnp.sum(conf) / jnp.maximum(jnp.sum(mask), 1),
+        # all-padding tries report 0.0, not the -inf mask sentinel
+        # (same contract as the trie_reduce kernel's empty guard)
+        "confidence_max": jnp.where(
+            n > 0, jnp.max(jnp.where(mask, trie.confidence, -jnp.inf)), 0.0
+        ),
+        "mean_conf": jnp.sum(conf) / jnp.maximum(n, 1),
     }
 
 

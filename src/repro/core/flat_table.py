@@ -13,7 +13,7 @@ the Fig. 8-13 reproductions meaningful.
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple
+from typing import FrozenSet, Iterator, List, Optional, Sequence, Tuple
 
 from .metrics import Item, Rule, RuleMetrics
 

@@ -1,0 +1,100 @@
+"""Deterministic synthetic tries at target sizes (benchmark / test fixtures).
+
+Construction is O(E) numpy — no pointer trie, no python stack — so million-
+edge tries freeze in milliseconds.  Edges come out (parent, item)-sorted by
+construction, and the dict mirrors ``FrozenTrie``'s array fields (CSR child
+buckets + DFS-contiguous relabeling included), so the same fixture feeds the
+rule-search kernels, the rank kernels, and their jnp oracles.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .array_trie import csr_offsets_from_edges, dfs_layout
+
+
+def synthetic_csr_trie(
+    n_edges: int, root_fanout: int = 0, fanout: int = 8, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """Synthetic trie at a target edge count: a hub root with
+    ``root_fanout`` children (exercises the chunked bucket sweep) over a
+    ``fanout``-ary body.
+
+    The default root fanout scales with trie size (like the number of
+    frequent single items scales with a shrinking minsup), capped at 256.
+    """
+    n_nodes = n_edges + 1
+    parent = np.full(n_nodes, -1, np.int32)
+    item = np.full(n_nodes, -1, np.int32)
+    if root_fanout <= 0:
+        root_fanout = min(256, max(16, n_edges // 16))
+    r = min(root_fanout, n_edges)
+    first = np.arange(1, r + 1)
+    parent[first] = 0
+    item[first] = (first - 1).astype(np.int32)
+    rest = np.arange(r + 1, n_nodes)
+    parent[rest] = ((rest - r - 1) // fanout + 1).astype(np.int32)
+    item[rest] = ((rest - r - 1) % fanout).astype(np.int32)
+    # Depth, vectorized level by level (the structure is regular: children
+    # of the contiguous id range [lo, hi) are the contiguous body range
+    # [r+1 + (lo-1)*fanout, r+1 + (hi-1)*fanout) since body node ``nid``'s
+    # parent is (nid-r-1)//fanout + 1, monotone in nid).
+    depth = np.zeros(n_nodes, np.int32)
+    depth[1:r + 1] = 1
+    lo, hi, d = 1, r + 1, 1
+    while True:
+        clo = max(r + 1 + (lo - 1) * fanout, r + 1)
+        chi = min(r + 1 + (hi - 1) * fanout, n_nodes)
+        if clo >= chi:
+            break
+        d += 1
+        depth[clo:chi] = d
+        lo, hi = clo, chi
+    rng = np.random.RandomState(seed)
+    conf = (rng.rand(n_nodes) * 0.9 + 0.05).astype(np.float32)
+    sup = (rng.rand(n_nodes) * 0.9 + 0.05).astype(np.float32)
+    lift = (rng.rand(n_nodes) * 2).astype(np.float32)
+    edge_parent = parent[1:].copy()
+    edge_item = item[1:].copy()
+    edge_child = np.arange(1, n_nodes, dtype=np.int32)
+    offsets, max_fanout = csr_offsets_from_edges(edge_parent, n_nodes)
+    dfs_order, subtree_size, dfs_to_node = dfs_layout(
+        parent, depth, edge_parent, edge_child, offsets
+    )
+    return {
+        "node_parent": parent, "node_item": item, "node_depth": depth,
+        "confidence": conf, "support": sup, "lift": lift,
+        "edge_parent": edge_parent, "edge_item": edge_item,
+        "edge_child": edge_child,
+        "child_offsets": offsets, "max_fanout": max_fanout,
+        "dfs_order": dfs_order, "subtree_size": subtree_size,
+        "dfs_to_node": dfs_to_node,
+    }
+
+
+def synthetic_search_queries(
+    arrs: Dict[str, np.ndarray], q: int, width: int, seed: int = 1
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Half real root->node paths (random antecedent split), half junk."""
+    rng = np.random.RandomState(seed)
+    n_nodes = arrs["node_parent"].shape[0]
+    n_items = int(arrs["edge_item"].max()) + 1
+    queries = np.full((q, width), -1, np.int32)
+    ant_len = np.zeros((q,), np.int32)
+    for row in range(q):
+        if row % 2 == 0 and n_nodes > 1:
+            nid = rng.randint(1, n_nodes)
+            path = []
+            while nid > 0 and len(path) < width:
+                path.append(int(arrs["node_item"][nid]))
+                nid = int(arrs["node_parent"][nid])
+            path = path[::-1]
+            queries[row, : len(path)] = path
+            ant_len[row] = rng.randint(0, len(path) + 1)
+        else:
+            k = rng.randint(1, width + 1)
+            queries[row, :k] = rng.randint(0, n_items, size=k)
+            ant_len[row] = rng.randint(0, k + 1)
+    return queries, ant_len

@@ -17,13 +17,13 @@ Two integrations (DESIGN.md §4):
 from __future__ import annotations
 
 from collections import Counter
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.arm.transactions import TransactionDB
 from repro.core.builder import BuildResult, build_trie_of_rules
-from repro.core.trie import TrieNode, TrieOfRules
+from repro.core.trie import TrieOfRules
 
 
 def windows_to_db(

@@ -12,7 +12,7 @@ the q/dq around its own f32 collective).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

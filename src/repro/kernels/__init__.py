@@ -1,27 +1,35 @@
 """Pallas TPU kernels for the Trie-of-Rules hot spots.
 
 - ``support_count``  mining Step 1: MXU matmul support counting
-- ``rule_search``    paper Fig. 8-10: batched broadcast-compare trie descent
+- ``rule_search``    paper Fig. 8-10: batched CSR bucket trie descent
 - ``trie_reduce``    paper traversal: masked column reductions
+- ``top_k_rules``    segmented ranked extraction over the DFS-contiguous
+                     layout (whole-trie or antecedent-prefix subtree),
+                     scoring with any ``RANK_METRICS`` measure in-kernel
 
-``jax.lax.top_k`` already saturates the top-N operation on TPU (a single
-fused XLA sort/partial-sort over the metric column), so Fig. 12/13 use it
-directly rather than a hand-written kernel — see DESIGN.md §2.
+The shared Eq. 1-4 / interestingness math lives in ``metrics_inkernel`` —
+one implementation for every kernel AND its jnp oracle (``ref``).
 """
+from .metrics_inkernel import RANK_METRICS
 from .ops import (
     dense_from_bitmaps,
+    dfs_rank_arrays,
     edge_metric_arrays,
     members_from_candidates,
     rule_search,
     support_count,
+    top_k_rules,
     trie_reduce,
 )
 
 __all__ = [
+    "RANK_METRICS",
     "dense_from_bitmaps",
+    "dfs_rank_arrays",
     "edge_metric_arrays",
     "members_from_candidates",
     "rule_search",
     "support_count",
+    "top_k_rules",
     "trie_reduce",
 ]

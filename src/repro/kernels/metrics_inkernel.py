@@ -1,0 +1,82 @@
+"""Shared in-kernel metric math — ONE implementation for every kernel/oracle.
+
+Two groups live here, both pure elementwise ``jnp`` (usable inside a Pallas
+kernel body, inside a jitted jnp oracle, and on host via numpy promotion),
+so the fused rule-search kernel, the segmented top-k rank kernel, and their
+reference oracles are bit-identical by construction:
+
+1. ``compound_lift`` — the paper's Eq. 1-4 compound-consequent lift select:
+
+       Conf(A -> C1..Cm) = prod_i Conf(node_i)            (Eq. 1/4)
+       Lift = node lift           for single-item consequents
+            = Conf / Support(C)   for compound consequents (consequent-path
+                                   Support from a root-anchored walk)
+
+2. ``rank_score`` — the interestingness measures used to rank rules
+   (Slimani, arXiv:1312.4800 motivates ranking beyond confidence alone).
+   Every node column triple (Support s, Confidence c, Lift l) determines:
+
+       support     s
+       confidence  c
+       lift        l
+       leverage    s - Support(A)·Support(C) = s - s / l      (l > 0)
+       conviction  (1 - Support(C)) / (1 - c)
+                   with Support(C) = c / l                    (l > 0)
+
+   Confidence-1 rules have infinite conviction; they are capped at
+   ``CONVICTION_CAP`` so ranking stays total and finite, and rules with
+   undefined lift (l <= 0, e.g. absent/padding slots) score 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Finite stand-in for conviction's +inf at confidence == 1: large enough to
+# outrank every real conviction value, small enough to stay exact in f32.
+CONVICTION_CAP = 1e30
+
+RANK_METRICS = ("support", "confidence", "lift", "leverage", "conviction")
+
+
+def rank_score(metric: str, support, confidence, lift):
+    """Elementwise interestingness score from the node metric columns.
+
+    ``metric`` is static (selects the expression at trace time); the three
+    columns are any broadcast-compatible jnp arrays.  Kernel and oracle both
+    call THIS function, so their scores are bitwise identical.
+    """
+    if metric == "support":
+        return support
+    if metric == "confidence":
+        return confidence
+    if metric == "lift":
+        return lift
+    if metric == "leverage":
+        safe_lift = jnp.where(lift > 0, lift, 1.0)
+        return jnp.where(lift > 0, support - support / safe_lift, 0.0)
+    if metric == "conviction":
+        safe_lift = jnp.where(lift > 0, lift, 1.0)
+        sup_c = jnp.where(lift > 0, confidence / safe_lift, 1.0)
+        safe_den = jnp.where(confidence < 1.0, 1.0 - confidence, 1.0)
+        conv = jnp.where(
+            confidence < 1.0, (1.0 - sup_c) / safe_den, CONVICTION_CAP
+        )
+        return jnp.where(lift > 0, conv, 0.0)
+    raise ValueError(f"unknown rank metric {metric!r}")
+
+
+def compound_lift(found, single, node_lift, confidence, consequent_support):
+    """Paper Eq. 1-4 lift select, shared by every rule-search path.
+
+    single-item consequents: the final node's Step-3 lift IS the rule lift
+    (its confidence equals the compound confidence there).  Compound
+    consequents divide the compound confidence by the consequent-path
+    Support when that path exists in the trie (0 otherwise).  Absent rules
+    (``found == False``) score 0.
+    """
+    lift = jnp.where(
+        single,
+        node_lift,
+        jnp.where(consequent_support > 0, confidence / consequent_support, 0.0),
+    )
+    return jnp.where(found, lift, 0.0)

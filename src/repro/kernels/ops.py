@@ -8,12 +8,17 @@ are validated here), and composes kernels into the paper-level semantics
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.array_trie import DeviceTrie, child_lookup
+
+from .metrics_inkernel import RANK_METRICS, compound_lift
+from .rank import topk_rank_pallas
+from .ref import topk_rank_ref
 from .support_count import support_count_pallas
 from .rule_search import rule_search_fused_pallas, rule_search_pallas
 from .trie_reduce import trie_reduce_pallas
@@ -139,19 +144,127 @@ def rule_search(
     )
     seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
     single = (seq_len - ant_len) == 1
-    con_sup = cons["support"]
-    lift = jnp.where(
-        single,
-        full["node_lift"],
-        jnp.where(con_sup > 0, full["confidence"] / con_sup, 0.0),
-    )
     return {
         "found": full["found"],
         "node": full["node"],
         "support": full["support"],
         "confidence": full["confidence"],
-        "lift": jnp.where(full["found"], lift, 0.0),
+        "lift": compound_lift(
+            full["found"], single, full["node_lift"],
+            full["confidence"], cons["support"],
+        ),
     }
+
+
+# ----------------------------------------------------------------------
+# ranked extraction (segmented top-k over the DFS-contiguous layout)
+# ----------------------------------------------------------------------
+def dfs_rank_arrays(trie) -> Dict[str, jax.Array]:
+    """DFS-ordered rank columns + the DFS relabeling, gathered once.
+
+    ``trie`` is a DeviceTrie or FrozenTrie carrying the DFS layout from
+    ``FrozenTrie.freeze`` / ``array_trie.dfs_layout``.  Pass the result
+    back via ``top_k_rules(..., arrays=...)`` to amortize the gathers
+    across repeated ranked queries on the same trie.
+    """
+    d2n = getattr(trie, "dfs_to_node", None)
+    if d2n is None:
+        raise ValueError(
+            "trie has no DFS layout (dfs_to_node is None); freeze it with "
+            "FrozenTrie.freeze or compute array_trie.dfs_layout first"
+        )
+    d2n = jnp.asarray(d2n, jnp.int32)
+    return {
+        "support": jnp.asarray(trie.support)[d2n],
+        "confidence": jnp.asarray(trie.confidence)[d2n],
+        "lift": jnp.asarray(trie.lift)[d2n],
+        "depth": jnp.asarray(trie.node_depth, jnp.int32)[d2n],
+        "dfs_order": jnp.asarray(trie.dfs_order, jnp.int32),
+        "subtree_size": jnp.asarray(trie.subtree_size, jnp.int32),
+        "dfs_to_node": d2n,
+    }
+
+
+def top_k_rules(
+    trie,                                   # DeviceTrie / FrozenTrie
+    k: int,
+    metric: str = "confidence",
+    prefix: Optional[Sequence[int]] = None,
+    min_depth: int = 1,
+    arrays: Optional[Dict[str, jax.Array]] = None,
+    use_kernel: bool = True,
+) -> Dict[str, jax.Array]:
+    """Top-k rules by an interestingness metric, whole-trie or under an
+    antecedent prefix.
+
+    ``metric`` is one of ``RANK_METRICS`` (support/confidence/lift/
+    leverage/conviction — leverage and conviction are derived in-kernel
+    from the stored columns, see ``metrics_inkernel.rank_score``).
+
+    ``prefix`` — items of an antecedent prefix — scopes the ranking to
+    the rules whose path starts with that prefix: the CSR bucket descent
+    resolves the prefix node, whose subtree is ONE contiguous DFS range
+    ``[dfs_order[v], dfs_order[v] + subtree_size[v])`` by construction.
+    A prefix absent from the trie yields an empty range (all slots
+    ``(-inf, -1)``).  Items are canonicalized to frequency order when the
+    trie carries an ``item_rank`` table (FrozenTrie does).
+
+    Returns ``{"values" f32[k], "node" int32[k], "dfs_pos" int32[k]}``
+    in ``jax.lax.top_k`` order; slots past the live-rule count are
+    ``(-inf, -1)``.  The kernel path and the ``use_kernel=False`` jnp
+    oracle are bit-identical.
+    """
+    if metric not in RANK_METRICS:
+        raise ValueError(
+            f"metric {metric!r} not in {RANK_METRICS}"
+        )
+    if arrays is None:
+        arrays = dfs_rank_arrays(trie)
+    n = arrays["support"].shape[0]
+    if prefix is None:
+        lo = jnp.int32(0)
+        hi = jnp.int32(n)
+    else:
+        items = [int(it) for it in prefix]
+        item_rank = getattr(trie, "item_rank", None)
+        if item_rank is not None:
+            nr = int(np.asarray(item_rank).shape[0])
+            items.sort(
+                key=lambda it: (
+                    int(item_rank[it]) if 0 <= it < nr else 1 << 30, it
+                )
+            )
+        # The descent's DeviceTrie is cached in the arrays dict so repeat
+        # prefix queries with arrays= don't re-upload the trie columns.
+        dt = arrays.get("_device_trie")
+        if dt is None:
+            dt = (
+                trie if isinstance(trie, DeviceTrie)
+                else trie.device_arrays()
+            )
+            arrays["_device_trie"] = dt
+        node = jnp.zeros((1,), jnp.int32)
+        for it in items:
+            node = child_lookup(dt, node, jnp.full((1,), it, jnp.int32))
+        ok = node[0] >= 0
+        nid = jnp.maximum(node[0], 0)
+        lo = jnp.where(ok, arrays["dfs_order"][nid], 0).astype(jnp.int32)
+        hi = jnp.where(
+            ok, lo + arrays["subtree_size"][nid], 0
+        ).astype(jnp.int32)
+    rank_fn = (
+        functools.partial(topk_rank_pallas, interpret=_interpret())
+        if use_kernel else topk_rank_ref
+    )
+    vals, pos = rank_fn(
+        arrays["support"], arrays["confidence"], arrays["lift"],
+        arrays["depth"], lo, hi,
+        k=int(k), metric=metric, min_depth=int(min_depth),
+    )
+    node_ids = jnp.where(
+        pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
+    )
+    return {"values": vals, "node": node_ids, "dfs_pos": pos}
 
 
 # ----------------------------------------------------------------------

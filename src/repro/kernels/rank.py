@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: segmented top-k rule ranking over the DFS layout.
+
+The paper positions sorting as "the base for many knowledge discovery
+methods"; this kernel is the ranked-extraction counterpart of the fused
+rule search.  It streams the DFS-ordered node metric columns through VMEM
+in ``BN``-node tiles and maintains a k-best (value, DFS position) buffer
+across grid steps:
+
+    per tile i:  score[t]  = rank_score(metric, sup[t], conf[t], lift[t])
+                 score[t] := -inf outside [lo, hi) or below min_depth
+                 c         = |{t : score[t] > current kth-best}|
+                 if c > 0:  extract the tile's top-min(c, k) by iterative
+                            max+mask (c is SMALL once the buffer warms up),
+                            then rank-merge the two sorted k-lists with one
+                            (kpad x kpad) comparison matrix
+
+Because the trie is DFS-contiguous (``array_trie.dfs_layout``), an
+antecedent-prefix subtree is exactly one ``[lo, hi)`` position range, so a
+prefix-scoped ranked query masks (and mostly *skips* — the ``c > 0`` guard
+fails for every tile outside the range) instead of gathering.  The full
+ranking is the ``[0, N)`` range of the same kernel.
+
+The in-kernel score math lives in ``metrics_inkernel.rank_score`` — the ONE
+implementation shared with the jnp oracle (``ref.topk_rank_ref``), keeping
+kernel and oracle bit-identical per element.  Tie-breaking replicates
+``jax.lax.top_k``: equal values rank by ascending position (the iterative
+extraction takes the min position among maxima; merged lists are ordered by
+(value desc, position asc)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .metrics_inkernel import rank_score
+
+BN = 8192    # nodes per tile
+LANE = 128   # lane width: k-buffer padding granularity
+_BIG = 2**30  # plain int: pallas kernels may not close over jnp constants
+
+
+def _iota(n: int) -> jax.Array:
+    return jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+
+def _rank_merge(av, ap, tv, tp, kpad: int):
+    """Merge two internally-sorted (value desc, pos asc) kpad-lists into
+    the top-kpad of their union via rank scatter (one comparison matrix
+    each way; ranks over the union are a permutation, so every output slot
+    is hit by exactly one element)."""
+    lane = _iota(kpad)
+    # -inf padding entries get unique, largest tie keys so the order stays
+    # strictly total (live positions are distinct by construction: the
+    # buffer holds earlier tiles' positions, the tile batch later ones).
+    apk = jnp.where(av > -jnp.inf, ap, _BIG + lane)
+    tpk = jnp.where(tv > -jnp.inf, tp, _BIG + kpad + lane)
+
+    def precedes(v1, p1, v2, p2):
+        return (v1 > v2) | ((v1 == v2) & (p1 < p2))
+
+    rank_a = lane + jnp.sum(
+        precedes(tv[:, None], tpk[:, None], av[None, :], apk[None, :])
+        .astype(jnp.int32), axis=0,
+    )
+    rank_t = lane + jnp.sum(
+        precedes(av[:, None], apk[:, None], tv[None, :], tpk[None, :])
+        .astype(jnp.int32), axis=0,
+    )
+    hit_a = lane[:, None] == rank_a[None, :]
+    hit_t = lane[:, None] == rank_t[None, :]
+    nv = jnp.maximum(
+        jnp.max(jnp.where(hit_a, av[None, :], -jnp.inf), axis=1),
+        jnp.max(jnp.where(hit_t, tv[None, :], -jnp.inf), axis=1),
+    )
+    np_ = jnp.maximum(
+        jnp.max(jnp.where(hit_a, ap[None, :], -1), axis=1),
+        jnp.max(jnp.where(hit_t, tp[None, :], -1), axis=1),
+    )
+    return nv, jnp.where(nv > -jnp.inf, np_, -1)
+
+
+def _make_kernel(k: int, kpad: int, metric: str, min_depth: int):
+    def kernel(
+        params_ref, sup_ref, conf_ref, lift_ref, depth_ref,
+        vals_ref, pos_ref,
+    ):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            vals_ref[...] = jnp.full_like(vals_ref[...], -jnp.inf)
+            pos_ref[...] = jnp.full_like(pos_ref[...], -1)
+
+        lo = params_ref[0, 0]
+        hi = params_ref[0, 1]
+        sup = sup_ref[...][0]
+        conf = conf_ref[...][0]
+        lift = lift_ref[...][0]
+        depth = depth_ref[...][0]
+        pos = _iota(BN) + i * BN
+        score = rank_score(metric, sup, conf, lift)
+        valid = (pos >= lo) & (pos < hi) & (depth >= min_depth)
+        score = jnp.where(valid, score, -jnp.inf)
+
+        # Strictly-greater entry test: an equal-valued tile entry has a
+        # larger DFS position than every buffered entry, so it loses the
+        # tie and can never displace — tiles that cannot improve the
+        # buffer (incl. every tile fully outside [lo, hi)) skip the merge.
+        kth = vals_ref[0, k - 1]
+        c = jnp.sum((score > kth).astype(jnp.int32))
+
+        @pl.when(c > 0)
+        def _merge():
+            lane = _iota(kpad)
+            cc = jnp.minimum(c, k)
+
+            def body(state):
+                j, cand, tv, tp = state
+                m = jnp.max(cand)
+                sel = jnp.min(jnp.where(cand == m, pos, _BIG))
+                tv = jnp.where(lane == j, m, tv)
+                tp = jnp.where(lane == j, sel, tp)
+                cand = jnp.where(pos == sel, -jnp.inf, cand)
+                return j + 1, cand, tv, tp
+
+            _, _, tv, tp = jax.lax.while_loop(
+                lambda s: s[0] < cc,
+                body,
+                (
+                    jnp.int32(0),
+                    score,
+                    jnp.full((kpad,), -jnp.inf, jnp.float32),
+                    jnp.full((kpad,), -1, jnp.int32),
+                ),
+            )
+            nv, np_ = _rank_merge(
+                vals_ref[...][0], pos_ref[...][0], tv, tp, kpad
+            )
+            vals_ref[...] = nv[None, :]
+            pos_ref[...] = np_[None, :]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "min_depth", "interpret")
+)
+def topk_rank_pallas(
+    support: jax.Array,     # f32 [N] DFS-ordered
+    confidence: jax.Array,  # f32 [N] DFS-ordered
+    lift: jax.Array,        # f32 [N] DFS-ordered
+    depth: jax.Array,       # int32 [N] DFS-ordered
+    lo,                     # int32 scalar: DFS range start (inclusive)
+    hi,                     # int32 scalar: DFS range end (exclusive)
+    *,
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+    interpret: bool = False,
+):
+    """Top-k (scores, DFS positions) of the rules in DFS range ``[lo, hi)``.
+
+    Returns ``(values f32[k], positions int32[k])`` sorted by
+    (value desc, position asc) — ``jax.lax.top_k`` order — with empty
+    slots (k exceeds the live-rule count) as ``(-inf, -1)``.
+    """
+    n = support.shape[0]
+    if n == 0 or k <= 0:
+        # Nothing to rank: avoid tracing a zero-grid kernel.
+        return (
+            jnp.full((max(k, 0),), -jnp.inf, jnp.float32),
+            jnp.full((max(k, 0),), -1, jnp.int32),
+        )
+    kpad = k + (-k % LANE)
+    npad = -n % BN
+
+    def pad(a, fill, dtype):
+        return jnp.pad(
+            a.astype(dtype), (0, npad), constant_values=fill
+        ).reshape(1, -1)
+
+    sup = pad(support, 0.0, jnp.float32)
+    conf = pad(confidence, 0.0, jnp.float32)
+    lif = pad(lift, 0.0, jnp.float32)
+    dep = pad(depth, -1, jnp.int32)
+    # Clamping hi to N keeps every padding lane outside [lo, hi).
+    lo = jnp.maximum(jnp.asarray(lo, jnp.int32), 0)
+    hi = jnp.minimum(jnp.asarray(hi, jnp.int32), n)
+    params = jnp.zeros((1, LANE), jnp.int32)
+    params = params.at[0, 0].set(lo).at[0, 1].set(hi)
+
+    nn = sup.shape[1]
+    grid = (nn // BN,)
+    col_spec = pl.BlockSpec((1, BN), lambda i: (0, i))
+    out_spec = pl.BlockSpec((1, kpad), lambda i: (0, 0))
+    vals, pos = pl.pallas_call(
+        _make_kernel(k, kpad, metric, min_depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, LANE), lambda i: (0, 0)),
+            col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((1, kpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, sup, conf, lif, dep)
+    return vals[0, :k], pos[0, :k]

@@ -10,6 +10,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from .metrics_inkernel import compound_lift, rank_score
+
 
 # ----------------------------------------------------------------------
 # support_count — mining Step 1 hot loop (MXU formulation)
@@ -120,18 +122,15 @@ def rule_search_fused_ref(
     )
     seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
     single = (seq_len - ant_len) == 1
-    con_sup = cons["support"]
-    lift = jnp.where(
-        single,
-        main["node_lift"],
-        jnp.where(con_sup > 0, main["confidence"] / con_sup, 0.0),
-    )
     return {
         "found": main["found"],
         "node": main["node"],
         "support": main["support"],
         "confidence": main["confidence"],
-        "lift": jnp.where(main["found"], lift, 0.0),
+        "lift": compound_lift(
+            main["found"], single, main["node_lift"],
+            main["confidence"], cons["support"],
+        ),
     }
 
 
@@ -143,10 +142,65 @@ def trie_reduce_ref(
     confidence: jax.Array,    # f32 [N]
     depth: jax.Array,         # int32 [N]  (root=0 and padding<0 masked out)
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """(n_rules, Σ support, max confidence, Σ confidence) over real nodes."""
+    """(n_rules, Σ support, max confidence, Σ confidence) over real nodes.
+
+    Degenerate tries (N == 0 or all-padding) reduce to all-zeros — the max
+    slot is 0.0, not -inf, so downstream consumers never see a poisoned
+    sentinel (mirrors the kernel's empty-trie guard).
+    """
+    if support.shape[0] == 0:
+        z = jnp.float32(0.0)
+        return z, z, z, z
     mask = depth > 0
     n = jnp.sum(mask).astype(jnp.float32)
     sup_sum = jnp.sum(jnp.where(mask, support, 0.0))
-    conf_max = jnp.max(jnp.where(mask, confidence, -jnp.inf))
+    conf_max = jnp.where(
+        n > 0, jnp.max(jnp.where(mask, confidence, -jnp.inf)), 0.0
+    )
     conf_sum = jnp.sum(jnp.where(mask, confidence, 0.0))
     return n, sup_sum, conf_max, conf_sum
+
+
+# ----------------------------------------------------------------------
+# topk_rank — segmented ranked extraction over the DFS-contiguous layout
+# ----------------------------------------------------------------------
+def topk_rank_ref(
+    support: jax.Array,     # f32 [N] DFS-ordered
+    confidence: jax.Array,  # f32 [N] DFS-ordered
+    lift: jax.Array,        # f32 [N] DFS-ordered
+    depth: jax.Array,       # int32 [N] DFS-ordered
+    lo,                     # int32 scalar: DFS range start (inclusive)
+    hi,                     # int32 scalar: DFS range end (exclusive)
+    *,
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """Ground truth for the segmented top-k kernel: ``jax.lax.top_k`` over
+    the masked score vector (scores from the SAME ``rank_score`` the kernel
+    runs in VMEM, so values are bit-identical; ``lax.top_k`` breaks ties by
+    lower index, which the kernel's min-position extraction replicates).
+    Empty slots — k beyond the live-rule count — are ``(-inf, -1)``.
+    """
+    n = support.shape[0]
+    if n == 0 or k <= 0:
+        return (
+            jnp.full((max(k, 0),), -jnp.inf, jnp.float32),
+            jnp.full((max(k, 0),), -1, jnp.int32),
+        )
+    score = rank_score(
+        metric,
+        support.astype(jnp.float32),
+        confidence.astype(jnp.float32),
+        lift.astype(jnp.float32),
+    )
+    pos = jnp.arange(n, dtype=jnp.int32)
+    lo = jnp.maximum(jnp.asarray(lo, jnp.int32), 0)
+    hi = jnp.minimum(jnp.asarray(hi, jnp.int32), n)
+    valid = (pos >= lo) & (pos < hi) & (depth >= min_depth)
+    masked = jnp.where(valid, score, -jnp.inf)
+    if k > n:
+        masked = jnp.pad(masked, (0, k - n), constant_values=-jnp.inf)
+    vals, idx = jax.lax.top_k(masked, k)
+    idx = jnp.where(vals > -jnp.inf, idx.astype(jnp.int32), -1)
+    return vals, idx

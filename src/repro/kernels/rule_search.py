@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .metrics_inkernel import compound_lift
+
 BQ = 128    # queries per tile
 BE = 2048   # edge-table chunk per compare sweep (full-sweep kernel)
 BF = 128    # fan-out tile: CSR bucket window granularity (fused kernel)
@@ -287,17 +289,13 @@ def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
         seq_len = jnp.sum((qs >= 0).astype(jnp.int32), axis=1)
         single = (seq_len - ant_len) == 1
         con_sup = jnp.where(cok & (cnode > 0), csup, 0.0)
-        conf_out = jnp.where(found, conf, 0.0)
-        lift = jnp.where(
-            single,
-            nlift,
-            jnp.where(con_sup > 0, conf / con_sup, 0.0),
-        )
         node_ref[...] = jnp.where(found, node, -1)[:, None]
         ok_ref[...] = found.astype(jnp.int32)[:, None]
-        conf_ref[...] = conf_out[:, None]
+        conf_ref[...] = jnp.where(found, conf, 0.0)[:, None]
         sup_ref[...] = jnp.where(found, sup, 0.0)[:, None]
-        lift_ref[...] = jnp.where(found, lift, 0.0)[:, None]
+        lift_ref[...] = compound_lift(
+            found, single, nlift, conf, con_sup
+        )[:, None]
 
     return kernel
 

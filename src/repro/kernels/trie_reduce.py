@@ -45,6 +45,12 @@ def trie_reduce_pallas(
     interpret: bool = False,
 ):
     n = support.shape[0]
+    if n == 0:
+        # Empty trie: nothing to reduce.  Returning zeros here avoids
+        # tracing a zero-grid pallas_call (mirrors the rule-search guards)
+        # and keeps the max-confidence slot at 0.0 instead of -inf.
+        z = jnp.float32(0.0)
+        return z, z, z, z
     npad = -n % BN
     sup = jnp.pad(support.astype(jnp.float32), (0, npad)).reshape(1, -1)
     conf = jnp.pad(confidence.astype(jnp.float32), (0, npad)).reshape(1, -1)
@@ -65,4 +71,7 @@ def trie_reduce_pallas(
         out_shape=jax.ShapeDtypeStruct((1, 4), jnp.float32),
         interpret=interpret,
     )(sup, conf, dep)
-    return out[0, 0], out[0, 1], out[0, 2], out[0, 3]
+    # All-padding tries (no depth > 0 node) never update the running max,
+    # leaving the -inf init value; report 0.0 like the empty-trie guard.
+    conf_max = jnp.where(out[0, 0] > 0, out[0, 2], 0.0)
+    return out[0, 0], out[0, 1], conf_max, out[0, 3]

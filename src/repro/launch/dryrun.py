@@ -39,9 +39,8 @@ from repro.launch.specs import (
     param_specs,
     shard_tree,
 )
-from repro.models import abstract_params
 from repro.serve.engine import make_decode_step, make_prefill_step
-from repro.train.optimizer import OptConfig, pick_optimizer
+from repro.train.optimizer import pick_optimizer
 from repro.train.train_step import make_train_step
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

@@ -12,7 +12,7 @@ Sharding is attached to each struct from the logical-axis rules so
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -96,12 +96,12 @@ def _ssd_chunked(xh, dt, a, bmat, cmat, chunk, init_state=None):
     da = dtc * a[None, None, None, :]                    # [b,nc,q,h]
     da_cum = jnp.cumsum(da, axis=2)                      # within-chunk
     # 1) diagonal (within-chunk) term
-    l = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))       # [b,nc,h,q,q]
+    decay = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))   # [b,nc,h,q,q]
     scores = jnp.einsum("bcqhs,bcphs->bchqp", cc, bc,
                         preferred_element_type=jnp.float32)
     y_diag = jnp.einsum(
         "bchqp,bchqp,bcphd->bcqhd",
-        scores, l.astype(jnp.float32),
+        scores, decay.astype(jnp.float32),
         (xc * dtc[..., None]).astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from .layers import PV, apply_rope, init_rmsnorm, pv, rmsnorm, _attend
+from .layers import apply_rope, init_rmsnorm, pv, rmsnorm, _attend
 
 
 def init_mla(key, cfg):

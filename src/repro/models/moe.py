@@ -21,14 +21,14 @@ Router: softmax → top-k, probs renormalized over the selected experts
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import constrain
-from .layers import PV, pv
+from .layers import pv
 
 
 def init_moe(key, cfg):

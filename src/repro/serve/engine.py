@@ -6,7 +6,6 @@ them with donated caches — the cache buffer is updated in place on device.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ compute — is the standard collective/compute overlap trick at scale.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

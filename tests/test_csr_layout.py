@@ -8,7 +8,6 @@
 - empty-trie degenerate cases return all-not-found without tracing a
   zero-chunk kernel.
 """
-import dataclasses
 
 import numpy as np
 import pytest

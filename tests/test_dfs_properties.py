@@ -1,0 +1,121 @@
+"""Hypothesis property tests for the DFS-contiguous layout + ranked
+extraction.
+
+Random transaction databases → freeze → the DFS relabeling must round-trip
+the pointer trie's recursive subtree enumeration, and the segmented top-k
+kernel must stay bit-identical to the ``lax.top_k`` oracle for every
+metric/k/prefix the strategy draws.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.arm.transactions import TransactionDB
+from repro.core.array_trie import FrozenTrie
+from repro.core.builder import build_trie_of_rules
+from repro.kernels.metrics_inkernel import RANK_METRICS
+from repro.kernels.ops import top_k_rules
+
+
+@st.composite
+def transaction_dbs(draw):
+    n_items = draw(st.integers(min_value=3, max_value=12))
+    n_tx = draw(st.integers(min_value=4, max_value=30))
+    txs = []
+    for _ in range(n_tx):
+        size = draw(st.integers(min_value=1, max_value=min(6, n_items)))
+        tx = draw(
+            st.sets(
+                st.integers(min_value=0, max_value=n_items - 1),
+                min_size=1,
+                max_size=size,
+            )
+        )
+        txs.append(tx)
+    return TransactionDB(txs, n_items=n_items)
+
+
+def _pointer_subtrees(trie):
+    """{bfs_id: sorted bfs ids of the node's recursive subtree}."""
+    from collections import deque
+
+    bfs = {id(trie.root): 0}
+    q = deque([trie.root])
+    order = [trie.root]
+    while q:
+        node = q.popleft()
+        for child in sorted(node.children.values(), key=lambda c: c.item):
+            bfs[id(child)] = len(bfs)
+            order.append(child)
+            q.append(child)
+
+    def collect(node):
+        out = [bfs[id(node)]]
+        for child in node.children.values():
+            out.extend(collect(child))
+        return sorted(out)
+
+    return {bfs[id(n)]: collect(n) for n in order}
+
+
+@settings(max_examples=25, deadline=None)
+@given(transaction_dbs(), st.floats(min_value=0.1, max_value=0.6))
+def test_dfs_layout_roundtrips_pointer_subtrees(db, minsup):
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    fz = FrozenTrie.freeze(res.trie)
+    n = fz.n_nodes
+    # dfs_order is a permutation with the advertised inverse
+    assert sorted(fz.dfs_order.tolist()) == list(range(n))
+    np.testing.assert_array_equal(
+        fz.dfs_order[fz.dfs_to_node], np.arange(n, dtype=np.int32)
+    )
+    # every subtree is exactly its contiguous DFS range
+    subtrees = _pointer_subtrees(res.trie)
+    assert fz.subtree_size[0] == n
+    for nid, want in subtrees.items():
+        lo = int(fz.dfs_order[nid])
+        hi = lo + int(fz.subtree_size[nid])
+        got = sorted(fz.dfs_to_node[lo:hi].tolist())
+        assert got == want
+    # parents precede children in pre-order; subtree sizes telescope
+    for nid in range(1, n):
+        p = int(fz.node_parent[nid])
+        assert fz.dfs_order[p] < fz.dfs_order[nid]
+        assert fz.subtree_size[p] >= fz.subtree_size[nid] + 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    transaction_dbs(),
+    st.floats(min_value=0.15, max_value=0.5),
+    st.sampled_from(RANK_METRICS),
+    st.integers(min_value=1, max_value=20),
+    st.booleans(),
+)
+def test_top_k_rules_kernel_oracle_property(db, minsup, metric, k, prefixed):
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    fz = FrozenTrie.freeze(res.trie)
+    prefix = None
+    if prefixed and fz.item_order.size:
+        prefix = (int(fz.item_order[0]),)
+    out_k = top_k_rules(fz, k, metric, prefix=prefix)
+    out_o = top_k_rules(fz, k, metric, prefix=prefix, use_kernel=False)
+    for key in ("values", "node", "dfs_pos"):
+        np.testing.assert_array_equal(
+            np.asarray(out_k[key]), np.asarray(out_o[key]), err_msg=key
+        )
+    # every reported node is inside the prefix subtree (when it resolves)
+    nodes = np.asarray(out_k["node"])
+    live = nodes[nodes >= 0]
+    if prefix is not None and live.size:
+        cands = [
+            i for i in range(fz.n_nodes)
+            if fz.node_parent[i] == 0 and fz.node_item[i] == prefix[0]
+        ]
+        assert cands, "prefix resolved but no depth-1 node found"
+        lo = int(fz.dfs_order[cands[0]])
+        hi = lo + int(fz.subtree_size[cands[0]])
+        sub = set(fz.dfs_to_node[lo:hi].tolist())
+        assert set(live.tolist()) <= sub

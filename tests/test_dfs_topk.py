@@ -1,0 +1,335 @@
+"""DFS-contiguous layout + segmented top-k rank kernel tests.
+
+- ``dfs_order``/``subtree_size``/``dfs_to_node`` round-trip against the
+  pointer trie's recursive subtree enumeration (and against a recursive
+  CSR walk on random/synthetic tries),
+- the segmented top-k kernel is BIT-identical to the ``lax.top_k`` oracle
+  for all rank metrics, whole-trie and prefix-scoped, including ties,
+  k > live-rule count, empty ranges, and a 1e5-node trie,
+- ``ops.top_k_rules`` end-to-end: prefix descent via the CSR buckets,
+  prefix-not-in-trie, node-id mapping back from DFS positions, agreement
+  with the pointer trie's ``top_n``.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.arm.datasets import paper_example_db
+from repro.core.builder import build_trie_of_rules
+from repro.core.array_trie import FrozenTrie, dfs_layout
+from repro.core.synthetic import synthetic_csr_trie
+from repro.core.trie import TrieOfRules
+from repro.kernels.metrics_inkernel import RANK_METRICS, rank_score
+from repro.kernels.ops import dfs_rank_arrays, top_k_rules
+from repro.kernels.rank import topk_rank_pallas
+from repro.kernels.ref import topk_rank_ref
+
+
+def _recursive_preorder(arrs, root=0):
+    """Recursive CSR preorder enumeration — the layout's ground truth."""
+    co, ec = arrs["child_offsets"], arrs["edge_child"]
+    out = []
+    stack = [root]
+    while stack:
+        nid = stack.pop()
+        out.append(nid)
+        kids = [int(ec[e]) for e in range(int(co[nid]), int(co[nid + 1]))]
+        stack.extend(reversed(kids))
+    return out
+
+
+def _assert_dfs_roundtrip(arrs):
+    n = arrs["node_parent"].shape[0]
+    dfs_order, subtree_size, dfs_to_node = (
+        arrs["dfs_order"], arrs["subtree_size"], arrs["dfs_to_node"]
+    )
+    # permutation + inverse
+    assert sorted(dfs_order.tolist()) == list(range(n))
+    np.testing.assert_array_equal(
+        dfs_order[dfs_to_node], np.arange(n, dtype=np.int32)
+    )
+    # preorder matches the recursive walk
+    np.testing.assert_array_equal(dfs_to_node, _recursive_preorder(arrs))
+    # every subtree is exactly its contiguous position range
+    for v in range(n):
+        lo = int(dfs_order[v])
+        hi = lo + int(subtree_size[v])
+        assert sorted(dfs_to_node[lo:hi].tolist()) == sorted(
+            _recursive_preorder(arrs, v)
+        )
+
+
+def _arrs_from_frozen(fz: FrozenTrie):
+    return {
+        "node_parent": fz.node_parent, "node_depth": fz.node_depth,
+        "edge_child": fz.edge_child, "child_offsets": fz.child_offsets,
+        "dfs_order": fz.dfs_order, "subtree_size": fz.subtree_size,
+        "dfs_to_node": fz.dfs_to_node,
+    }
+
+
+# ----------------------------------------------------------------------
+# DFS layout round-trips
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("minsup", [0.2, 0.3, 0.5])
+def test_dfs_layout_roundtrip_pointer_trie(minsup):
+    db = paper_example_db()
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    fz = FrozenTrie.freeze(res.trie)
+    _assert_dfs_roundtrip(_arrs_from_frozen(fz))
+    # pointer-trie ground truth: node v's subtree positions = the DFS
+    # positions of every pointer node reachable below v
+    ids = {}
+
+    def walk(node):
+        ids[id(node)] = len(ids)
+        for child in sorted(node.children.values(), key=lambda c: c.item):
+            walk(child)
+
+    # BFS ids (freeze order) for cross-checking subtree membership
+    from collections import deque
+
+    bfs = {id(res.trie.root): 0}
+    q = deque([res.trie.root])
+    while q:
+        node = q.popleft()
+        for child in sorted(node.children.values(), key=lambda c: c.item):
+            bfs[id(child)] = len(bfs)
+            q.append(child)
+
+    def subtree_bfs_ids(node):
+        out = [bfs[id(node)]]
+        for child in node.children.values():
+            out.extend(subtree_bfs_ids(child))
+        return out
+
+    stack = [res.trie.root]
+    while stack:
+        node = stack.pop()
+        nid = bfs[id(node)]
+        lo = int(fz.dfs_order[nid])
+        hi = lo + int(fz.subtree_size[nid])
+        assert sorted(fz.dfs_to_node[lo:hi].tolist()) == sorted(
+            subtree_bfs_ids(node)
+        )
+        stack.extend(node.children.values())
+
+
+def test_dfs_layout_roundtrip_synthetic():
+    arrs = synthetic_csr_trie(900, root_fanout=30, fanout=4, seed=2)
+    _assert_dfs_roundtrip(arrs)
+
+
+def test_dfs_layout_empty_and_single():
+    e = np.zeros((0,), np.int32)
+    out = dfs_layout(e, e, e, e, np.zeros((1,), np.int32))
+    assert all(a.shape == (0,) for a in out)
+    fz = FrozenTrie.freeze(TrieOfRules())
+    np.testing.assert_array_equal(fz.dfs_order, [0])
+    np.testing.assert_array_equal(fz.subtree_size, [1])
+    np.testing.assert_array_equal(fz.dfs_to_node, [0])
+
+
+# ----------------------------------------------------------------------
+# segmented top-k kernel ≡ lax.top_k oracle (bit-identical)
+# ----------------------------------------------------------------------
+def _dfs_cols(arrs):
+    d2n = arrs["dfs_to_node"]
+    return tuple(
+        jnp.asarray(arrs[c][d2n])
+        for c in ("support", "confidence", "lift", "node_depth")
+    )
+
+
+@pytest.mark.parametrize("metric", RANK_METRICS)
+@pytest.mark.parametrize("k", [1, 10, 100])
+def test_topk_kernel_oracle_parity(metric, k):
+    arrs = synthetic_csr_trie(3_000, seed=11)
+    cols = _dfs_cols(arrs)
+    n = arrs["node_parent"].shape[0]
+    for lo, hi in ((0, n), (7, 2_000), (2_500, 2_501), (100, 100)):
+        kv, kp = topk_rank_pallas(
+            *cols, lo, hi, k=k, metric=metric, interpret=True
+        )
+        rv, rp = topk_rank_ref(*cols, lo, hi, k=k, metric=metric)
+        np.testing.assert_array_equal(
+            np.asarray(kv), np.asarray(rv), err_msg=f"{metric} {lo}:{hi}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(kp), np.asarray(rp), err_msg=f"{metric} {lo}:{hi}"
+        )
+
+
+def test_topk_parity_with_ties():
+    """Quantized metric columns force many exact ties; tie order (lower
+    DFS position first) must match lax.top_k bit-for-bit, including ties
+    that straddle tile boundaries."""
+    arrs = synthetic_csr_trie(20_000, seed=5)
+    rng = np.random.RandomState(0)
+    for c in ("support", "confidence", "lift"):
+        arrs[c] = (
+            rng.randint(0, 4, size=arrs[c].shape) / 4.0
+        ).astype(np.float32)
+    cols = _dfs_cols(arrs)
+    n = arrs["node_parent"].shape[0]
+    for metric in RANK_METRICS:
+        for k in (10, 100):
+            kv, kp = topk_rank_pallas(
+                *cols, 0, n, k=k, metric=metric, interpret=True
+            )
+            rv, rp = topk_rank_ref(*cols, 0, n, k=k, metric=metric)
+            np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+            np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+
+
+def test_topk_k_exceeds_live_rules():
+    arrs = synthetic_csr_trie(40, seed=7)
+    cols = _dfs_cols(arrs)
+    k = 128  # > 40 live rules; tail slots must be (-inf, -1)
+    kv, kp = topk_rank_pallas(
+        *cols, 0, 41, k=k, metric="confidence", interpret=True
+    )
+    rv, rp = topk_rank_ref(*cols, 0, 41, k=k, metric="confidence")
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+    assert (np.asarray(kv)[40:] == -np.inf).all()
+    assert (np.asarray(kp)[40:] == -1).all()
+    assert (np.asarray(kp)[:40] >= 0).all()
+
+
+def test_topk_parity_100k_nodes():
+    """Acceptance-scale parity: 1e5 nodes, interpret mode, k=100."""
+    arrs = synthetic_csr_trie(100_000 - 1, seed=13)
+    cols = _dfs_cols(arrs)
+    n = arrs["node_parent"].shape[0]
+    p_lo = int(arrs["dfs_order"][3])
+    p_hi = p_lo + int(arrs["subtree_size"][3])
+    for lo, hi in ((0, n), (p_lo, p_hi)):
+        for metric in ("confidence", "conviction"):
+            kv, kp = topk_rank_pallas(
+                *cols, lo, hi, k=100, metric=metric, interpret=True
+            )
+            rv, rp = topk_rank_ref(*cols, lo, hi, k=100, metric=metric)
+            np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+            np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+
+
+def test_topk_empty_trie_guarded():
+    z = jnp.zeros((0,), jnp.float32)
+    zi = jnp.zeros((0,), jnp.int32)
+    kv, kp = topk_rank_pallas(
+        z, z, z, zi, 0, 0, k=5, metric="lift", interpret=True
+    )
+    assert (np.asarray(kv) == -np.inf).all()
+    assert (np.asarray(kp) == -1).all()
+
+
+# ----------------------------------------------------------------------
+# ops.top_k_rules end to end
+# ----------------------------------------------------------------------
+def _mined_frozen(minsup=0.25):
+    db = paper_example_db()
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
+    return res, FrozenTrie.freeze(res.trie)
+
+
+@pytest.mark.parametrize("metric", RANK_METRICS)
+def test_top_k_rules_kernel_matches_oracle(metric):
+    _, fz = _mined_frozen()
+    for prefix in (None, (int(fz.item_order[0]),)):
+        out_k = top_k_rules(fz, 8, metric, prefix=prefix)
+        out_o = top_k_rules(fz, 8, metric, prefix=prefix, use_kernel=False)
+        for key in ("values", "node", "dfs_pos"):
+            np.testing.assert_array_equal(
+                np.asarray(out_k[key]), np.asarray(out_o[key]),
+                err_msg=f"{metric} prefix={prefix} {key}",
+            )
+
+
+def test_top_k_rules_matches_pointer_trie_top_n():
+    """Whole-trie ranking at min_depth=2 reproduces the pointer trie's
+    heapq top_n for the stored metric columns."""
+    res, fz = _mined_frozen()
+    for metric in ("support", "confidence", "lift"):
+        want = res.trie.top_n(5, metric, min_depth=2)
+        out = top_k_rules(fz, 5, metric, min_depth=2)
+        got_vals = np.asarray(out["values"])[: len(want)]
+        np.testing.assert_allclose(
+            got_vals,
+            [getattr(nd, metric) for nd in want],
+            rtol=1e-6,
+        )
+
+
+def test_top_k_rules_prefix_scopes_to_subtree():
+    """A prefix-scoped ranking returns exactly the best rules among the
+    prefix node's subtree (brute-force verified) — nothing outside."""
+    res, fz = _mined_frozen()
+    item = int(fz.item_order[0])
+    out = top_k_rules(fz, 10, "confidence", prefix=(item,))
+    nodes = np.asarray(out["node"])
+    live = nodes[nodes >= 0]
+    assert live.size > 0
+    # brute force: enumerate the subtree under the depth-1 node for `item`
+    (nid,) = [
+        i for i in range(fz.n_nodes)
+        if fz.node_parent[i] == 0 and fz.node_item[i] == item
+    ]
+    lo = int(fz.dfs_order[nid])
+    sub = set(
+        fz.dfs_to_node[lo: lo + int(fz.subtree_size[nid])].tolist()
+    )
+    assert set(live.tolist()) <= sub
+    scores = {
+        n: float(fz.confidence[n]) for n in sub if fz.node_depth[n] >= 1
+    }
+    want = sorted(scores.values(), reverse=True)[: live.size]
+    np.testing.assert_allclose(
+        np.asarray(out["values"])[: live.size], want, rtol=1e-6
+    )
+
+
+def test_top_k_rules_prefix_not_in_trie():
+    _, fz = _mined_frozen()
+    out = top_k_rules(fz, 6, "lift", prefix=(123456,))
+    assert (np.asarray(out["values"]) == -np.inf).all()
+    assert (np.asarray(out["node"]) == -1).all()
+    assert (np.asarray(out["dfs_pos"]) == -1).all()
+    out = top_k_rules(fz, 6, "lift", prefix=(123456,), use_kernel=False)
+    assert (np.asarray(out["node"]) == -1).all()
+
+
+def test_top_k_rules_rejects_unknown_metric():
+    _, fz = _mined_frozen()
+    with pytest.raises(ValueError, match="metric"):
+        top_k_rules(fz, 3, "novelty")
+
+
+def test_dfs_rank_arrays_requires_layout():
+    import dataclasses
+
+    _, fz = _mined_frozen()
+    dt = dataclasses.replace(fz.device_arrays(), dfs_to_node=None)
+    with pytest.raises(ValueError, match="DFS layout"):
+        dfs_rank_arrays(dt)
+
+
+def test_rank_score_formulas():
+    """leverage = sup - sup(A)sup(C), conviction = (1-sup(C))/(1-conf),
+    recovered from the stored (sup, conf, lift) triple."""
+    sup = jnp.asarray([0.2, 0.3], jnp.float32)
+    conf = jnp.asarray([0.5, 1.0], jnp.float32)
+    lift = jnp.asarray([2.0, 1.5], jnp.float32)
+    lev = np.asarray(rank_score("leverage", sup, conf, lift))
+    # sup(A) = sup/conf, sup(C) = conf/lift
+    np.testing.assert_allclose(
+        lev, [0.2 - (0.2 / 0.5) * (0.5 / 2.0), 0.3 - (0.3 / 1.0) * (1.0 / 1.5)],
+        rtol=1e-6,
+    )
+    conv = np.asarray(rank_score("conviction", sup, conf, lift))
+    np.testing.assert_allclose(conv[0], (1 - 0.5 / 2.0) / (1 - 0.5), rtol=1e-6)
+    assert conv[1] == np.float32(1e30)  # confidence-1 rule: capped cap
+    # undefined lift scores 0 for the derived metrics
+    z = jnp.asarray([0.0], jnp.float32)
+    assert float(rank_score("leverage", sup[:1], conf[:1], z)[0]) == 0.0
+    assert float(rank_score("conviction", sup[:1], conf[:1], z)[0]) == 0.0

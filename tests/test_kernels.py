@@ -280,3 +280,36 @@ def test_trie_reduce_sweep(n):
     for a, b in zip(out, ref):
         if np.isfinite(float(b)):
             np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+def test_trie_reduce_empty_trie_guarded():
+    """N=0 must not trace a zero-grid pallas_call and must report zeros
+    (not -inf) in every slot — kernel and oracle agree."""
+    z = jnp.zeros((0,), jnp.float32)
+    zi = jnp.zeros((0,), jnp.int32)
+    out = trie_reduce_pallas(z, z, zi, interpret=True)
+    ref = trie_reduce_ref(z, z, zi)
+    for a, b in zip(out, ref):
+        assert float(a) == 0.0 and float(b) == 0.0
+
+
+def test_trie_reduce_all_padding_max_not_inf():
+    """A live array whose rows are ALL padding/root (depth <= 0) used to
+    leave the max-confidence accumulator at its -inf init value."""
+    rng = np.random.RandomState(3)
+    sup = jnp.asarray(rng.rand(17).astype(np.float32))
+    conf = jnp.asarray(rng.rand(17).astype(np.float32))
+    depth = jnp.zeros((17,), jnp.int32)
+    out = trie_reduce_pallas(sup, conf, depth, interpret=True)
+    ref = trie_reduce_ref(sup, conf, depth)
+    for a, b in zip(out, ref):
+        assert float(a) == 0.0 and float(b) == 0.0
+    # and through the public op (mean_conf must not be NaN/-inf)
+    from repro.core.array_trie import FrozenTrie
+    from repro.core.trie import TrieOfRules
+    from repro.kernels.ops import trie_reduce
+
+    agg = trie_reduce(FrozenTrie.freeze(TrieOfRules()).device_arrays())
+    assert float(agg["n_rules"]) == 0.0
+    assert float(agg["confidence_max"]) == 0.0
+    assert float(agg["mean_conf"]) == 0.0

@@ -20,7 +20,7 @@ from repro.core.array_trie import (
     top_n_nodes,
     traverse_reduce,
 )
-from repro.core.builder import build_flat_table, build_trie_of_rules
+from repro.core.builder import build_trie_of_rules
 
 
 @st.composite
