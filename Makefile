@@ -2,7 +2,7 @@ PY := python
 export PYTHONPATH := src
 
 .PHONY: test lint bench-smoke bench-gate bench-baseline bench-search \
-	bench-topk bench
+	bench-topk bench-build bench
 
 # tier-1 verification (ROADMAP.md)
 test:
@@ -12,29 +12,52 @@ test:
 lint:
 	$(PY) -m ruff check src tests benchmarks examples
 
-# tiny-trie smoke of the search + ranked-extraction benchmarks; writes to
-# separate JSONs so it never clobbers the full-run perf-trajectory artifacts
+# tiny-trie smoke of the search + ranked-extraction + construction
+# benchmarks; writes to separate JSONs so it never clobbers the full-run
+# perf-trajectory artifacts
 bench-smoke:
 	$(PY) -m benchmarks.run --only search --smoke \
-		--json-out BENCH_rule_search_smoke.json --json-out-topk ''
+		--json-out BENCH_rule_search_smoke.json --json-out-topk '' \
+		--json-out-build ''
 	$(PY) -m benchmarks.run --only topk --smoke \
-		--json-out '' --json-out-topk BENCH_topk_smoke.json
+		--json-out '' --json-out-topk BENCH_topk_smoke.json \
+		--json-out-build ''
+	$(PY) -m benchmarks.run --only build_engines --smoke \
+		--json-out '' --json-out-topk '' \
+		--json-out-build BENCH_build_smoke.json
 
-# CI bench gate: fresh smoke run vs the committed baseline
-# (benchmarks/baselines/, ratio-based: fails on >2x relative slowdown of
-# the fused rule-search kernel)
+# CI bench gates: fresh smoke runs vs the committed baselines
+# (benchmarks/baselines/, ratio-based: fail on >2x relative slowdown of
+# an in-run speedup — fused rule search, segmented top-k, array build)
 bench-gate:
 	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
-		--json-out /tmp/bench_fresh_smoke.json --json-out-topk ''
+		--json-out /tmp/bench_fresh_smoke.json --json-out-topk '' \
+		--json-out-build ''
 	$(PY) benchmarks/check_regression.py \
 		--fresh /tmp/bench_fresh_smoke.json
+	$(PY) -m benchmarks.run --only topk --smoke \
+		--json-out '' --json-out-topk /tmp/bench_fresh_topk.json \
+		--json-out-build ''
+	$(PY) benchmarks/check_regression.py \
+		--fresh /tmp/bench_fresh_topk.json
+	$(PY) -m benchmarks.run --only build_engines --smoke \
+		--json-out '' --json-out-topk '' \
+		--json-out-build /tmp/bench_fresh_build.json
+	$(PY) benchmarks/check_regression.py \
+		--fresh /tmp/bench_fresh_build.json
 
-# refresh the committed gate baseline (explicit — bench-smoke never
-# touches it)
+# refresh the committed gate baselines (explicit — bench-smoke never
+# touches them)
 bench-baseline:
 	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
 		--json-out benchmarks/baselines/rule_search_smoke.json \
-		--json-out-topk ''
+		--json-out-topk '' --json-out-build ''
+	$(PY) -m benchmarks.run --only topk --smoke \
+		--json-out '' --json-out-topk benchmarks/baselines/topk_smoke.json \
+		--json-out-build ''
+	$(PY) -m benchmarks.run --only build_engines --smoke \
+		--json-out '' --json-out-topk '' \
+		--json-out-build benchmarks/baselines/build_smoke.json
 
 # full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
 bench-search:
@@ -43,6 +66,10 @@ bench-search:
 # segmented top-k rank kernel vs lax.top_k vs full-sort oracles
 bench-topk:
 	$(PY) -m benchmarks.run --only topk
+
+# pointer vs array-native construction engines (miner → DeviceTrie)
+bench-build:
+	$(PY) -m benchmarks.run --only build_engines
 
 # every paper figure + kernel benches
 bench:

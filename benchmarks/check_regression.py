@@ -1,22 +1,33 @@
-"""CI bench gate: fail on fused rule-search kernel regressions.
+"""CI bench gate: fail on kernel / construction-engine regressions.
 
-Compares a fresh ``--smoke`` run of ``bench_rule_search_kernels`` against
-the committed baseline JSON.  The gate is RATIO-based so it tolerates
-hardware differences between the baseline machine and the CI runner: what
-is compared is the fused kernel's speedup over the seed full-sweep kernel
-*measured within the same run* (``speedup_fused_vs_sweep``), not absolute
+Compares a fresh ``--smoke`` bench JSON against the committed baseline for
+the SAME bench kind.  Every gate is RATIO-based so it tolerates hardware
+differences between the baseline machine and the CI runner: what is
+compared is a speedup *measured within the same run*, never absolute
 microseconds.  A fresh speedup below ``baseline / max-ratio`` for any
-matching (n_edges, batch) config fails the gate.
+matching config fails the gate.
 
-The committed baseline lives at ``benchmarks/baselines/rule_search_smoke.json``
-and is refreshed only by the explicit ``make bench-baseline`` target —
-routine ``make bench-smoke`` runs write elsewhere and can never silently
-rebase the gate.
+Three bench kinds are gated (auto-detected from the fresh JSON's
+``bench`` field):
+
+========================  ==============================  =====================
+kind                      in-run speedup gated            config key
+========================  ==============================  =====================
+``rule_search_kernels``   fused kernel vs seed sweep      (n_edges, batch)
+``topk_rank``             segmented kernel vs full sort   (n_nodes, k, metric)
+``build_engines``         array engine vs pointer build   (dataset, n_sequences)
+========================  ==============================  =====================
+
+The committed baselines live under ``benchmarks/baselines/`` and are
+refreshed only by the explicit ``make bench-baseline`` target — routine
+``make bench-smoke`` runs write elsewhere and can never silently rebase a
+gate.
 
 Usage (see ``make bench-gate``)::
 
     python -m benchmarks.run --only rule_search_kernels --smoke \
-        --json-out /tmp/bench_fresh_smoke.json --json-out-topk ''
+        --json-out /tmp/bench_fresh_smoke.json --json-out-topk '' \
+        --json-out-build ''
     python benchmarks/check_regression.py \
         --fresh /tmp/bench_fresh_smoke.json
 """
@@ -26,37 +37,82 @@ import argparse
 import json
 import sys
 
+GATES = {
+    "rule_search_kernels": {
+        "key": ("n_edges", "batch"),
+        "metric": "speedup_fused_vs_sweep",
+        "label": "fused_vs_sweep",
+        "baseline": "benchmarks/baselines/rule_search_smoke.json",
+    },
+    "topk_rank": {
+        "key": ("n_nodes", "k", "metric"),
+        "metric": "speedup_kernel_vs_fullsort",
+        "label": "kernel_vs_fullsort",
+        "baseline": "benchmarks/baselines/topk_smoke.json",
+    },
+    "build_engines": {
+        "key": ("dataset", "n_sequences"),
+        "metric": "speedup_arrays_vs_pointer",
+        "label": "arrays_vs_pointer",
+        "baseline": "benchmarks/baselines/build_smoke.json",
+    },
+}
 
-def load_results(path: str):
+
+def load_payload(path: str):
     try:
         with open(path) as f:
-            payload = json.load(f)
+            return json.load(f)
     except (OSError, json.JSONDecodeError) as exc:
         print(f"bench-gate: cannot read {path}: {exc}", file=sys.stderr)
         sys.exit(2)
+
+
+def index_results(payload, key_fields):
     return {
-        (r["n_edges"], r["batch"]): r for r in payload.get("results", [])
+        tuple(r[k] for k in key_fields): r
+        for r in payload.get("results", [])
     }
 
 
 def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
-    baseline = load_results(baseline_path)
-    fresh = load_results(fresh_path)
-    common = sorted(set(baseline) & set(fresh))
+    fresh_payload = load_payload(fresh_path)
+    kind = fresh_payload.get("bench")
+    gate = GATES.get(kind)
+    if gate is None:
+        print(
+            f"bench-gate: unknown bench kind {kind!r} in {fresh_path} "
+            f"(known: {sorted(GATES)})", file=sys.stderr,
+        )
+        return 2
+    if baseline_path is None:
+        baseline_path = gate["baseline"]
+    baseline_payload = load_payload(baseline_path)
+    if baseline_payload.get("bench") != kind:
+        print(
+            f"bench-gate: baseline {baseline_path} is "
+            f"{baseline_payload.get('bench')!r}, fresh is {kind!r}",
+            file=sys.stderr,
+        )
+        return 2
+    baseline = index_results(baseline_payload, gate["key"])
+    fresh = index_results(fresh_payload, gate["key"])
+    common = sorted(set(baseline) & set(fresh), key=str)
     if not common:
         print(
-            f"bench-gate: no overlapping (n_edges, batch) configs between "
+            f"bench-gate[{kind}]: no overlapping configs between "
             f"{baseline_path} and {fresh_path}", file=sys.stderr,
         )
         return 2
     failures = 0
     for key in common:
-        base = float(baseline[key]["speedup_fused_vs_sweep"])
-        new = float(fresh[key]["speedup_fused_vs_sweep"])
+        base = float(baseline[key][gate["metric"]])
+        new = float(fresh[key][gate["metric"]])
         floor = base / max_ratio
         verdict = "OK" if new >= floor else "REGRESSION"
+        cfg = ",".join(f"{k}={v}" for k, v in zip(gate["key"], key))
         print(
-            f"bench-gate E={key[0]} Q={key[1]}: fused_vs_sweep "
+            f"bench-gate[{kind}] {cfg}: {gate['label']} "
             f"baseline=x{base:.2f} fresh=x{new:.2f} "
             f"floor=x{floor:.2f} -> {verdict}"
         )
@@ -64,20 +120,24 @@ def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
             failures += 1
     if failures:
         print(
-            f"bench-gate: {failures}/{len(common)} config(s) regressed "
-            f">{max_ratio:.1f}x vs {baseline_path}", file=sys.stderr,
+            f"bench-gate[{kind}]: {failures}/{len(common)} config(s) "
+            f"regressed >{max_ratio:.1f}x vs {baseline_path}",
+            file=sys.stderr,
         )
         return 1
-    print(f"bench-gate: {len(common)} config(s) within {max_ratio:.1f}x")
+    print(
+        f"bench-gate[{kind}]: {len(common)} config(s) within "
+        f"{max_ratio:.1f}x"
+    )
     return 0
 
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
-        "--baseline",
-        default="benchmarks/baselines/rule_search_smoke.json",
-        help="committed smoke baseline JSON",
+        "--baseline", default=None,
+        help="committed smoke baseline JSON (default: the kind's file "
+             "under benchmarks/baselines/)",
     )
     parser.add_argument(
         "--fresh", required=True,
@@ -85,8 +145,8 @@ def main() -> None:
     )
     parser.add_argument(
         "--max-ratio", type=float, default=2.0,
-        help="maximum tolerated relative slowdown of the fused kernel's "
-             "in-run speedup (default 2.0)",
+        help="maximum tolerated relative slowdown of the in-run speedup "
+             "(default 2.0)",
     )
     args = parser.parse_args()
     sys.exit(check(args.baseline, args.fresh, args.max_ratio))

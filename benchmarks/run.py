@@ -17,6 +17,7 @@ BENCHES = [
     ("fig8_9_search", paper_figs.bench_search),
     ("fig10_search_scaling", paper_figs.bench_search_scaling),
     ("fig11_construction", paper_figs.bench_construction),
+    ("fig11_build_engines", paper_figs.bench_build),
     ("fig12_topn_support", paper_figs.bench_topn_support),
     ("fig13_topn_confidence", paper_figs.bench_topn_confidence),
     ("traversal_8x", paper_figs.bench_traversal),
@@ -44,10 +45,16 @@ def main() -> None:
         help="path for the ranked-extraction perf-trajectory JSON "
              "('' disables writing)",
     )
+    parser.add_argument(
+        "--json-out-build", default="BENCH_build.json",
+        help="path for the construction-engine perf-trajectory JSON "
+             "('' disables writing)",
+    )
     args = parser.parse_args()
     paper_figs.SMOKE = args.smoke
     paper_figs.JSON_OUT = args.json_out
     paper_figs.JSON_OUT_TOPK = args.json_out_topk
+    paper_figs.JSON_OUT_BUILD = args.json_out_build
 
     print("name,us_per_call,derived")
     failed = []

@@ -12,35 +12,23 @@ from typing import Dict, FrozenSet, List, Sequence, Tuple
 
 import numpy as np
 
-from .transactions import TransactionDB, popcount_u32
+from .transactions import TransactionDB
 
 Item = int
 ItemSet = FrozenSet[Item]
 
 
-def _count_batch_numpy(
-    db: TransactionDB, candidates: Sequence[Tuple[Item, ...]]
+def _count_batch(
+    db: TransactionDB,
+    candidates: Sequence[Tuple[Item, ...]],
+    use_kernel: bool,
 ) -> np.ndarray:
-    """AND the item bitmap rows of every candidate, popcount-reduce."""
-    out = np.zeros((len(candidates),), dtype=np.int64)
-    for i, cand in enumerate(candidates):
-        acc = db.item_bitmaps[cand[0]].copy()
-        for it in cand[1:]:
-            acc &= db.item_bitmaps[it]
-        out[i] = popcount_u32(acc).sum()
-    return out
-
-
-def _count_batch_kernel(
-    db: TransactionDB, candidates: Sequence[Tuple[Item, ...]]
-) -> np.ndarray:
-    from repro.kernels.ops import support_count  # lazy: keeps arm/ jax-free
-
+    """One ``support_batch`` call per level: vectorized bitmap AND+popcount
+    on host, or a single Pallas ``support_count`` launch with
+    ``use_kernel=True`` (the mining Step 1 hot spot on TPU)."""
     max_len = max(len(c) for c in candidates)
     mat, lens = db.candidate_matrix(candidates, max_len)
-    return np.asarray(
-        support_count(mat, lens, db.item_bitmaps), dtype=np.int64
-    )
+    return db.support_batch(mat, lens, use_kernel=use_kernel)
 
 
 def _generate_candidates(
@@ -82,7 +70,6 @@ def apriori(
 ) -> Dict[ItemSet, int]:
     """All frequent itemsets with support ≥ ``min_support``."""
     min_count = max(1, int(min_support * db.n_transactions + 0.9999999))
-    counter = _count_batch_kernel if use_kernel else _count_batch_numpy
 
     item_counts = db.item_counts()
     level: List[Tuple[Item, ...]] = sorted(
@@ -96,7 +83,7 @@ def apriori(
         candidates = _generate_candidates(level)
         if not candidates:
             break
-        counts = counter(db, candidates)
+        counts = _count_batch(db, candidates, use_kernel)
         count_of = dict(zip(candidates, counts))
         level = sorted(
             c for c, cnt in zip(candidates, counts) if cnt >= min_count

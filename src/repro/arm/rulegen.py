@@ -13,7 +13,9 @@ Fig. 8-13 comparisons are apples-to-apples.
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, Iterable, List, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from repro.core.metrics import Item, Rule, RuleMetrics
 from .transactions import TransactionDB
@@ -30,6 +32,57 @@ def canonical_sequences(
     return [
         tuple(sorted(s, key=lambda it: (rank[it], it))) for s in itemsets
     ]
+
+
+def canonical_matrix(
+    itemsets: Iterable[ItemSet],
+    db: TransactionDB,
+    max_len: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Mined itemsets → the padded canonical int32 ``[S, L]`` matrix + lens.
+
+    The matrix emission API for feeding trie construction (or any other
+    array consumer) directly at the matrix level: rows are -1-padded and
+    re-sorted to frequency order vectorized, the exact canonical form
+    ``core.build_arrays.build_frozen_trie`` produces internally from raw
+    sequence tuples.
+    """
+    from repro.core.build_arrays import canonicalize_matrix, pack_sequences
+    from repro.core.array_trie import item_tables
+
+    mat, lens = pack_sequences(
+        [tuple(s) for s in itemsets], max_len=max_len
+    )
+    _, item_rank = item_tables(db.frequency_order())
+    if mat.size:
+        mat = canonicalize_matrix(mat, item_rank)
+        lens = (mat >= 0).sum(axis=1).astype(np.int32)
+    return mat, lens
+
+
+def sample_rule_sequences(
+    db: TransactionDB, n: int, max_len: int = 8, seed: int = 0
+) -> List[Tuple[Item, ...]]:
+    """``n`` random frequency-ordered sequences drawn from real
+    transactions (construction-benchmark workload: supports are genuine,
+    prefix sharing mirrors mined rulesets without paying a full mine)."""
+    rng = np.random.RandomState(seed)
+    order = db.frequency_order()
+    rank = {it: r for r, it in enumerate(order)}
+    non_empty = [sorted(t) for t in db.transactions if t]
+    if not non_empty:
+        return []
+    out: List[Tuple[Item, ...]] = []
+    picks = rng.randint(0, len(non_empty), size=n)
+    for tid in picks:
+        t = non_empty[tid]
+        k = rng.randint(1, min(max_len, len(t)) + 1)
+        idx = rng.choice(len(t), size=k, replace=False)
+        items = [t[i] for i in idx]
+        out.append(
+            tuple(sorted(items, key=lambda it: (rank[it], it)))
+        )
+    return out
 
 
 def distinct_paths(

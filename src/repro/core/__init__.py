@@ -18,9 +18,19 @@ from .array_trie import (
     top_n_nodes,
     traverse_reduce,
 )
+from .build_arrays import (
+    build_frozen_trie,
+    canonicalize_matrix,
+    pack_sequences,
+    trie_arrays,
+)
 from .builder import BuildResult, build_flat_table, build_trie_of_rules
 
 __all__ = [
+    "build_frozen_trie",
+    "canonicalize_matrix",
+    "pack_sequences",
+    "trie_arrays",
     "Rule",
     "RuleMetrics",
     "compound_confidence",

@@ -1,7 +1,7 @@
 """Frozen Trie of Rules — TPU-native structure-of-arrays / CSR encoding.
 
 This is the hardware adaptation of the paper's data structure (DESIGN.md §2):
-the pointer trie is frozen once into flat arrays
+a trie as flat arrays
 
     node_item / node_parent / node_depth          int32[N]
     support / confidence / lift                   float32[N]   (metric columns)
@@ -39,6 +39,15 @@ The same CSR bucket descent runs inside the fused Pallas kernel
 path for CPU/GPU/TPU-without-kernel.  A ``DeviceTrie`` with
 ``child_offsets=None`` falls back to the seed full-table lexicographic
 binary search (kept for comparison benchmarks).
+
+Two construction engines emit this encoding:
+
+* ``FrozenTrie.freeze(pointer_trie)`` — the per-node BFS walk over the
+  paper-faithful ``trie.TrieOfRules``; kept as the parity oracle.
+* ``core.build_arrays.build_frozen_trie`` — the array-native production
+  path: vectorized prefix dedup straight from the canonical sequence
+  matrix plus one batched Step-3 annotation pass (no Python-per-node
+  work); bit-identical to ``freeze`` by construction and by test.
 """
 from __future__ import annotations
 
@@ -56,6 +65,23 @@ from .metrics import Item
 from .trie import TrieNode, TrieOfRules
 
 NO_NODE = np.int32(-1)
+
+
+def item_tables(item_order) -> Tuple[np.ndarray, np.ndarray]:
+    """Frequency-order lookup tables shared by both construction engines.
+
+    ``item_order`` is the rank→item list (``TransactionDB.frequency_order``
+    / ``TrieOfRules._rank`` sorted by rank).  Returns ``(item_order
+    int32[n], item_rank int32[max_item+1])`` where unknown items map to a
+    huge rank, exactly as ``TrieOfRules.canonical`` treats them.
+    """
+    item_order = np.asarray(list(item_order), dtype=np.int32)
+    max_item = int(item_order.max()) if item_order.size else 0
+    item_rank = np.full(
+        (max_item + 1,), np.iinfo(np.int32).max // 2, dtype=np.int32
+    )
+    item_rank[item_order] = np.arange(item_order.size, dtype=np.int32)
+    return item_order, item_rank
 
 
 def csr_offsets_from_edges(
@@ -231,14 +257,7 @@ class FrozenTrie:
         edges.sort()
         e = np.array(edges, dtype=np.int32).reshape(-1, 3)
         rank_pairs = sorted(trie._rank.items(), key=lambda kv: kv[1])
-        item_order = np.array(
-            [it for it, _ in rank_pairs], dtype=np.int32
-        )
-        max_item = int(item_order.max()) if item_order.size else 0
-        item_rank = np.full((max_item + 1,), np.iinfo(np.int32).max // 2,
-                            dtype=np.int32)
-        for it, r in rank_pairs:
-            item_rank[it] = r
+        item_order, item_rank = item_tables([it for it, _ in rank_pairs])
         return cls(
             node_item=node_item,
             node_parent=node_parent,

@@ -8,7 +8,11 @@ Step 3 annotates every node with Support / Confidence / Lift.
 This module is deliberately plain CPython with pointer nodes and dict
 children — it is the reproduction BASELINE that the benchmarks compare
 against ``flat_table.FlatRuleTable`` (the dataframe stand-in), exactly like
-the paper's Fig. 8-13.  The TPU-native encoding lives in ``array_trie.py``.
+the paper's Fig. 8-13.  The TPU-native encoding lives in ``array_trie.py``;
+production construction no longer freezes this pointer trie but builds the
+arrays directly (``core.build_arrays``), so this implementation survives
+primarily as the parity ORACLE the array engine is tested field-for-field
+against.
 """
 from __future__ import annotations
 

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.array_trie import DeviceTrie, child_lookup
 
-from .metrics_inkernel import RANK_METRICS, compound_lift
+from .metrics_inkernel import RANK_METRICS, compound_lift, rank_score
 from .rank import topk_rank_pallas
 from .ref import topk_rank_ref
 from .support_count import support_count_pallas
@@ -34,22 +34,33 @@ def _interpret() -> bool:
 def members_from_candidates(
     candidates: jax.Array, n_items: int
 ) -> jax.Array:
-    """[C, K] padded item lists → [C, I] 0/1 membership (one-hot scatter)."""
+    """[C, K] padded item lists → [C, I] 0/1 membership.
+
+    A row-indexed scatter-max, NOT a one-hot sum: annotation batches reach
+    C ≈ 1e5+ nodes, where materializing the [C, K, I] one-hot would cost
+    gigabytes; the scatter peaks at the [C, I] output itself.
+    """
     c, k = candidates.shape
     valid = candidates >= 0
     safe = jnp.where(valid, candidates, 0)
-    onehot = jax.nn.one_hot(safe, n_items, dtype=jnp.float32)
-    onehot = onehot * valid[..., None]
-    return jnp.clip(jnp.sum(onehot, axis=1), 0.0, 1.0)
+    rows = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[:, None], (c, k))
+    member = jnp.zeros((c, n_items), jnp.float32)
+    return member.at[rows, safe].max(valid.astype(jnp.float32))
 
 
 def support_count(
     candidates,            # int32 [C, K] padded with -1
-    lengths,               # int32 [C]
+    lengths,               # int32 [C]; <= 0 marks padding rows (count 0)
     item_bitmaps=None,     # uint32 [I, W] vertical layout (TransactionDB)
     dense_tx=None,         # or [T, I] 0/1 dense transactions
 ) -> jax.Array:
-    """Counts for every candidate itemset against the transaction DB."""
+    """Counts for every candidate itemset against the transaction DB.
+
+    The in-kernel match test compares against the number of DISTINCT
+    items per row (recomputed from the 0/1 membership), so candidate rows
+    with repeated items — e.g. duplicate-item trie paths — count their
+    item SET, matching the bitmap AND semantics.
+    """
     if dense_tx is None:
         if item_bitmaps is None:
             raise ValueError("need item_bitmaps or dense_tx")
@@ -58,8 +69,10 @@ def support_count(
     candidates = jnp.asarray(candidates, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
     member = members_from_candidates(candidates, dense_tx.shape[1])
+    distinct = jnp.sum(member, axis=1).astype(jnp.int32)
+    eff_len = jnp.where(lengths > 0, distinct, -1)
     return support_count_pallas(
-        dense_tx, member, lengths, interpret=_interpret()
+        dense_tx, member, eff_len, interpret=_interpret()
     )
 
 
@@ -70,6 +83,53 @@ def dense_from_bitmaps(item_bitmaps: np.ndarray) -> np.ndarray:
         item_bitmaps.view(np.uint8).reshape(i, w, 4), axis=-1, bitorder="little"
     )  # [I, W, 32]
     return bits.reshape(i, w * 32).T.astype(np.uint8)
+
+
+def annotate_candidates(
+    candidates,            # int32 [C, K] node root-path items, -1 padded
+    lengths,               # int32 [C] path depths
+    node_parent,           # int32 [C] parent node id per node (0 = root)
+    node_item,             # int32 [C] consequent item per node
+    item_counts,           # int/float [n_items] absolute item frequencies
+    n_transactions: int,
+    item_bitmaps=None,     # uint32 [I, W] vertical layout (TransactionDB)
+    dense_tx=None,         # or [T, I] 0/1 dense transactions
+) -> Dict[str, jax.Array]:
+    """Step-3 batched trie annotation: every node metric in one pass.
+
+    Node ids are BFS/depth-major (``FrozenTrie`` numbering, root = 0), so
+    row ``i`` describes node ``i + 1``.  Supports come from ONE
+    ``support_count`` kernel launch over the whole candidate matrix
+    (``[T,I]@[C,I]^T`` on the MXU) — replacing the pointer pipeline's N
+    per-node popcount calls — and the Confidence/Lift columns are pure
+    array ops against the parent supports via ``node_parent`` gathers.
+    Leverage and conviction are derived with the same shared
+    ``metrics_inkernel.rank_score`` math the rank kernel uses.
+    """
+    counts = support_count(candidates, lengths, item_bitmaps, dense_tx)
+    n_tx = jnp.maximum(jnp.float32(n_transactions), 1.0)
+    sup = counts.astype(jnp.float32) / n_tx
+    # parent-support gather; virtual root slot = Support(∅) = 1.0
+    sup_full = jnp.concatenate([jnp.ones((1,), jnp.float32), sup])
+    psup = sup_full[jnp.asarray(node_parent, jnp.int32)]
+    conf = jnp.where(
+        psup > 0, sup / jnp.where(psup > 0, psup, 1.0), 0.0
+    )
+    isup = (
+        jnp.asarray(item_counts, jnp.float32)[
+            jnp.asarray(node_item, jnp.int32)
+        ] / n_tx
+    )
+    lift = jnp.where(
+        isup > 0, conf / jnp.where(isup > 0, isup, 1.0), 0.0
+    )
+    return {
+        "support": sup,
+        "confidence": conf,
+        "lift": lift,
+        "leverage": rank_score("leverage", sup, conf, lift),
+        "conviction": rank_score("conviction", sup, conf, lift),
+    }
 
 
 # ----------------------------------------------------------------------

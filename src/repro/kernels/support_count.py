@@ -58,6 +58,11 @@ def support_count_pallas(
     t, i = dense_tx.shape
     c, i2 = member.shape
     assert i == i2, (i, i2)
+    if c == 0 or t == 0:
+        # no candidates / no transactions: nothing to count, and a
+        # zero-extent grid dimension must not be traced (same guard as
+        # trie_reduce's N=0 case)
+        return jnp.zeros((c,), jnp.int32)
 
     tp = -t % BT
     cp = -c % BC

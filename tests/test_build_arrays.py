@@ -1,0 +1,365 @@
+"""Array-native construction pipeline: deterministic parity + edge cases.
+
+The pointer pipeline (``TrieOfRules.build`` → ``annotate`` →
+``FrozenTrie.freeze``) is the oracle; ``core.build_arrays`` must reproduce
+its output field-for-field.  Randomized (hypothesis) coverage lives in
+``test_build_properties.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.arm.apriori import apriori
+from repro.arm.datasets import grocery_db, paper_example_db
+from repro.arm.rulegen import canonical_matrix, sample_rule_sequences
+from repro.arm.transactions import TransactionDB
+from repro.core.array_trie import FrozenTrie, item_tables
+from repro.core.build_arrays import (
+    annotate_columns,
+    build_frozen_trie,
+    canonicalize_matrix,
+    incremental_path_counts,
+    pack_sequences,
+    trie_arrays,
+)
+from repro.core.builder import build_trie_of_rules
+from repro.core.trie import TrieOfRules
+
+FROZEN_FIELDS = (
+    "node_item", "node_parent", "node_depth",
+    "edge_parent", "edge_item", "edge_child", "child_offsets",
+    "dfs_order", "subtree_size", "dfs_to_node",
+    "item_order", "item_rank",
+)
+METRIC_FIELDS = ("support", "confidence", "lift")
+
+
+def pointer_freeze(db, sequences):
+    trie = TrieOfRules(item_order=db.frequency_order())
+    trie.build(sequences)
+    trie.annotate(db.support_fn())
+    return FrozenTrie.freeze(trie)
+
+
+def assert_frozen_equal(expected, actual, fp32_exact=True):
+    for fld in FROZEN_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(expected, fld), getattr(actual, fld), err_msg=fld
+        )
+    assert expected.max_fanout == actual.max_fanout
+    for fld in METRIC_FIELDS:
+        a, b = getattr(expected, fld), getattr(actual, fld)
+        if fp32_exact:
+            np.testing.assert_array_equal(a, b, err_msg=fld)
+        else:
+            np.testing.assert_allclose(
+                a, b, rtol=1e-6, atol=1e-7, err_msg=fld
+            )
+
+
+def random_db(seed, n_items=12, n_tx=40, max_size=6):
+    rng = np.random.RandomState(seed)
+    txs = [
+        set(rng.randint(0, n_items, size=rng.randint(1, max_size + 1)))
+        for _ in range(n_tx)
+    ]
+    return TransactionDB(txs, n_items=n_items)
+
+
+class TestStructure:
+    def test_manual_sequences(self):
+        """Hand-checked trie: ids BFS/depth-major, siblings item-sorted."""
+        db = TransactionDB([[0, 1], [0, 2], [1, 2], [0]], n_items=3)
+        # frequency order: 0, 1, 2 (counts 3, 2, 2 -> tie by id)
+        seqs = [(0, 1), (0, 2), (1, 2), (0,), (1,)]
+        mat, lens = pack_sequences(seqs)
+        arrs = trie_arrays(mat, lens)
+        np.testing.assert_array_equal(
+            arrs["node_item"], [-1, 0, 1, 1, 2, 2]
+        )
+        np.testing.assert_array_equal(
+            arrs["node_parent"], [-1, 0, 0, 1, 1, 2]
+        )
+        np.testing.assert_array_equal(
+            arrs["node_depth"], [0, 1, 1, 2, 2, 2]
+        )
+        # candidate rows are the root paths of nodes 1..N-1
+        np.testing.assert_array_equal(
+            arrs["cand"],
+            [[0, -1], [1, -1], [0, 1], [0, 2], [1, 2]],
+        )
+
+    def test_duplicate_sequences_dedup(self):
+        db = paper_example_db()
+        seqs = [(1, 2, 3), (1, 2, 3), (1, 2), (1, 2, 3)]
+        fz, _, _ = build_frozen_trie(db, seqs)
+        assert fz.n_nodes == 4  # root + 3 path nodes, duplicates collapsed
+        assert_frozen_equal(pointer_freeze(db, seqs), fz)
+
+    def test_duplicate_items_within_sequence(self):
+        """Duplicate items walk duplicate path steps, exactly like the
+        pointer insert (a ``2/2/5`` path for ``(2, 2, 5)``)."""
+        db = paper_example_db()
+        fz, _, _ = build_frozen_trie(db, [(2, 2, 5), (5, 5)])
+        oracle = pointer_freeze(db, [(2, 2, 5), (5, 5)])
+        assert_frozen_equal(oracle, fz)
+
+    def test_length_one_paths(self):
+        db = paper_example_db()
+        seqs = [(0,), (5,), (2,)]
+        fz, _, _ = build_frozen_trie(db, seqs)
+        assert fz.n_nodes == 4
+        assert fz.max_depth == 1
+        assert_frozen_equal(pointer_freeze(db, seqs), fz)
+
+    def test_empty_sequences(self):
+        db = paper_example_db()
+        fz, _, _ = build_frozen_trie(db, [])
+        assert fz.n_nodes == 1
+        assert fz.n_edges == 0
+        assert_frozen_equal(pointer_freeze(db, []), fz)
+
+    def test_empty_db(self):
+        db = TransactionDB([], n_items=4)
+        fz, _, _ = build_frozen_trie(db, [])
+        assert fz.n_nodes == 1
+        assert_frozen_equal(pointer_freeze(db, []), fz)
+
+    def test_single_item_db(self):
+        db = TransactionDB([[0], [0], [0]], n_items=1)
+        seqs = [(0,)]
+        fz, _, _ = build_frozen_trie(db, seqs)
+        oracle = pointer_freeze(db, seqs)
+        assert_frozen_equal(oracle, fz)
+        assert float(fz.support[1]) == 1.0
+
+    def test_uncanonical_input_is_canonicalized(self):
+        """Items arriving in arbitrary order sort to frequency order,
+        exactly like the pointer insert's ``canonical`` pre-sort."""
+        db = paper_example_db()
+        seqs = [(12, 5, 2), (0, 5)]
+        fz, _, _ = build_frozen_trie(db, seqs)
+        assert_frozen_equal(pointer_freeze(db, seqs), fz)
+
+
+class TestCanonicalizeMatrix:
+    def test_matches_pointer_canonical(self):
+        db = paper_example_db()
+        trie = TrieOfRules(item_order=db.frequency_order())
+        _, item_rank = item_tables(db.frequency_order())
+        rows = [(12, 5, 2), (0,), (15, 0, 5, 2), (3, 3, 1)]
+        mat, _ = pack_sequences(rows)
+        cm = canonicalize_matrix(mat, item_rank)
+        for i, row in enumerate(rows):
+            expect = trie.canonical(row)
+            got = tuple(x for x in cm[i] if x >= 0)
+            assert got == tuple(expect), (row, got, expect)
+
+    def test_canonical_matrix_emission(self):
+        db = paper_example_db()
+        itemsets = apriori(db, 0.3)
+        mat, lens = canonical_matrix(itemsets.keys(), db)
+        assert mat.shape[0] == len(itemsets)
+        from repro.arm.rulegen import canonical_sequences
+
+        expect = canonical_sequences(itemsets.keys(), db)
+        got = [tuple(x for x in row if x >= 0) for row in mat]
+        assert got == expect
+        np.testing.assert_array_equal(lens, [len(s) for s in expect])
+
+
+class TestSupportBatch:
+    def test_matches_itemset_count(self):
+        db = random_db(0)
+        rng = np.random.RandomState(1)
+        cands = [
+            tuple(
+                set(rng.randint(0, db.n_items, size=rng.randint(1, 5)))
+            )
+            for _ in range(200)
+        ]
+        mat, lens = db.candidate_matrix(cands, 4)
+        counts = db.support_batch(mat, lens)
+        expect = [db.itemset_count(c) for c in cands]
+        np.testing.assert_array_equal(counts, expect)
+
+    def test_kernel_path_matches(self):
+        db = random_db(2, n_items=9, n_tx=33)
+        rng = np.random.RandomState(3)
+        cands = [
+            tuple(set(rng.randint(0, db.n_items, size=rng.randint(1, 4))))
+            for _ in range(40)
+        ]
+        mat, lens = db.candidate_matrix(cands, 3)
+        np.testing.assert_array_equal(
+            db.support_batch(mat, lens, use_kernel=True),
+            db.support_batch(mat, lens, use_kernel=False),
+        )
+
+    def test_empty_itemset_counts_all_transactions(self):
+        db = random_db(4, n_tx=37)
+        mat = np.full((3, 2), -1, np.int32)
+        mat[1, 0] = 0
+        counts = db.support_batch(mat)
+        assert counts[0] == db.n_transactions
+        assert counts[2] == db.n_transactions
+        assert counts[1] == db.itemset_count([0])
+
+    def test_out_of_range_item_raises(self):
+        db = random_db(5)
+        with pytest.raises(ValueError):
+            db.support_batch(np.array([[db.n_items]], np.int32))
+
+    def test_incremental_path_counts_match(self):
+        db = random_db(6)
+        seqs = sample_rule_sequences(db, 300, max_len=5, seed=7)
+        fz, _, _ = build_frozen_trie(db, seqs)
+        counts = incremental_path_counts(
+            db, fz.node_item, fz.node_parent, fz.node_depth
+        )
+        for nid in range(1, fz.n_nodes):
+            assert counts[nid - 1] == db.itemset_count(fz.path_items(nid))
+
+
+class TestAnnotation:
+    def test_annotate_columns_bitwise_vs_pointer(self):
+        db = grocery_db()
+        seqs = sample_rule_sequences(db, 2_000, max_len=6, seed=0)
+        fz, _, _ = build_frozen_trie(db, seqs)
+        assert_frozen_equal(pointer_freeze(db, seqs), fz)
+
+    def test_kernel_annotate_matches_host(self):
+        """use_kernel=True: ONE Pallas support_count launch + jnp column
+        math — fp32-tolerant against the float64 host path."""
+        db = random_db(8, n_items=10, n_tx=50)
+        seqs = sample_rule_sequences(db, 60, max_len=4, seed=9)
+        host, _, _ = build_frozen_trie(db, seqs, use_kernel=False)
+        kern, _, _ = build_frozen_trie(db, seqs, use_kernel=True)
+        assert_frozen_equal(host, kern, fp32_exact=False)
+
+    def test_annotate_candidates_rank_columns(self):
+        """The batched annotate op's leverage/conviction derive from the
+        same shared rank_score math the rank kernel uses."""
+        from repro.kernels.metrics_inkernel import rank_score
+        from repro.kernels.ops import annotate_candidates
+
+        db = random_db(10, n_items=8, n_tx=40)
+        seqs = sample_rule_sequences(db, 40, max_len=3, seed=11)
+        fz, _, _ = build_frozen_trie(db, seqs)
+        if fz.n_nodes <= 1:
+            pytest.skip("degenerate trie")
+        cand = np.stack(
+            [
+                np.pad(
+                    np.asarray(fz.path_items(nid), np.int32),
+                    (0, fz.max_depth - int(fz.node_depth[nid])),
+                    constant_values=-1,
+                )
+                for nid in range(1, fz.n_nodes)
+            ]
+        )
+        out = annotate_candidates(
+            cand, fz.node_depth[1:], fz.node_parent[1:], fz.node_item[1:],
+            db.item_counts(), db.n_transactions,
+            item_bitmaps=db.item_bitmaps,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["support"]), fz.support[1:], rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["confidence"]), fz.confidence[1:],
+            rtol=1e-6, atol=1e-7,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["lift"]), fz.lift[1:], rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["leverage"]),
+            np.asarray(rank_score(
+                "leverage", out["support"], out["confidence"], out["lift"]
+            )),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["conviction"]),
+            np.asarray(rank_score(
+                "conviction", out["support"], out["confidence"], out["lift"]
+            )),
+        )
+
+    def test_annotate_columns_zero_guards(self):
+        """Zero parent / item support → 0 confidence / lift, like the
+        pointer metrics helpers."""
+        node_parent = np.array([-1, 0, 1], np.int32)
+        node_item = np.array([-1, 0, 1], np.int32)
+        counts = np.array([0, 0], np.int64)
+        sup, conf, lift = annotate_columns(
+            counts, node_parent, node_item, 10, np.array([0, 5])
+        )
+        np.testing.assert_array_equal(sup, [0.0, 0.0, 0.0])
+        np.testing.assert_array_equal(conf, [0.0, 0.0, 0.0])
+        np.testing.assert_array_equal(lift, [0.0, 0.0, 0.0])
+
+
+class TestBuilderWiring:
+    def test_engine_arrays_end_to_end(self):
+        db = paper_example_db()
+        ptr = build_trie_of_rules(db, 0.3, miner="fpgrowth")
+        arr = build_trie_of_rules(
+            db, 0.3, miner="fpgrowth", engine="arrays"
+        )
+        assert arr.trie is None and arr.frozen is not None
+        assert arr.engine == "arrays"
+        assert_frozen_equal(FrozenTrie.freeze(ptr.trie), arr.frozen)
+        # .freeze() on the arrays result is the cached arrays output
+        assert arr.freeze() is arr.frozen
+
+    def test_engine_both(self):
+        db = paper_example_db()
+        res = build_trie_of_rules(db, 0.3, miner="fpgrowth", engine="both")
+        assert res.trie is not None and res.frozen is not None
+        assert res.array_construct_seconds > 0.0
+        assert_frozen_equal(FrozenTrie.freeze(res.trie), res.frozen)
+
+    def test_engine_invalid(self):
+        db = paper_example_db()
+        with pytest.raises(ValueError):
+            build_trie_of_rules(db, 0.3, engine="nope")
+
+    def test_use_kernel_threads_to_apriori(self):
+        """Step 1 through the Pallas support_count kernel: identical
+        itemsets AND identical trie to the numpy-counted path."""
+        db = random_db(12, n_items=10, n_tx=45)
+        a = build_trie_of_rules(db, 0.2, miner="apriori", use_kernel=False)
+        b = build_trie_of_rules(db, 0.2, miner="apriori", use_kernel=True)
+        assert a.itemsets == b.itemsets
+        assert_frozen_equal(
+            FrozenTrie.freeze(a.trie), FrozenTrie.freeze(b.trie)
+        )
+
+    def test_apriori_kernel_parity_random_db(self):
+        for seed in (20, 21):
+            db = random_db(seed, n_items=11, n_tx=60, max_size=5)
+            assert apriori(db, 0.15, use_kernel=True) == apriori(
+                db, 0.15, use_kernel=False
+            )
+
+
+class TestSupportCountGuards:
+    def test_zero_candidates(self):
+        from repro.kernels.ops import support_count
+
+        db = random_db(30)
+        counts = support_count(
+            np.zeros((0, 3), np.int32), np.zeros((0,), np.int32),
+            item_bitmaps=db.item_bitmaps,
+        )
+        assert np.asarray(counts).shape == (0,)
+
+    def test_members_scatter(self):
+        from repro.kernels.ops import members_from_candidates
+
+        cand = np.array([[2, 0, -1], [-1, -1, -1], [1, 1, 1]], np.int32)
+        m = np.asarray(members_from_candidates(cand, 4))
+        np.testing.assert_array_equal(
+            m,
+            [[1, 0, 1, 0], [0, 0, 0, 0], [0, 1, 0, 0]],
+        )

@@ -1,0 +1,129 @@
+"""Hypothesis property tests for the array-native construction engine.
+
+Random transaction databases → ``core.build_arrays.build_frozen_trie``
+must equal ``FrozenTrie.freeze(pointer trie)`` FIELD-FOR-FIELD: structural
+arrays exactly, metric columns to fp32 tolerance (in practice bit-equal,
+since both engines run the same float64 op order before the cast).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.arm.apriori import apriori
+from repro.arm.rulegen import canonical_sequences
+from repro.arm.transactions import TransactionDB
+from repro.core.array_trie import FrozenTrie
+from repro.core.build_arrays import build_frozen_trie
+from repro.core.builder import build_trie_of_rules
+from repro.core.trie import TrieOfRules
+
+FROZEN_FIELDS = (
+    "node_item", "node_parent", "node_depth",
+    "edge_parent", "edge_item", "edge_child", "child_offsets",
+    "dfs_order", "subtree_size", "dfs_to_node",
+    "item_order", "item_rank",
+)
+METRIC_FIELDS = ("support", "confidence", "lift")
+
+
+@st.composite
+def transaction_dbs(draw):
+    n_items = draw(st.integers(min_value=3, max_value=14))
+    n_tx = draw(st.integers(min_value=4, max_value=40))
+    txs = []
+    for _ in range(n_tx):
+        size = draw(st.integers(min_value=1, max_value=min(6, n_items)))
+        tx = draw(
+            st.sets(
+                st.integers(min_value=0, max_value=n_items - 1),
+                min_size=1,
+                max_size=size,
+            )
+        )
+        txs.append(tx)
+    return TransactionDB(txs, n_items=n_items)
+
+
+@st.composite
+def db_and_minsup(draw):
+    db = draw(transaction_dbs())
+    minsup = draw(st.sampled_from([0.1, 0.2, 0.3, 0.5]))
+    return db, minsup
+
+
+def assert_field_for_field(expected: FrozenTrie, actual: FrozenTrie):
+    for fld in FROZEN_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(expected, fld), getattr(actual, fld), err_msg=fld
+        )
+    assert expected.max_fanout == actual.max_fanout
+    for fld in METRIC_FIELDS:
+        np.testing.assert_allclose(
+            getattr(expected, fld), getattr(actual, fld),
+            rtol=1e-6, atol=1e-7, err_msg=fld,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_and_minsup())
+def test_build_arrays_equals_pointer_freeze(case):
+    """The tentpole invariant: mined sequences through both engines."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpgrowth", engine="both")
+    assert_field_for_field(FrozenTrie.freeze(res.trie), res.frozen)
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_and_minsup())
+def test_build_arrays_equals_freeze_fpmax(case):
+    """Maximal-itemset sequences (sparser tries, deeper relative paths)."""
+    db, minsup = case
+    res = build_trie_of_rules(db, minsup, miner="fpmax", engine="both")
+    assert_field_for_field(FrozenTrie.freeze(res.trie), res.frozen)
+
+
+@settings(max_examples=15, deadline=None)
+@given(transaction_dbs(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_build_arrays_on_raw_subsets(db, seed):
+    """Arbitrary (non-mined) sequence lists, duplicates included."""
+    rng = np.random.RandomState(seed)
+    txs = [sorted(t) for t in db.transactions if t]
+    seqs = []
+    for _ in range(30):
+        t = txs[rng.randint(0, len(txs))]
+        k = rng.randint(1, len(t) + 1)
+        seqs.append(tuple(t[i] for i in rng.choice(len(t), k, replace=False)))
+    if seqs:
+        seqs.append(seqs[0])   # guaranteed duplicate sequence
+    trie = TrieOfRules(item_order=db.frequency_order())
+    trie.build(seqs)
+    trie.annotate(db.support_fn())
+    frozen, _, _ = build_frozen_trie(db, seqs)
+    assert_field_for_field(FrozenTrie.freeze(trie), frozen)
+
+
+@settings(max_examples=15, deadline=None)
+@given(db_and_minsup())
+def test_support_batch_matches_itemset_count(case):
+    db, minsup = case
+    itemsets = apriori(db, minsup, max_len=6)
+    seqs = canonical_sequences(itemsets.keys(), db)
+    if not seqs:
+        return
+    width = max(len(s) for s in seqs)
+    mat, lens = db.candidate_matrix(seqs, width)
+    counts = db.support_batch(mat, lens)
+    expect = [db.itemset_count(s) for s in seqs]
+    np.testing.assert_array_equal(counts, expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(db_and_minsup())
+def test_apriori_kernel_counting_parity(case):
+    """Mining Step 1 through the Pallas kernel == the numpy bitmap path."""
+    db, minsup = case
+    assert apriori(db, minsup, max_len=5, use_kernel=True) == apriori(
+        db, minsup, max_len=5, use_kernel=False
+    )
