@@ -1,12 +1,20 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test lint bench-smoke bench-gate bench-baseline bench-search \
-	bench-topk bench-build bench
+.PHONY: test test-fast test-slow lint bench-smoke bench-gate \
+	bench-baseline bench-search bench-topk bench-build bench-batched bench
 
 # tier-1 verification (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
+
+# the CI split: fast excludes @pytest.mark.slow (target < ~2 min with
+# HYPOTHESIS_PROFILE=ci), slow runs only the marked cases
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+test-slow:
+	$(PY) -m pytest -x -q -m slow
 
 # static checks (ruff config lives in pyproject.toml)
 lint:
@@ -18,13 +26,16 @@ lint:
 bench-smoke:
 	$(PY) -m benchmarks.run --only search --smoke \
 		--json-out BENCH_rule_search_smoke.json --json-out-topk '' \
-		--json-out-build ''
+		--json-out-build '' --json-out-batched ''
 	$(PY) -m benchmarks.run --only topk --smoke \
 		--json-out '' --json-out-topk BENCH_topk_smoke.json \
-		--json-out-build ''
+		--json-out-build '' --json-out-batched ''
 	$(PY) -m benchmarks.run --only build_engines --smoke \
 		--json-out '' --json-out-topk '' \
-		--json-out-build BENCH_build_smoke.json
+		--json-out-build BENCH_build_smoke.json --json-out-batched ''
+	$(PY) -m benchmarks.run --only batched_query --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched BENCH_batched_query_smoke.json
 
 # CI bench gates: fresh smoke runs vs the committed baselines
 # (benchmarks/baselines/, ratio-based: fail on >2x relative slowdown of
@@ -32,32 +43,41 @@ bench-smoke:
 bench-gate:
 	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
 		--json-out /tmp/bench_fresh_smoke.json --json-out-topk '' \
-		--json-out-build ''
+		--json-out-build '' --json-out-batched ''
 	$(PY) benchmarks/check_regression.py \
 		--fresh /tmp/bench_fresh_smoke.json
 	$(PY) -m benchmarks.run --only topk --smoke \
 		--json-out '' --json-out-topk /tmp/bench_fresh_topk.json \
-		--json-out-build ''
+		--json-out-build '' --json-out-batched ''
 	$(PY) benchmarks/check_regression.py \
 		--fresh /tmp/bench_fresh_topk.json
 	$(PY) -m benchmarks.run --only build_engines --smoke \
 		--json-out '' --json-out-topk '' \
-		--json-out-build /tmp/bench_fresh_build.json
+		--json-out-build /tmp/bench_fresh_build.json --json-out-batched ''
 	$(PY) benchmarks/check_regression.py \
 		--fresh /tmp/bench_fresh_build.json
+	$(PY) -m benchmarks.run --only batched_query --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched /tmp/bench_fresh_batched.json
+	$(PY) benchmarks/check_regression.py \
+		--fresh /tmp/bench_fresh_batched.json
 
 # refresh the committed gate baselines (explicit — bench-smoke never
 # touches them)
 bench-baseline:
 	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
 		--json-out benchmarks/baselines/rule_search_smoke.json \
-		--json-out-topk '' --json-out-build ''
+		--json-out-topk '' --json-out-build '' --json-out-batched ''
 	$(PY) -m benchmarks.run --only topk --smoke \
 		--json-out '' --json-out-topk benchmarks/baselines/topk_smoke.json \
-		--json-out-build ''
+		--json-out-build '' --json-out-batched ''
 	$(PY) -m benchmarks.run --only build_engines --smoke \
 		--json-out '' --json-out-topk '' \
-		--json-out-build benchmarks/baselines/build_smoke.json
+		--json-out-build benchmarks/baselines/build_smoke.json \
+		--json-out-batched ''
+	$(PY) -m benchmarks.run --only batched_query --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched benchmarks/baselines/batched_query_smoke.json
 
 # full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
 bench-search:
@@ -70,6 +90,10 @@ bench-topk:
 # pointer vs array-native construction engines (miner → DeviceTrie)
 bench-build:
 	$(PY) -m benchmarks.run --only build_engines
+
+# one-launch batched query ops vs the Q-launch loop (serving shape)
+bench-batched:
+	$(PY) -m benchmarks.run --only batched_query
 
 # every paper figure + kernel benches
 bench:

@@ -7,7 +7,7 @@ compared is a speedup *measured within the same run*, never absolute
 microseconds.  A fresh speedup below ``baseline / max-ratio`` for any
 matching config fails the gate.
 
-Three bench kinds are gated (auto-detected from the fresh JSON's
+Four bench kinds are gated (auto-detected from the fresh JSON's
 ``bench`` field):
 
 ========================  ==============================  =====================
@@ -16,6 +16,7 @@ kind                      in-run speedup gated            config key
 ``rule_search_kernels``   fused kernel vs seed sweep      (n_edges, batch)
 ``topk_rank``             segmented kernel vs full sort   (n_nodes, k, metric)
 ``build_engines``         array engine vs pointer build   (dataset, n_sequences)
+``batched_query``         one-launch batch vs Q launches  (op, n_edges, batch)
 ========================  ==============================  =====================
 
 The committed baselines live under ``benchmarks/baselines/`` and are
@@ -55,6 +56,12 @@ GATES = {
         "metric": "speedup_arrays_vs_pointer",
         "label": "arrays_vs_pointer",
         "baseline": "benchmarks/baselines/build_smoke.json",
+    },
+    "batched_query": {
+        "key": ("op", "n_edges", "batch"),
+        "metric": "speedup_batched_vs_loop",
+        "label": "batched_vs_loop",
+        "baseline": "benchmarks/baselines/batched_query_smoke.json",
     },
 }
 

@@ -26,7 +26,11 @@ from repro.core.array_trie import (
     traverse_reduce,
 )
 from repro.core.build_arrays import build_frozen_trie
-from repro.core.synthetic import synthetic_csr_trie, synthetic_search_queries
+from repro.core.synthetic import (
+    device_trie_from_arrays,
+    synthetic_csr_trie,
+    synthetic_search_queries,
+)
 from repro.core.trie import TrieOfRules
 
 from .common import (
@@ -45,6 +49,7 @@ SMOKE = False                            # tiny sizes for CI smoke runs
 JSON_OUT = "BENCH_rule_search.json"      # machine-readable perf trajectory
 JSON_OUT_TOPK = "BENCH_topk.json"        # ranked-extraction perf trajectory
 JSON_OUT_BUILD = "BENCH_build.json"      # construction-engine trajectory
+JSON_OUT_BATCHED = "BENCH_batched_query.json"  # batched-vs-loop trajectory
 
 # (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
 # with E, so the largest trie runs a single batch size.  Q=2048 is the
@@ -542,6 +547,162 @@ def bench_topk_rank() -> List[Row]:
             "results": results,
         }
         with open(JSON_OUT_TOPK, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# beyond-paper: one-launch batched multi-query ops vs the Q-launch loop
+# (the serving shape: many analyst/user queries against one frozen trie)
+# ----------------------------------------------------------------------
+BATCHED_SIZES = (100_000,)               # n_edges (the acceptance scale)
+BATCHED_SIZES_SMOKE = (2_048,)
+BATCHED_QS = (16, 64, 256)
+BATCHED_QS_SMOKE = (8, 32)
+
+
+def bench_batched_query() -> List[Row]:
+    """One-launch batched ops (``rule_search_batch`` array path /
+    ``top_k_rules_batch`` / ``rules_with``) vs the equivalent Q-launch
+    loop of their single-query forms, across batch sizes on the synthetic
+    acceptance-scale trie.  Asserts batched/looped bit-parity per config
+    and emits CSV rows plus ``BENCH_batched_query.json``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import (
+        dfs_rank_arrays,
+        edge_metric_arrays,
+        item_rank_arrays,
+        rule_search,
+        rules_with,
+        top_k_rules,
+        top_k_rules_batch,
+    )
+
+    sizes = BATCHED_SIZES_SMOKE if SMOKE else BATCHED_SIZES
+    qs = BATCHED_QS_SMOKE if SMOKE else BATCHED_QS
+    k = 10
+    width = 6
+    rows: List[Row] = []
+    results = []
+    for n_edges in sizes:
+        arrs = _synthetic_csr_trie(n_edges)
+        dt = device_trie_from_arrays(arrs)
+        edges = edge_metric_arrays(dt)
+        dfs_arrays = dfs_rank_arrays(dt)
+        dfs_arrays["_device_trie"] = dt
+        item_arrays = item_rank_arrays(dt)
+        n_items = item_arrays["item_offsets"].shape[0] - 1
+        rng = np.random.RandomState(0)
+        for q in qs:
+            # --- rule_search: Q padded rules, one fused launch vs Q ---
+            queries, ant_len = _search_queries(arrs, q, width)
+            qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
+            q_rows = [
+                (jnp.asarray(queries[i: i + 1]), jnp.asarray(ant_len[i: i + 1]))
+                for i in range(q)
+            ]
+
+            def search_batched():
+                return rule_search(dt, qj, alj, edges=edges)[
+                    "lift"
+                ].block_until_ready()
+
+            def search_loop():
+                out = None
+                for qr, ar in q_rows:
+                    out = rule_search(dt, qr, ar, edges=edges)["lift"]
+                return out.block_until_ready()
+
+            # --- top_k_rules: Q prefix ranges, one segmented launch ---
+            prefix_items = rng.randint(0, n_items, size=q)
+            prefixes = [(int(it),) for it in prefix_items]
+
+            def topk_batched():
+                return top_k_rules_batch(
+                    dt, prefixes, k, "confidence", arrays=dfs_arrays
+                )["values"].block_until_ready()
+
+            def topk_loop():
+                out = None
+                for p in prefixes:
+                    out = top_k_rules(
+                        dt, k, "confidence", prefix=p, arrays=dfs_arrays
+                    )["values"]
+                return out.block_until_ready()
+
+            # --- rules_with: Q item queries, one membership launch ---
+            items = [int(it) for it in rng.randint(0, n_items, size=q)]
+
+            def with_batched():
+                return rules_with(
+                    dt, items, role="any", k=k, arrays=item_arrays
+                )["values"].block_until_ready()
+
+            def with_loop():
+                out = None
+                for it in items:
+                    out = rules_with(
+                        dt, [it], role="any", k=k, arrays=item_arrays
+                    )["values"]
+                return out.block_until_ready()
+
+            # parity: each batched row must equal its looped counterpart
+            sb = rule_search(dt, qj, alj, edges=edges)
+            s0 = rule_search(dt, *q_rows[0], edges=edges)
+            np.testing.assert_array_equal(
+                np.asarray(sb["lift"])[:1], np.asarray(s0["lift"])
+            )
+            tb = top_k_rules_batch(
+                dt, prefixes, k, "confidence", arrays=dfs_arrays
+            )
+            t0 = top_k_rules(
+                dt, k, "confidence", prefix=prefixes[0], arrays=dfs_arrays
+            )
+            np.testing.assert_array_equal(
+                np.asarray(tb["values"])[0], np.asarray(t0["values"])
+            )
+            wb = rules_with(dt, items, role="any", k=k, arrays=item_arrays)
+            w0 = rules_with(
+                dt, items[:1], role="any", k=k, arrays=item_arrays
+            )
+            np.testing.assert_array_equal(
+                np.asarray(wb["values"])[:1], np.asarray(w0["values"])
+            )
+
+            lanes = {
+                "rule_search": (search_batched, search_loop),
+                "top_k_rules": (topk_batched, topk_loop),
+                "rules_with": (with_batched, with_loop),
+            }
+            for op, (batched_fn, loop_fn) in lanes.items():
+                b_us = time_per_call_median(batched_fn, n=5, warmup=2) * 1e6
+                l_us = time_per_call_median(loop_fn, n=2, warmup=1) * 1e6
+                speedup = l_us / b_us
+                results.append({
+                    "op": op,
+                    "n_edges": n_edges,
+                    "n_nodes": n_edges + 1,
+                    "batch": q,
+                    "k": k,
+                    "us_per_call": {"batched": b_us, "loop": l_us},
+                    "speedup_batched_vs_loop": speedup,
+                })
+                rows.append(Row(
+                    f"batched_{op}_E{n_edges}_Q{q}", b_us,
+                    f"loop_us={l_us:.0f};batched_vs_loop=x{speedup:.2f}",
+                ))
+    if JSON_OUT_BATCHED:
+        payload = {
+            "bench": "batched_query",
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "results": results,
+        }
+        with open(JSON_OUT_BATCHED, "w") as f:
             json.dump(payload, f, indent=2)
     return rows
 

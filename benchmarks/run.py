@@ -25,6 +25,7 @@ BENCHES = [
     ("batched_search", paper_figs.bench_batched_search),
     ("rule_search_kernels", paper_figs.bench_rule_search_kernels),
     ("topk_rank_kernel", paper_figs.bench_topk_rank),
+    ("batched_query_ops", paper_figs.bench_batched_query),
 ]
 
 
@@ -50,11 +51,17 @@ def main() -> None:
         help="path for the construction-engine perf-trajectory JSON "
              "('' disables writing)",
     )
+    parser.add_argument(
+        "--json-out-batched", default="BENCH_batched_query.json",
+        help="path for the batched-vs-loop query-engine perf-trajectory "
+             "JSON ('' disables writing)",
+    )
     args = parser.parse_args()
     paper_figs.SMOKE = args.smoke
     paper_figs.JSON_OUT = args.json_out
     paper_figs.JSON_OUT_TOPK = args.json_out_topk
     paper_figs.JSON_OUT_BUILD = args.json_out_build
+    paper_figs.JSON_OUT_BATCHED = args.json_out_batched
 
     print("name,us_per_call,derived")
     failed = []

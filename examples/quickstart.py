@@ -105,6 +105,31 @@ def main():
     print(f"top-3 by lift under antecedent prefix ({anchor},): "
           f"{live} rules (one contiguous DFS range)")
 
+    # --- batched multi-query engine (item-inverted index) ---------------
+    from repro.kernels import rule_search_batch, rules_with, top_k_rules_batch
+
+    items = [int(it) for it in fz.item_order[:4]]
+    by_cons = rules_with(fz, items, role="consequent", k=3, metric="lift")
+    by_ant = rules_with(fz, items, role="antecedent", k=3, metric="lift")
+    print("\nrules_with (4 items, one launch each way):")
+    for qi, it in enumerate(items):
+        n_c = int(np.sum(np.asarray(by_cons["node"])[qi] >= 0))
+        n_a = int(np.sum(np.asarray(by_ant["node"])[qi] >= 0))
+        print(f"  item {it}: top-3 of its consequent posting list "
+              f"({n_c} live) / antecedent subtree ranges ({n_a} live)")
+
+    prefixes = [(int(it),) for it in fz.item_order[:8]]
+    ranked = top_k_rules_batch(fz, prefixes, 3, metric="confidence")
+    live_rows = int(np.sum(np.asarray(ranked["node"])[:, 0] >= 0))
+    print(f"top_k_rules_batch: {len(prefixes)} prefix-scoped rankings in "
+          f"ONE segmented launch ({live_rows} prefixes with rules)")
+
+    pairs = [(r.antecedent, r.consequent) for r in rules[:64]]
+    served = rule_search_batch(fz, pairs)
+    print(f"rule_search_batch: {len(pairs)} ragged (A→C) queries "
+          f"canonicalized + searched in one fused launch, "
+          f"{int(np.sum(np.asarray(served['found'])))} found")
+
 
 if __name__ == "__main__":
     main()

@@ -14,6 +14,7 @@ from .array_trie import (
     child_lookup,
     csr_offsets_from_edges,
     dfs_layout,
+    item_index_arrays,
     reconstruct_paths,
     top_n_nodes,
     traverse_reduce,
@@ -43,6 +44,7 @@ __all__ = [
     "child_lookup",
     "csr_offsets_from_edges",
     "dfs_layout",
+    "item_index_arrays",
     "reconstruct_paths",
     "top_n_nodes",
     "traverse_reduce",

@@ -8,6 +8,7 @@ a trie as flat arrays
     edge_parent / edge_item / edge_child          int32[E]     (sorted lex)
     child_offsets                                 int32[N+1]   (CSR buckets)
     dfs_order / subtree_size / dfs_to_node        int32[N]     (DFS layout)
+    item_offsets / item_nodes                     int32[I+1]/[E] (item index)
 
 ``child_offsets`` is the CSR row index over the lex-sorted edge table: node
 ``p``'s outgoing edges occupy ``edge_*[child_offsets[p]:child_offsets[p+1]]``,
@@ -33,6 +34,15 @@ DFS-contiguous relabeling of memory-efficient trie mining
 (arXiv:2202.06834): every antecedent-prefix subtree is the contiguous
 position range ``[dfs_order[v], dfs_order[v] + subtree_size[v])``, which is
 what the segmented top-k rank kernel (``repro.kernels.rank``) masks to.
+
+``item_offsets`` / ``item_nodes`` form the item-inverted index — the array
+analog of the FP-tree header table extended to a full posting-list layout:
+item ``i``'s posting list ``item_nodes[item_offsets[i]:item_offsets[i+1]]``
+holds every node whose consequent is ``i``, in DFS position order.  The
+DFS sort makes each posting entry's subtree range directly intersectable
+with the DFS relabeling, so "rules with item ``i`` in the antecedent" is a
+laminar range-count over posting subtree ranges (``kernels.item_index``),
+never a per-node path walk.
 
 The same CSR bucket descent runs inside the fused Pallas kernel
 (``repro.kernels.rule_search``); this module is the jnp reference/production
@@ -99,6 +109,41 @@ def csr_offsets_from_edges(
     np.cumsum(counts, out=offsets[1:])
     max_fanout = int(counts.max()) if counts.size else 0
     return offsets, max_fanout
+
+
+def item_index_arrays(
+    node_item: np.ndarray,
+    dfs_order: np.ndarray,
+    n_items: int,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Item-inverted index: the CSR header-table analog over the nodes.
+
+    Groups every non-root node id by its consequent item (``node_item``)
+    and sorts each group by DFS position, so item ``i``'s posting list is
+    ``item_nodes[item_offsets[i]:item_offsets[i+1]]`` — every rule with
+    consequent ``i``, in DFS position order.  Because the trie is
+    DFS-contiguous, each posting entry's subtree range
+    ``[dfs_order[v], dfs_order[v] + subtree_size[v])`` is directly
+    range-intersectable with any prefix scope, and the DFS sort makes the
+    per-item subtree starts ascending — which is what the
+    antecedent-membership binary search (``kernels.item_index``) needs.
+
+    Returns ``(item_offsets int32[I+1], item_nodes int32[E], max_postings)``
+    where ``E = N - 1`` (every non-root node posts exactly once) and
+    ``max_postings`` is the longest posting list (bounds in-kernel binary
+    searches, like ``max_fanout`` bounds bucket scans).
+    """
+    node_item = np.asarray(node_item, np.int64)
+    dfs_order = np.asarray(dfs_order, np.int64)
+    nids = np.nonzero(node_item >= 0)[0]
+    items = node_item[nids]
+    order = np.lexsort((dfs_order[nids], items))
+    item_nodes = nids[order].astype(np.int32)
+    counts = np.bincount(items, minlength=max(n_items, 0))
+    offsets = np.zeros((counts.shape[0] + 1,), np.int32)
+    np.cumsum(counts, out=offsets[1:])
+    max_postings = int(counts.max()) if counts.size else 0
+    return offsets, item_nodes, max_postings
 
 
 def dfs_layout(
@@ -197,6 +242,9 @@ class FrozenTrie:
     dfs_order: Optional[np.ndarray] = None     # int32[N] node -> DFS pos
     subtree_size: Optional[np.ndarray] = None  # int32[N] node -> |subtree|
     dfs_to_node: Optional[np.ndarray] = None   # int32[N] DFS pos -> node
+    item_offsets: Optional[np.ndarray] = None  # int32[I+1] posting buckets
+    item_nodes: Optional[np.ndarray] = None    # int32[E] DFS-sorted postings
+    max_postings: int = 0      # longest posting list (bounds index searches)
 
     def __post_init__(self):
         if self.child_offsets is None:
@@ -207,6 +255,17 @@ class FrozenTrie:
             self.dfs_order, self.subtree_size, self.dfs_to_node = dfs_layout(
                 self.node_parent, self.node_depth,
                 self.edge_parent, self.edge_child, self.child_offsets,
+            )
+        if self.item_offsets is None:
+            # Both construction engines land here (freeze and the
+            # array-native build share this constructor), so the inverted
+            # index is part of the frozen layout, not an opt-in.
+            n_items = max(
+                int(self.item_rank.shape[0]),
+                int(self.node_item.max(initial=-1)) + 1,
+            )
+            self.item_offsets, self.item_nodes, self.max_postings = (
+                item_index_arrays(self.node_item, self.dfs_order, n_items)
             )
 
     @property
@@ -322,6 +381,9 @@ class FrozenTrie:
             dfs_order=jnp.asarray(self.dfs_order),
             subtree_size=jnp.asarray(self.subtree_size),
             dfs_to_node=jnp.asarray(self.dfs_to_node),
+            item_offsets=jnp.asarray(self.item_offsets),
+            item_nodes=jnp.asarray(self.item_nodes),
+            max_postings=self.max_postings,
         )
 
     def path_items(self, node_id: int) -> Tuple[Item, ...]:
@@ -344,6 +406,10 @@ class DeviceTrie:
     search at trace time.  ``dfs_order`` / ``subtree_size`` /
     ``dfs_to_node`` carry the DFS-contiguous relabeling consumed by the
     segmented top-k rank path (``None`` on tries frozen without one).
+    ``item_offsets`` / ``item_nodes`` carry the item-inverted index
+    (posting lists by consequent item, DFS-sorted) consumed by the
+    item-scoped batched query ops; ``max_postings`` is its static
+    metadata companion (pytree aux alongside ``max_fanout``).
     """
 
     node_item: jax.Array
@@ -360,6 +426,9 @@ class DeviceTrie:
     dfs_order: Optional[jax.Array] = None
     subtree_size: Optional[jax.Array] = None
     dfs_to_node: Optional[jax.Array] = None
+    item_offsets: Optional[jax.Array] = None
+    item_nodes: Optional[jax.Array] = None
+    max_postings: int = 0
 
     def tree_flatten(self):
         fields = (
@@ -368,15 +437,19 @@ class DeviceTrie:
             self.edge_parent, self.edge_item, self.edge_child,
             self.child_offsets,
             self.dfs_order, self.subtree_size, self.dfs_to_node,
+            self.item_offsets, self.item_nodes,
         )
-        return fields, self.max_fanout
+        return fields, (self.max_fanout, self.max_postings)
 
     @classmethod
     def tree_unflatten(cls, aux, fields):
+        max_fanout, max_postings = aux
         return cls(
-            *fields[:9], child_offsets=fields[9], max_fanout=aux,
+            *fields[:9], child_offsets=fields[9], max_fanout=max_fanout,
             dfs_order=fields[10], subtree_size=fields[11],
             dfs_to_node=fields[12],
+            item_offsets=fields[13], item_nodes=fields[14],
+            max_postings=max_postings,
         )
 
 

@@ -36,7 +36,13 @@ float32 cast.
 
 The pointer trie survives as the parity oracle:
 ``build_frozen_trie(db, seqs)`` must equal
-``FrozenTrie.freeze(pointer trie)`` field-for-field (tests enforce it).
+``FrozenTrie.freeze(pointer trie)`` field-for-field (tests enforce it) —
+including the derived layout both engines emit through the shared
+``FrozenTrie`` constructor: CSR child buckets, the DFS-contiguous
+relabeling, and the item-inverted index (``item_offsets``/``item_nodes``,
+DFS-sorted posting lists per consequent item; the index sort key needs
+the DFS relabeling, so it is computed with it at construction, not in
+``trie_arrays``).
 """
 from __future__ import annotations
 

@@ -12,7 +12,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from .array_trie import csr_offsets_from_edges, dfs_layout
+from .array_trie import csr_offsets_from_edges, dfs_layout, item_index_arrays
 
 
 def synthetic_csr_trie(
@@ -63,6 +63,10 @@ def synthetic_csr_trie(
     dfs_order, subtree_size, dfs_to_node = dfs_layout(
         parent, depth, edge_parent, edge_child, offsets
     )
+    n_items = int(item.max()) + 1 if n_nodes > 1 else 0
+    item_offsets, item_nodes, max_postings = item_index_arrays(
+        item, dfs_order, n_items
+    )
     return {
         "node_parent": parent, "node_item": item, "node_depth": depth,
         "confidence": conf, "support": sup, "lift": lift,
@@ -71,6 +75,8 @@ def synthetic_csr_trie(
         "child_offsets": offsets, "max_fanout": max_fanout,
         "dfs_order": dfs_order, "subtree_size": subtree_size,
         "dfs_to_node": dfs_to_node,
+        "item_offsets": item_offsets, "item_nodes": item_nodes,
+        "max_postings": max_postings,
     }
 
 
@@ -98,3 +104,178 @@ def synthetic_search_queries(
             queries[row, :k] = rng.randint(0, n_items, size=k)
             ant_len[row] = rng.randint(0, k + 1)
     return queries, ant_len
+
+
+def random_csr_trie(
+    rng, n_nodes: int, n_items: int, max_children: int = 6
+) -> Dict[str, np.ndarray]:
+    """Random well-formed trie as the FrozenTrie-style dict of arrays.
+
+    Unlike ``synthetic_csr_trie`` (regular shape at a target size) this
+    draws an IRREGULAR topology — random parents, random per-node child
+    sets — which is what the kernel parity tests want.  The dict carries
+    the full frozen layout: CSR child buckets, DFS relabeling, and the
+    item-inverted index, plus edge-gathered metric columns.
+    """
+    parent = np.full((n_nodes,), -1, np.int32)
+    item = np.full((n_nodes,), -1, np.int32)
+    depth = np.zeros((n_nodes,), np.int32)
+    edges = []
+    used = {0: set()}
+    for nid in range(1, n_nodes):
+        p = rng.randint(0, nid)
+        tries = 0
+        while len(used.setdefault(p, set())) >= min(max_children, n_items):
+            p = rng.randint(0, nid)
+            tries += 1
+            if tries > 50:
+                break
+        avail = [x for x in range(n_items) if x not in used[p]]
+        if not avail:
+            continue
+        it = int(rng.choice(avail))
+        used[p].add(it)
+        used[nid] = set()
+        parent[nid] = p
+        item[nid] = it
+        depth[nid] = depth[p] + 1
+        edges.append((p, it, nid))
+    edges.sort()
+    e = np.array(edges, np.int32).reshape(-1, 3)
+    conf = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
+    sup = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
+    lift = rng.rand(n_nodes).astype(np.float32) * 2
+    edge_parent = e[:, 0].copy() if e.size else np.zeros(0, np.int32)
+    edge_item = e[:, 1].copy() if e.size else np.zeros(0, np.int32)
+    edge_child = e[:, 2].copy() if e.size else np.zeros(0, np.int32)
+    offsets, max_fanout = csr_offsets_from_edges(edge_parent, n_nodes)
+    dfs_order, subtree_size, dfs_to_node = dfs_layout(
+        parent, depth, edge_parent, edge_child, offsets
+    )
+    item_offsets, item_nodes, max_postings = item_index_arrays(
+        item, dfs_order, n_items
+    )
+    return {
+        "node_parent": parent, "node_item": item, "node_depth": depth,
+        "confidence": conf, "support": sup, "lift": lift,
+        "edge_parent": edge_parent, "edge_item": edge_item,
+        "edge_child": edge_child,
+        "edge_conf": conf[edge_child], "edge_sup": sup[edge_child],
+        "edge_lift": lift[edge_child],
+        "child_offsets": offsets, "max_fanout": max_fanout,
+        "dfs_order": dfs_order, "subtree_size": subtree_size,
+        "dfs_to_node": dfs_to_node,
+        "item_offsets": item_offsets, "item_nodes": item_nodes,
+        "max_postings": max_postings,
+    }
+
+
+def mixed_queries(
+    rng, arrs: Dict[str, np.ndarray], q: int, width: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """1/3 real paths (random ant/cons split → compound consequents),
+    1/3 random junk (absent rules), 1/3 all-padding rows."""
+    n_nodes = arrs["node_item"].shape[0]
+    edge_item = arrs.get("edge_item")
+    n_items = (
+        int(edge_item.max()) + 1
+        if edge_item is not None and edge_item.size else 1
+    )
+    queries = np.full((q, width), -1, np.int32)
+    ant_len = np.zeros((q,), np.int32)
+    for row in range(q):
+        kind = row % 3
+        if kind == 0 and n_nodes > 1:
+            nid = rng.randint(1, n_nodes)
+            path = []
+            while nid > 0:
+                path.append(int(arrs["node_item"][nid]))
+                nid = int(arrs["node_parent"][nid])
+            path = path[::-1][:width]
+            queries[row, : len(path)] = path
+            ant_len[row] = rng.randint(0, len(path) + 1)
+        elif kind == 1:
+            k = rng.randint(1, width + 1)
+            queries[row, :k] = rng.randint(0, n_items, size=k)
+            ant_len[row] = rng.randint(0, k + 1)
+        # kind == 2: all-padding row, ant_len 0
+    return queries, ant_len
+
+
+def device_trie_from_arrays(arrs: Dict[str, np.ndarray], csr: bool = True):
+    """``DeviceTrie`` over one of this module's arrays dicts.
+
+    The ONE constructor shared by tests and benches (a new ``DeviceTrie``
+    field threads through every consumer by editing only this function).
+    ``csr=False`` drops the CSR offsets — the seed full-table search
+    path.  DFS / item-index fields are included when the dict carries
+    them.
+    """
+    import jax.numpy as jnp  # lazy: keep this module importable sans jax
+
+    from .array_trie import DeviceTrie
+
+    def opt(key):
+        return jnp.asarray(arrs[key]) if key in arrs else None
+
+    return DeviceTrie(
+        node_item=jnp.asarray(arrs["node_item"]),
+        node_parent=jnp.asarray(arrs["node_parent"]),
+        node_depth=jnp.asarray(arrs["node_depth"]),
+        support=jnp.asarray(arrs["support"]),
+        confidence=jnp.asarray(arrs["confidence"]),
+        lift=jnp.asarray(arrs["lift"]),
+        edge_parent=jnp.asarray(arrs["edge_parent"]),
+        edge_item=jnp.asarray(arrs["edge_item"]),
+        edge_child=jnp.asarray(arrs["edge_child"]),
+        child_offsets=jnp.asarray(arrs["child_offsets"]) if csr else None,
+        max_fanout=arrs["max_fanout"] if csr else 0,
+        dfs_order=opt("dfs_order"),
+        subtree_size=opt("subtree_size"),
+        dfs_to_node=opt("dfs_to_node"),
+        item_offsets=opt("item_offsets"),
+        item_nodes=opt("item_nodes"),
+        max_postings=arrs.get("max_postings", 0),
+    )
+
+
+# ----------------------------------------------------------------------
+# hypothesis strategies (shared by every property-test module via
+# tests/conftest.py; importing this module never requires hypothesis)
+# ----------------------------------------------------------------------
+try:  # pragma: no cover - trivial import guard
+    from hypothesis import strategies as _st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _st = None
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @_st.composite
+    def transaction_dbs(draw, max_items: int = 14, max_tx: int = 40):
+        """Random small ``TransactionDB`` (the shared property-test DB
+        strategy; previously copy-pasted per test module)."""
+        from repro.arm.transactions import TransactionDB  # lazy: core↔arm
+
+        n_items = draw(_st.integers(min_value=3, max_value=max_items))
+        n_tx = draw(_st.integers(min_value=4, max_value=max_tx))
+        txs = []
+        for _ in range(n_tx):
+            size = draw(_st.integers(min_value=1, max_value=min(6, n_items)))
+            tx = draw(
+                _st.sets(
+                    _st.integers(min_value=0, max_value=n_items - 1),
+                    min_size=1,
+                    max_size=size,
+                )
+            )
+            txs.append(tx)
+        return TransactionDB(txs, n_items=n_items)
+
+    @_st.composite
+    def db_and_minsup(draw, max_items: int = 14, max_tx: int = 40):
+        db = draw(transaction_dbs(max_items=max_items, max_tx=max_tx))
+        minsup = draw(_st.sampled_from([0.1, 0.2, 0.3, 0.5]))
+        return db, minsup

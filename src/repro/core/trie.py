@@ -227,6 +227,33 @@ class TrieOfRules:
             yield node
             stack.extend(node.children.values())
 
+    def rules_with_item(
+        self, item: Item, role: str = "any"
+    ) -> Iterator[TrieNode]:
+        """Every stored rule involving ``item`` in the given role.
+
+        ``role="consequent"``: the node's own item is ``item`` (the rule's
+        single-item consequent).  ``role="antecedent"``: some STRICT
+        ancestor carries ``item`` (it sits in the rule's antecedent path).
+        ``role="any"``: either.  This is the per-node path-walk the
+        item-inverted index (``array_trie.item_index_arrays``) replaces;
+        it survives as the parity oracle for the batched ``rules_with``
+        op, exactly like ``search_rule`` oracles the search kernels.
+        """
+        if role not in ("consequent", "antecedent", "any"):
+            raise ValueError(f"unknown role {role!r}")
+        for node in self.traverse():
+            if role == "consequent":
+                hit = node.item == item
+            else:
+                in_ant = any(it == item for it in node.path()[:-1])
+                if role == "antecedent":
+                    hit = in_ant
+                else:
+                    hit = in_ant or node.item == item
+            if hit:
+                yield node
+
     def top_n(
         self, n: int, metric: str = "support", min_depth: int = 2
     ) -> List[TrieNode]:

@@ -1,35 +1,54 @@
 """Pallas TPU kernels for the Trie-of-Rules hot spots.
 
-- ``support_count``  mining Step 1: MXU matmul support counting
-- ``rule_search``    paper Fig. 8-10: batched CSR bucket trie descent
-- ``trie_reduce``    paper traversal: masked column reductions
-- ``top_k_rules``    segmented ranked extraction over the DFS-contiguous
-                     layout (whole-trie or antecedent-prefix subtree),
-                     scoring with any ``RANK_METRICS`` measure in-kernel
+- ``support_count``      mining Step 1: MXU matmul support counting
+- ``rule_search``        paper Fig. 8-10: batched CSR bucket trie descent
+- ``rule_search_batch``  Q ragged rules canonicalized + searched in ONE
+                         fused launch (the serving-side batched entry)
+- ``trie_reduce``        paper traversal: masked column reductions
+- ``top_k_rules``        segmented ranked extraction over the
+                         DFS-contiguous layout (whole-trie or
+                         antecedent-prefix subtree), scoring with any
+                         ``RANK_METRICS`` measure in-kernel
+- ``top_k_rules_batch``  Q prefix-scoped rankings in ONE launch
+- ``rules_with``         item-scoped ranked extraction via the
+                         item-inverted index (consequent / antecedent /
+                         any role), Q items in ONE launch
 
 The shared Eq. 1-4 / interestingness math lives in ``metrics_inkernel`` —
 one implementation for every kernel AND its jnp oracle (``ref``).
 """
+from .item_index import ROLES
 from .metrics_inkernel import RANK_METRICS
 from .ops import (
     dense_from_bitmaps,
     dfs_rank_arrays,
     edge_metric_arrays,
+    item_rank_arrays,
     members_from_candidates,
+    prefix_ranges,
     rule_search,
+    rule_search_batch,
+    rules_with,
     support_count,
     top_k_rules,
+    top_k_rules_batch,
     trie_reduce,
 )
 
 __all__ = [
     "RANK_METRICS",
+    "ROLES",
     "dense_from_bitmaps",
     "dfs_rank_arrays",
     "edge_metric_arrays",
+    "item_rank_arrays",
     "members_from_candidates",
+    "prefix_ranges",
     "rule_search",
+    "rule_search_batch",
+    "rules_with",
     "support_count",
     "top_k_rules",
+    "top_k_rules_batch",
     "trie_reduce",
 ]

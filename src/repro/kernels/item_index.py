@@ -1,0 +1,226 @@
+"""Pallas TPU kernel: batched item-scoped top-k over the inverted index.
+
+The paper frames the trie as a *knowledge extraction* structure; the
+analyst queries it answers are rarely one rule at a time — they are "every
+rule with consequent *c*", "every rule involving item *i*", ranked.  The
+item-inverted index (``array_trie.item_index_arrays``) makes those
+answerable without walking paths:
+
+* posting list ``item_nodes[item_offsets[i]:item_offsets[i+1]]`` = every
+  node (= rule) whose CONSEQUENT is ``i``, in DFS position order;
+* a node's ANTECEDENT contains ``i`` iff some strict ancestor carries
+  ``i`` — i.e. iff the node's DFS position falls inside a posting entry's
+  subtree range.  Subtree ranges of one item's postings form a laminar
+  family (nested or disjoint), so "how many ranges contain position p" is
+
+      |{u : subtree_lo[u] <= p}| - |{u : subtree_hi[u] <= p}|
+
+  two binary searches over the item's posting slice (``post_lo`` is
+  DFS-ascending by construction; ``post_hi`` is sorted per item at index
+  build).  No per-node root-path walk, ever.
+
+``rules_with_pallas`` runs Q item queries in ONE launch: grid
+``(Q, n_tiles)``, each query scoring the DFS-ordered metric columns
+through VMEM in ``BN`` tiles, masking to its membership test
+(consequent / antecedent / any role), and maintaining a k-best buffer row
+via the same incremental-extraction + rank-merge machinery as the
+segmented rank kernel (``rank.kbest_update`` — ONE implementation, so tie
+order matches ``jax.lax.top_k`` everywhere).
+
+The consequent-only role needs no range counting (membership is just
+``node_item == item``); ``kernels.ops.rules_with`` routes it through the
+posting-ordered columns + ``rank.topk_rank_batch_pallas`` instead (a
+contiguous posting-range scan), keeping this kernel for the roles that
+need the laminar range-count.  Both paths return identical node order for
+overlapping queries (postings are DFS-sorted), which the tests assert.
+
+VMEM envelope: like the fused rule-search kernel's whole-edge-table
+residency (6 arrays x E), the two posting arrays (2 x int32 x E ≈ 8 MB
+at N=1e6) are mapped fully into VMEM each grid step.  A per-query
+posting window (scalar-prefetch block start, the way ``max_fanout``
+bounds bucket scans) would shrink that to 2 x max_postings; tracked as a
+ROADMAP open item for the multi-device scale-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+from .metrics_inkernel import rank_score
+from .rank import BN, LANE, _iota, kbest_update
+
+ROLES = ("consequent", "antecedent", "any")
+
+_BIG = 2**30
+
+
+def _n_bsearch_steps(max_postings: int) -> int:
+    n = max(int(max_postings), 1)
+    return int(np.ceil(np.log2(n + 1))) + 1
+
+
+def _make_member_kernel(
+    k: int, kpad: int, metric: str, min_depth: int, role: str,
+    n_steps: int, e_pad: int,
+):
+    def kernel(
+        params_ref, post_lo_ref, post_hi_ref,
+        sup_ref, conf_ref, lift_ref, depth_ref, nitem_ref,
+        vals_ref, pos_ref,
+    ):
+        i = pl.program_id(1)
+
+        @pl.when(i == 0)
+        def _init():
+            vals_ref[...] = jnp.full_like(vals_ref[...], -jnp.inf)
+            pos_ref[...] = jnp.full_like(pos_ref[...], -1)
+
+        plo = params_ref[0, 0]
+        phi = params_ref[0, 1]
+        qitem = params_ref[0, 2]
+        sup = sup_ref[...][0]
+        conf = conf_ref[...][0]
+        lift = lift_ref[...][0]
+        depth = depth_ref[...][0]
+        nitem = nitem_ref[...][0]
+        pos = _iota(BN) + i * BN
+        score = rank_score(metric, sup, conf, lift)
+
+        def count_le(arr_ref, x):
+            """|{j in [plo, phi) : arr[j] <= x}| for each lane of ``x``,
+            by fixed-step binary search (arr ascending on the slice)."""
+            arr = arr_ref[...][0]
+            lo = jnp.full((BN,), plo, jnp.int32)
+            hi = jnp.full((BN,), phi, jnp.int32)
+            for _ in range(n_steps):
+                mid = (lo + hi) // 2
+                midc = jnp.clip(mid, 0, e_pad - 1)
+                v = arr[midc]
+                go = (mid < phi) & (v <= x)
+                lo = jnp.where(go, mid + 1, lo)
+                hi = jnp.where(go, hi, mid)
+            return lo - plo
+
+        self_hit = nitem == qitem
+        if role == "consequent":
+            member = self_hit
+        else:
+            # laminar range count: #(subtree_lo <= pos) - #(subtree_hi <= pos)
+            cnt = count_le(post_lo_ref, pos) - count_le(post_hi_ref, pos)
+            if role == "antecedent":
+                # strict ancestors only: the node's own posting entry
+                # always contains its own position — subtract it back out
+                member = (cnt - self_hit.astype(jnp.int32)) > 0
+            else:  # "any": consequent or anywhere on the path above
+                member = cnt > 0
+        valid = member & (depth >= min_depth)
+        score = jnp.where(valid, score, -jnp.inf)
+        kbest_update(vals_ref, pos_ref, score, pos, k, kpad)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "metric", "min_depth", "role", "max_postings", "interpret",
+    ),
+)
+def rules_with_pallas(
+    support: jax.Array,     # f32 [N] DFS-ordered
+    confidence: jax.Array,  # f32 [N] DFS-ordered
+    lift: jax.Array,        # f32 [N] DFS-ordered
+    depth: jax.Array,       # int32 [N] DFS-ordered
+    node_item: jax.Array,   # int32 [N] DFS-ordered consequent items
+    post_lo: jax.Array,     # int32 [E] posting subtree starts (asc/item)
+    post_hi: jax.Array,     # int32 [E] posting subtree ends (sorted/item)
+    plos: jax.Array,        # int32 [Q] posting-slice start per query
+    phis: jax.Array,        # int32 [Q] posting-slice end per query
+    items: jax.Array,       # int32 [Q] queried item per query
+    *,
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+    role: str = "any",
+    max_postings: int = 0,
+    interpret: bool = False,
+):
+    """Top-k (scores, DFS positions) of the rules involving each queried
+    item, for Q queries in ONE launch.
+
+    ``role`` decides membership: ``"consequent"`` (node item equals the
+    query item), ``"antecedent"`` (a strict ancestor carries it), or
+    ``"any"``.  Rows follow ``jax.lax.top_k`` order with ``(-inf, -1)``
+    empty slots.  Absent items are expressed as empty posting slices
+    (``plos[q] == phis[q]``) plus an item id no node carries.
+    """
+    if role not in ROLES:
+        raise ValueError(f"role {role!r} not in {ROLES}")
+    n = support.shape[0]
+    q = plos.shape[0]
+    if n == 0 or k <= 0 or q == 0:
+        return (
+            jnp.full((q, max(k, 0)), -jnp.inf, jnp.float32),
+            jnp.full((q, max(k, 0)), -1, jnp.int32),
+        )
+    kpad = k + (-k % LANE)
+    npad = -n % BN
+
+    def pad_col(a, fill, dtype):
+        return jnp.pad(
+            a.astype(dtype), (0, npad), constant_values=fill
+        ).reshape(1, -1)
+
+    sup = pad_col(support, 0.0, jnp.float32)
+    conf = pad_col(confidence, 0.0, jnp.float32)
+    lif = pad_col(lift, 0.0, jnp.float32)
+    dep = pad_col(depth, -1, jnp.int32)
+    # -2 never equals a query item (absent queries are sanitized to -1)
+    nit = pad_col(node_item, -2, jnp.int32)
+
+    e = post_lo.shape[0]
+    e_pad = max(e + (-e % LANE), LANE)
+    # padding past the live postings sorts after every real position
+    plo_arr = jnp.pad(
+        post_lo.astype(jnp.int32), (0, e_pad - e), constant_values=_BIG
+    ).reshape(1, -1)
+    phi_arr = jnp.pad(
+        post_hi.astype(jnp.int32), (0, e_pad - e), constant_values=_BIG
+    ).reshape(1, -1)
+
+    params = jnp.zeros((q, LANE), jnp.int32)
+    params = (
+        params.at[:, 0].set(plos.astype(jnp.int32))
+        .at[:, 1].set(phis.astype(jnp.int32))
+        .at[:, 2].set(items.astype(jnp.int32))
+    )
+
+    nn = sup.shape[1]
+    grid = (q, nn // BN)
+    post_spec = pl.BlockSpec((1, e_pad), lambda qi, i: (0, 0))
+    col_spec = pl.BlockSpec((1, BN), lambda qi, i: (0, i))
+    out_spec = pl.BlockSpec((1, kpad), lambda qi, i: (qi, 0))
+    vals, pos = pl.pallas_call(
+        _make_member_kernel(
+            k, kpad, metric, min_depth, role,
+            _n_bsearch_steps(max_postings), e_pad,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, LANE), lambda qi, i: (qi, 0)),
+            post_spec, post_spec,
+            col_spec, col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((q, kpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, plo_arr, phi_arr, sup, conf, lif, dep, nit)
+    return vals[:, :k], pos[:, :k]

@@ -16,9 +16,10 @@ import numpy as np
 
 from repro.core.array_trie import DeviceTrie, child_lookup
 
+from .item_index import ROLES, rules_with_pallas
 from .metrics_inkernel import RANK_METRICS, compound_lift, rank_score
-from .rank import topk_rank_pallas
-from .ref import topk_rank_ref
+from .rank import topk_rank_batch_pallas, topk_rank_pallas
+from .ref import rules_with_ref, topk_rank_batch_ref, topk_rank_ref
 from .support_count import support_count_pallas
 from .rule_search import rule_search_fused_pallas, rule_search_pallas
 from .trie_reduce import trie_reduce_pallas
@@ -179,6 +180,15 @@ def rule_search(
     ant_len = jnp.asarray(ant_len, jnp.int32)
     interp = _interpret()
 
+    if queries.shape[0] == 0:
+        # Q == 0: nothing to search; avoid tracing a zero-grid kernel.
+        z = jnp.zeros((0,), jnp.float32)
+        return {
+            "found": jnp.zeros((0,), bool),
+            "node": jnp.zeros((0,), jnp.int32),
+            "support": z, "confidence": z, "lift": z,
+        }
+
     if edges.get("child_offsets") is not None:
         return rule_search_fused_pallas(
             edges["child_offsets"], edges["edge_item"],
@@ -285,33 +295,12 @@ def top_k_rules(
         lo = jnp.int32(0)
         hi = jnp.int32(n)
     else:
-        items = [int(it) for it in prefix]
-        item_rank = getattr(trie, "item_rank", None)
-        if item_rank is not None:
-            nr = int(np.asarray(item_rank).shape[0])
-            items.sort(
-                key=lambda it: (
-                    int(item_rank[it]) if 0 <= it < nr else 1 << 30, it
-                )
-            )
-        # The descent's DeviceTrie is cached in the arrays dict so repeat
-        # prefix queries with arrays= don't re-upload the trie columns.
-        dt = arrays.get("_device_trie")
-        if dt is None:
-            dt = (
-                trie if isinstance(trie, DeviceTrie)
-                else trie.device_arrays()
-            )
-            arrays["_device_trie"] = dt
-        node = jnp.zeros((1,), jnp.int32)
-        for it in items:
-            node = child_lookup(dt, node, jnp.full((1,), it, jnp.int32))
-        ok = node[0] >= 0
-        nid = jnp.maximum(node[0], 0)
-        lo = jnp.where(ok, arrays["dfs_order"][nid], 0).astype(jnp.int32)
-        hi = jnp.where(
-            ok, lo + arrays["subtree_size"][nid], 0
-        ).astype(jnp.int32)
+        # The Q=1 slice of the batched resolution: ONE canonicalization +
+        # descent implementation for single and batched prefix queries.
+        los, his, _nodes = prefix_ranges(
+            trie, [prefix], dt=_cached_device_trie(trie, arrays)
+        )
+        lo, hi = los[0], his[0]
     rank_fn = (
         functools.partial(topk_rank_pallas, interpret=_interpret())
         if use_kernel else topk_rank_ref
@@ -325,6 +314,320 @@ def top_k_rules(
         pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
     )
     return {"values": vals, "node": node_ids, "dfs_pos": pos}
+
+
+# ----------------------------------------------------------------------
+# batched multi-query engine (item-inverted index + segmented ranges)
+# ----------------------------------------------------------------------
+def _cached_device_trie(trie, arrays: Optional[Dict] = None):
+    """The descent's DeviceTrie, cached in the arrays dict so repeat
+    queries with ``arrays=`` don't re-upload the trie columns."""
+    if isinstance(trie, DeviceTrie):
+        return trie
+    if arrays is None:
+        return trie.device_arrays()
+    dt = arrays.get("_device_trie")
+    if dt is None:
+        dt = trie.device_arrays()
+        arrays["_device_trie"] = dt
+    return dt
+
+
+def item_rank_arrays(trie) -> Dict[str, jax.Array]:
+    """Inverted-index query arrays, gathered once per trie.
+
+    ``trie`` is a DeviceTrie or FrozenTrie carrying the item-inverted
+    index (``item_offsets`` / ``item_nodes``) plus the DFS layout.
+    Returns the DFS-ordered metric/item columns, the posting subtree
+    ranges (``post_lo`` ascending per item by construction; ``post_hi``
+    sorted per item here, so both sides of the laminar range count are
+    binary-searchable), and posting-ordered metric columns for the
+    consequent-role fast path.  Pass the result back via
+    ``rules_with(..., arrays=...)`` to amortize across repeated queries.
+    """
+    offsets = getattr(trie, "item_offsets", None)
+    if offsets is None:
+        raise ValueError(
+            "trie has no item-inverted index (item_offsets is None); "
+            "freeze it with FrozenTrie / build_frozen_trie first"
+        )
+    offsets = np.asarray(offsets)
+    item_nodes = np.asarray(trie.item_nodes)
+    dfs_order = np.asarray(trie.dfs_order)
+    subtree = np.asarray(trie.subtree_size)
+    d2n = np.asarray(trie.dfs_to_node)
+    n = dfs_order.shape[0]
+    post_lo = dfs_order[item_nodes].astype(np.int64)
+    post_hi_raw = post_lo + subtree[item_nodes].astype(np.int64)
+    # per-item ascending subtree ends: one global composite-key argsort
+    # (segment id majors the key) instead of a per-item sort loop
+    seg = np.repeat(
+        np.arange(offsets.shape[0] - 1, dtype=np.int64), np.diff(offsets)
+    )
+    order = np.argsort(seg * (n + 1) + post_hi_raw, kind="stable")
+    post_hi = post_hi_raw[order]
+    sup = np.asarray(trie.support)
+    conf = np.asarray(trie.confidence)
+    lift = np.asarray(trie.lift)
+    depth = np.asarray(trie.node_depth)
+    nitem = np.asarray(trie.node_item)
+    max_postings = (
+        int(np.diff(offsets).max()) if offsets.shape[0] > 1 else 0
+    )
+    return {
+        "support": jnp.asarray(sup[d2n]),
+        "confidence": jnp.asarray(conf[d2n]),
+        "lift": jnp.asarray(lift[d2n]),
+        "depth": jnp.asarray(depth[d2n], jnp.int32),
+        "node_item": jnp.asarray(nitem[d2n], jnp.int32),
+        "post_lo": jnp.asarray(post_lo, jnp.int32),
+        "post_hi": jnp.asarray(post_hi, jnp.int32),
+        "item_offsets": offsets,       # host: query slicing is scalar
+        "item_nodes": jnp.asarray(item_nodes, jnp.int32),
+        "dfs_to_node": jnp.asarray(d2n, jnp.int32),
+        "max_postings": max_postings,
+        # posting-ordered columns: the consequent-role fast path ranks a
+        # contiguous posting range of these with the segmented kernel
+        "p_support": jnp.asarray(sup[item_nodes]),
+        "p_confidence": jnp.asarray(conf[item_nodes]),
+        "p_lift": jnp.asarray(lift[item_nodes]),
+        "p_depth": jnp.asarray(depth[item_nodes], jnp.int32),
+    }
+
+
+def _posting_slices(offsets: np.ndarray, items) -> tuple:
+    """Per-query posting slice [plo, phi) + sanitized item ids.
+
+    Items outside ``[0, I)`` (absent from the universe) get the empty
+    slice and item id -1 (matched by no node)."""
+    items = np.asarray(list(items), np.int64).reshape(-1)
+    n_items = offsets.shape[0] - 1
+    valid = (items >= 0) & (items < n_items)
+    safe = np.clip(items, 0, max(n_items - 1, 0))
+    plos = np.where(valid, offsets[safe], 0).astype(np.int32)
+    phis = np.where(valid, offsets[safe + 1], 0).astype(np.int32)
+    qitems = np.where(valid, items, -1).astype(np.int32)
+    return plos, phis, qitems
+
+
+def rules_with(
+    trie,                                   # DeviceTrie / FrozenTrie
+    items,                                  # int sequence [Q]
+    role: str = "any",
+    k: int = 10,
+    metric: str = "confidence",
+    min_depth: int = 1,
+    arrays: Optional[Dict[str, jax.Array]] = None,
+    use_kernel: bool = True,
+) -> Dict[str, jax.Array]:
+    """Top-k rules involving each queried item, Q items in ONE launch.
+
+    ``role`` selects where the item must appear: ``"consequent"`` (the
+    node's own item — its posting list, ranked via the segmented rank
+    kernel over a contiguous posting range), ``"antecedent"`` (a strict
+    ancestor carries it — DFS-subtree-range membership over the posting
+    subtree ranges, no path walk), or ``"any"`` (either).
+
+    Returns ``{"values" f32[Q, k], "node" int32[Q, k], "pos" int32[Q, k]}``
+    rows in ``jax.lax.top_k`` order, empty slots ``(-inf, -1)``.
+    ``pos`` is the in-kernel position (posting index for the consequent
+    role, DFS position otherwise); ``node`` is always the node id.
+    Absent items, duplicate items, and k beyond the match count are all
+    well-defined (empty slices / repeated rows / ``(-inf, -1)`` tails).
+    """
+    if role not in ROLES:
+        raise ValueError(f"role {role!r} not in {ROLES}")
+    if metric not in RANK_METRICS:
+        raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
+    if arrays is None:
+        arrays = item_rank_arrays(trie)
+    plos, phis, qitems = _posting_slices(arrays["item_offsets"], items)
+    plos_j = jnp.asarray(plos)
+    phis_j = jnp.asarray(phis)
+    if role == "consequent":
+        rank_fn = (
+            functools.partial(topk_rank_batch_pallas, interpret=_interpret())
+            if use_kernel else topk_rank_batch_ref
+        )
+        vals, pos = rank_fn(
+            arrays["p_support"], arrays["p_confidence"],
+            arrays["p_lift"], arrays["p_depth"],
+            plos_j, phis_j,
+            k=int(k), metric=metric, min_depth=int(min_depth),
+        )
+        back = arrays["item_nodes"]
+    else:
+        member_fn = (
+            functools.partial(rules_with_pallas, interpret=_interpret())
+            if use_kernel else rules_with_ref
+        )
+        vals, pos = member_fn(
+            arrays["support"], arrays["confidence"], arrays["lift"],
+            arrays["depth"], arrays["node_item"],
+            arrays["post_lo"], arrays["post_hi"],
+            plos_j, phis_j, jnp.asarray(qitems),
+            k=int(k), metric=metric, min_depth=int(min_depth), role=role,
+            **({"max_postings": arrays["max_postings"]}
+               if use_kernel else {}),
+        )
+        back = arrays["dfs_to_node"]
+    if back.shape[0] == 0:
+        node = jnp.full_like(pos, -1)
+    else:
+        node = jnp.where(pos >= 0, back[jnp.maximum(pos, 0)], -1)
+    return {"values": vals, "node": node, "pos": pos}
+
+
+def prefix_ranges(
+    trie,                                   # DeviceTrie / FrozenTrie
+    prefixes,                               # ragged item seqs or [Q, P]
+    dt: Optional[DeviceTrie] = None,        # pre-uploaded descent arrays
+) -> tuple:
+    """Resolve Q antecedent prefixes to DFS ranges in one batched descent.
+
+    Prefixes are canonicalized to frequency order when the trie carries
+    an ``item_rank`` table, padded to ``[Q, P]``, and walked root-down
+    via the CSR ``child_lookup`` — one vectorized step per column, all
+    queries at once.  Absent prefixes (invalid item ids included)
+    resolve to the empty range ``[0, 0)``; empty prefixes to the whole
+    trie ``[0, N)``.
+
+    In an already-padded ``[Q, P]`` MATRIX, ``-1`` entries are padding
+    (the repo-wide query-matrix convention) and are dropped per row; in
+    ragged sequences every element is a literal item, so a negative id
+    there reads as "not in the trie" (empty range), exactly like any
+    other absent item.
+
+    Returns ``(los int32[Q], his int32[Q], nodes int32[Q])``.
+    """
+    item_rank = getattr(trie, "item_rank", None)
+    as_matrix = isinstance(prefixes, np.ndarray) and prefixes.ndim == 2
+    rows = []
+    for p in prefixes:
+        if as_matrix:
+            its = [int(it) for it in np.asarray(p).reshape(-1) if it != -1]
+        else:
+            # ragged input: -1 is a literal (absent) item, not padding;
+            # remap it off the padding sentinel so the descent keeps it
+            its = [
+                int(it) if int(it) != -1 else -9
+                for it in np.asarray(p).reshape(-1)
+            ]
+        if item_rank is not None:
+            nr = int(np.asarray(item_rank).shape[0])
+            its.sort(
+                key=lambda it: (
+                    int(item_rank[it]) if 0 <= it < nr else 1 << 30, it
+                )
+            )
+        rows.append(its)
+    q = len(rows)
+    width = max((len(r) for r in rows), default=0)
+    mat = np.full((q, max(width, 1)), -1, np.int32)
+    for i, r in enumerate(rows):
+        mat[i, : len(r)] = r
+    if dt is None:
+        dt = _cached_device_trie(trie)
+    n = dt.dfs_order.shape[0]
+    nodes = jnp.zeros((q,), jnp.int32)
+    for c in range(width):
+        col = jnp.asarray(mat[:, c])
+        step = child_lookup(dt, nodes, col)
+        # only -1 is padding; other negatives are live (absent) items
+        nodes = jnp.where(col != -1, step, nodes)
+    ok = nodes >= 0
+    nid = jnp.maximum(nodes, 0)
+    los = jnp.where(ok, dt.dfs_order[nid], 0).astype(jnp.int32)
+    his = jnp.where(
+        ok, los + dt.subtree_size[nid], 0
+    ).astype(jnp.int32)
+    his = jnp.minimum(his, n)
+    return los, his, jnp.where(ok, nodes, -1)
+
+
+def top_k_rules_batch(
+    trie,                                   # DeviceTrie / FrozenTrie
+    prefixes,                               # Q antecedent prefixes
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+    arrays: Optional[Dict[str, jax.Array]] = None,
+    use_kernel: bool = True,
+) -> Dict[str, jax.Array]:
+    """Top-k rules under EACH of Q antecedent prefixes, one launch total.
+
+    The batched form of ``top_k_rules``: the Q prefixes resolve to Q
+    DFS-contiguous ``[lo, hi)`` subtree ranges (``prefix_ranges``) that
+    one ``topk_rank_batch_pallas`` call ranks simultaneously — replacing
+    Q separate kernel launches.  Row-for-row bit-identical to looping
+    ``top_k_rules`` (tie order included).
+
+    Returns ``{"values" f32[Q, k], "node" int32[Q, k],
+    "dfs_pos" int32[Q, k]}``.
+    """
+    if metric not in RANK_METRICS:
+        raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
+    if arrays is None:
+        arrays = dfs_rank_arrays(trie)
+    prefixes = list(prefixes)
+    if len(prefixes) == 0:
+        return {
+            "values": jnp.zeros((0, max(int(k), 0)), jnp.float32),
+            "node": jnp.zeros((0, max(int(k), 0)), jnp.int32),
+            "dfs_pos": jnp.zeros((0, max(int(k), 0)), jnp.int32),
+        }
+    los, his, _nodes = prefix_ranges(
+        trie, prefixes, dt=_cached_device_trie(trie, arrays)
+    )
+    rank_fn = (
+        functools.partial(topk_rank_batch_pallas, interpret=_interpret())
+        if use_kernel else topk_rank_batch_ref
+    )
+    vals, pos = rank_fn(
+        arrays["support"], arrays["confidence"], arrays["lift"],
+        arrays["depth"], los, his,
+        k=int(k), metric=metric, min_depth=int(min_depth),
+    )
+    node_ids = jnp.where(
+        pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
+    )
+    return {"values": vals, "node": node_ids, "dfs_pos": pos}
+
+
+def rule_search_batch(
+    trie,                                   # DeviceTrie / FrozenTrie
+    queries,                                # (A, C) pairs or [Q, L] rows
+    ant_len=None,                           # int32 [Q] with array queries
+    edges: Optional[Dict[str, jax.Array]] = None,
+) -> Dict[str, jax.Array]:
+    """Search Q rules in ONE fused kernel launch.
+
+    The serving-side batched entry: ``queries`` is either a sequence of
+    ``(antecedent, consequent)`` item-sequence pairs — canonicalized and
+    packed host-side via ``FrozenTrie.canonicalize_queries`` — or an
+    already-canonical padded ``[Q, L]`` row matrix with ``ant_len``.
+    Either way the whole batch descends in one ``pallas_call`` (the PR-1
+    CSR fused kernel), replacing Q separate single-query launches.
+    Bit-identical per row to looping ``rule_search`` over the queries.
+    """
+    if ant_len is None:
+        canonicalize = getattr(trie, "canonicalize_queries", None)
+        if canonicalize is None:
+            raise ValueError(
+                "ragged (antecedent, consequent) queries need a FrozenTrie "
+                "(canonicalize_queries lives host-side); for a DeviceTrie "
+                "pass an already-canonical [Q, L] matrix plus ant_len"
+            )
+        pairs = list(queries)
+        if not pairs:
+            return rule_search(
+                trie, np.zeros((0, 1), np.int32), np.zeros((0,), np.int32),
+                edges=edges,
+            )
+        ants = [p[0] for p in pairs]
+        cons = [p[1] for p in pairs]
+        queries, ant_len = canonicalize(ants, cons)
+    return rule_search(trie, queries, ant_len, edges=edges)
 
 
 # ----------------------------------------------------------------------

@@ -20,6 +20,12 @@ prefix-scoped ranked query masks (and mostly *skips* — the ``c > 0`` guard
 fails for every tile outside the range) instead of gathering.  The full
 ranking is the ``[0, N)`` range of the same kernel.
 
+The kernel is natively BATCHED (``topk_rank_batch_pallas``): the grid is
+``(Q, n_tiles)`` with one k-best buffer row per query, so Q segmented
+rankings — Q analyst prefixes, or Q posting-list ranges from the
+item-inverted index — cost ONE launch instead of Q.  The single-range
+``topk_rank_pallas`` is its Q=1 slice.
+
 The in-kernel score math lives in ``metrics_inkernel.rank_score`` — the ONE
 implementation shared with the jnp oracle (``ref.topk_rank_ref``), keeping
 kernel and oracle bit-identical per element.  Tie-breaking replicates
@@ -82,12 +88,59 @@ def _rank_merge(av, ap, tv, tp, kpad: int):
     return nv, jnp.where(nv > -jnp.inf, np_, -1)
 
 
+def kbest_update(vals_ref, pos_ref, score, pos, k: int, kpad: int):
+    """Fold one tile's masked scores into the (value, position) k-best
+    buffer refs — the incremental-extraction + rank-merge step shared by
+    every segmented ranking kernel (this module and
+    ``kernels.item_index``).
+
+    Strictly-greater entry test: an equal-valued tile entry has a larger
+    position than every buffered entry, so it loses the tie and can never
+    displace — tiles that cannot improve the buffer (incl. every tile
+    fully outside the query's range) skip the merge.
+    """
+    kth = vals_ref[0, k - 1]
+    c = jnp.sum((score > kth).astype(jnp.int32))
+
+    @pl.when(c > 0)
+    def _merge():
+        lane = _iota(kpad)
+        cc = jnp.minimum(c, k)
+
+        def body(state):
+            j, cand, tv, tp = state
+            m = jnp.max(cand)
+            sel = jnp.min(jnp.where(cand == m, pos, _BIG))
+            tv = jnp.where(lane == j, m, tv)
+            tp = jnp.where(lane == j, sel, tp)
+            cand = jnp.where(pos == sel, -jnp.inf, cand)
+            return j + 1, cand, tv, tp
+
+        _, _, tv, tp = jax.lax.while_loop(
+            lambda s: s[0] < cc,
+            body,
+            (
+                jnp.int32(0),
+                score,
+                jnp.full((kpad,), -jnp.inf, jnp.float32),
+                jnp.full((kpad,), -1, jnp.int32),
+            ),
+        )
+        nv, np_ = _rank_merge(
+            vals_ref[...][0], pos_ref[...][0], tv, tp, kpad
+        )
+        vals_ref[...] = nv[None, :]
+        pos_ref[...] = np_[None, :]
+
+
 def _make_kernel(k: int, kpad: int, metric: str, min_depth: int):
     def kernel(
         params_ref, sup_ref, conf_ref, lift_ref, depth_ref,
         vals_ref, pos_ref,
     ):
-        i = pl.program_id(0)
+        # grid = (Q, n_tiles): queries outer, DFS tiles inner, so each
+        # query's k-best buffer accumulates across its own tile sweep.
+        i = pl.program_id(1)
 
         @pl.when(i == 0)
         def _init():
@@ -104,45 +157,80 @@ def _make_kernel(k: int, kpad: int, metric: str, min_depth: int):
         score = rank_score(metric, sup, conf, lift)
         valid = (pos >= lo) & (pos < hi) & (depth >= min_depth)
         score = jnp.where(valid, score, -jnp.inf)
-
-        # Strictly-greater entry test: an equal-valued tile entry has a
-        # larger DFS position than every buffered entry, so it loses the
-        # tie and can never displace — tiles that cannot improve the
-        # buffer (incl. every tile fully outside [lo, hi)) skip the merge.
-        kth = vals_ref[0, k - 1]
-        c = jnp.sum((score > kth).astype(jnp.int32))
-
-        @pl.when(c > 0)
-        def _merge():
-            lane = _iota(kpad)
-            cc = jnp.minimum(c, k)
-
-            def body(state):
-                j, cand, tv, tp = state
-                m = jnp.max(cand)
-                sel = jnp.min(jnp.where(cand == m, pos, _BIG))
-                tv = jnp.where(lane == j, m, tv)
-                tp = jnp.where(lane == j, sel, tp)
-                cand = jnp.where(pos == sel, -jnp.inf, cand)
-                return j + 1, cand, tv, tp
-
-            _, _, tv, tp = jax.lax.while_loop(
-                lambda s: s[0] < cc,
-                body,
-                (
-                    jnp.int32(0),
-                    score,
-                    jnp.full((kpad,), -jnp.inf, jnp.float32),
-                    jnp.full((kpad,), -1, jnp.int32),
-                ),
-            )
-            nv, np_ = _rank_merge(
-                vals_ref[...][0], pos_ref[...][0], tv, tp, kpad
-            )
-            vals_ref[...] = nv[None, :]
-            pos_ref[...] = np_[None, :]
+        kbest_update(vals_ref, pos_ref, score, pos, k, kpad)
 
     return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "min_depth", "interpret")
+)
+def topk_rank_batch_pallas(
+    support: jax.Array,     # f32 [N] DFS-ordered
+    confidence: jax.Array,  # f32 [N] DFS-ordered
+    lift: jax.Array,        # f32 [N] DFS-ordered
+    depth: jax.Array,       # int32 [N] DFS-ordered
+    los: jax.Array,         # int32 [Q]: DFS range starts (inclusive)
+    his: jax.Array,         # int32 [Q]: DFS range ends (exclusive)
+    *,
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+    interpret: bool = False,
+):
+    """Top-k of EVERY DFS range ``[los[q], his[q])`` in one launch.
+
+    The batched form of the segmented ranking: one grid dimension over
+    queries (each with its own k-best buffer row), one over DFS tiles —
+    Q prefix-scoped rankings cost one ``pallas_call`` instead of Q.
+    Returns ``(values f32[Q, k], positions int32[Q, k])``, each row in
+    ``jax.lax.top_k`` order with ``(-inf, -1)`` empty slots.
+    """
+    n = support.shape[0]
+    q = los.shape[0]
+    if n == 0 or k <= 0 or q == 0:
+        # Nothing to rank: avoid tracing a zero-grid kernel.
+        return (
+            jnp.full((q, max(k, 0)), -jnp.inf, jnp.float32),
+            jnp.full((q, max(k, 0)), -1, jnp.int32),
+        )
+    kpad = k + (-k % LANE)
+    npad = -n % BN
+
+    def pad(a, fill, dtype):
+        return jnp.pad(
+            a.astype(dtype), (0, npad), constant_values=fill
+        ).reshape(1, -1)
+
+    sup = pad(support, 0.0, jnp.float32)
+    conf = pad(confidence, 0.0, jnp.float32)
+    lif = pad(lift, 0.0, jnp.float32)
+    dep = pad(depth, -1, jnp.int32)
+    # Clamping hi to N keeps every padding lane outside [lo, hi).
+    los = jnp.maximum(jnp.asarray(los, jnp.int32), 0)
+    his = jnp.minimum(jnp.asarray(his, jnp.int32), n)
+    params = jnp.zeros((q, LANE), jnp.int32)
+    params = params.at[:, 0].set(los).at[:, 1].set(his)
+
+    nn = sup.shape[1]
+    grid = (q, nn // BN)
+    col_spec = pl.BlockSpec((1, BN), lambda qi, i: (0, i))
+    out_spec = pl.BlockSpec((1, kpad), lambda qi, i: (qi, 0))
+    vals, pos = pl.pallas_call(
+        _make_kernel(k, kpad, metric, min_depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, LANE), lambda qi, i: (qi, 0)),
+            col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((q, kpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, sup, conf, lif, dep)
+    return vals[:, :k], pos[:, :k]
 
 
 @functools.partial(
@@ -163,51 +251,15 @@ def topk_rank_pallas(
 ):
     """Top-k (scores, DFS positions) of the rules in DFS range ``[lo, hi)``.
 
-    Returns ``(values f32[k], positions int32[k])`` sorted by
+    The Q=1 slice of ``topk_rank_batch_pallas`` (same kernel, same tie
+    order).  Returns ``(values f32[k], positions int32[k])`` sorted by
     (value desc, position asc) — ``jax.lax.top_k`` order — with empty
     slots (k exceeds the live-rule count) as ``(-inf, -1)``.
     """
-    n = support.shape[0]
-    if n == 0 or k <= 0:
-        # Nothing to rank: avoid tracing a zero-grid kernel.
-        return (
-            jnp.full((max(k, 0),), -jnp.inf, jnp.float32),
-            jnp.full((max(k, 0),), -1, jnp.int32),
-        )
-    kpad = k + (-k % LANE)
-    npad = -n % BN
-
-    def pad(a, fill, dtype):
-        return jnp.pad(
-            a.astype(dtype), (0, npad), constant_values=fill
-        ).reshape(1, -1)
-
-    sup = pad(support, 0.0, jnp.float32)
-    conf = pad(confidence, 0.0, jnp.float32)
-    lif = pad(lift, 0.0, jnp.float32)
-    dep = pad(depth, -1, jnp.int32)
-    # Clamping hi to N keeps every padding lane outside [lo, hi).
-    lo = jnp.maximum(jnp.asarray(lo, jnp.int32), 0)
-    hi = jnp.minimum(jnp.asarray(hi, jnp.int32), n)
-    params = jnp.zeros((1, LANE), jnp.int32)
-    params = params.at[0, 0].set(lo).at[0, 1].set(hi)
-
-    nn = sup.shape[1]
-    grid = (nn // BN,)
-    col_spec = pl.BlockSpec((1, BN), lambda i: (0, i))
-    out_spec = pl.BlockSpec((1, kpad), lambda i: (0, 0))
-    vals, pos = pl.pallas_call(
-        _make_kernel(k, kpad, metric, min_depth),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, LANE), lambda i: (0, 0)),
-            col_spec, col_spec, col_spec, col_spec,
-        ],
-        out_specs=[out_spec, out_spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, kpad), jnp.float32),
-            jax.ShapeDtypeStruct((1, kpad), jnp.int32),
-        ],
-        interpret=interpret,
-    )(params, sup, conf, lif, dep)
-    return vals[0, :k], pos[0, :k]
+    vals, pos = topk_rank_batch_pallas(
+        support, confidence, lift, depth,
+        jnp.asarray(lo, jnp.int32).reshape(1),
+        jnp.asarray(hi, jnp.int32).reshape(1),
+        k=k, metric=metric, min_depth=min_depth, interpret=interpret,
+    )
+    return vals[0], pos[0]

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -201,6 +203,125 @@ def topk_rank_ref(
     masked = jnp.where(valid, score, -jnp.inf)
     if k > n:
         masked = jnp.pad(masked, (0, k - n), constant_values=-jnp.inf)
+    vals, idx = jax.lax.top_k(masked, k)
+    idx = jnp.where(vals > -jnp.inf, idx.astype(jnp.int32), -1)
+    return vals, idx
+
+
+def topk_rank_batch_ref(
+    support: jax.Array,     # f32 [N] DFS-ordered
+    confidence: jax.Array,  # f32 [N] DFS-ordered
+    lift: jax.Array,        # f32 [N] DFS-ordered
+    depth: jax.Array,       # int32 [N] DFS-ordered
+    los: jax.Array,         # int32 [Q]
+    his: jax.Array,         # int32 [Q]
+    *,
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """Ground truth for the BATCHED segmented top-k: ``lax.top_k`` over a
+    ``[Q, N]`` masked score matrix (each row its own ``[lo, hi)`` range).
+    Row-for-row identical to Q ``topk_rank_ref`` calls."""
+    n = support.shape[0]
+    q = los.shape[0]
+    if n == 0 or k <= 0 or q == 0:
+        return (
+            jnp.full((q, max(k, 0)), -jnp.inf, jnp.float32),
+            jnp.full((q, max(k, 0)), -1, jnp.int32),
+        )
+    score = rank_score(
+        metric,
+        support.astype(jnp.float32),
+        confidence.astype(jnp.float32),
+        lift.astype(jnp.float32),
+    )
+    pos = jnp.arange(n, dtype=jnp.int32)
+    los = jnp.maximum(jnp.asarray(los, jnp.int32), 0)[:, None]
+    his = jnp.minimum(jnp.asarray(his, jnp.int32), n)[:, None]
+    valid = (
+        (pos[None, :] >= los) & (pos[None, :] < his)
+        & (depth[None, :] >= min_depth)
+    )
+    masked = jnp.where(valid, score[None, :], -jnp.inf)
+    if k > n:
+        masked = jnp.pad(
+            masked, ((0, 0), (0, k - n)), constant_values=-jnp.inf
+        )
+    vals, idx = jax.lax.top_k(masked, k)
+    idx = jnp.where(vals > -jnp.inf, idx.astype(jnp.int32), -1)
+    return vals, idx
+
+
+# ----------------------------------------------------------------------
+# rules_with — item-scoped ranked extraction via the inverted index
+# ----------------------------------------------------------------------
+def rules_with_ref(
+    support: jax.Array,     # f32 [N] DFS-ordered
+    confidence: jax.Array,  # f32 [N] DFS-ordered
+    lift: jax.Array,        # f32 [N] DFS-ordered
+    depth: jax.Array,       # int32 [N] DFS-ordered
+    node_item: jax.Array,   # int32 [N] DFS-ordered consequent items
+    post_lo: jax.Array,     # int32 [E] posting subtree starts
+    post_hi: jax.Array,     # int32 [E] posting subtree ends (sorted/item)
+    plos: jax.Array,        # int32 [Q]
+    phis: jax.Array,        # int32 [Q]
+    items: jax.Array,       # int32 [Q]
+    *,
+    k: int,
+    metric: str = "confidence",
+    min_depth: int = 1,
+    role: str = "any",
+) -> Tuple[jax.Array, jax.Array]:
+    """Ground truth for the membership kernel: the same laminar
+    range-count (``searchsorted`` on the posting slice) as a dense [Q, N]
+    membership matrix, then batched ``lax.top_k``.  Bit-identical to
+    ``item_index.rules_with_pallas`` including tie order."""
+    n = support.shape[0]
+    q = plos.shape[0]
+    if n == 0 or k <= 0 or q == 0:
+        return (
+            jnp.full((q, max(k, 0)), -jnp.inf, jnp.float32),
+            jnp.full((q, max(k, 0)), -1, jnp.int32),
+        )
+    score = rank_score(
+        metric,
+        support.astype(jnp.float32),
+        confidence.astype(jnp.float32),
+        lift.astype(jnp.float32),
+    )
+    pos = jnp.arange(n, dtype=jnp.int32)
+    self_hit = node_item[None, :] == jnp.asarray(items, jnp.int32)[:, None]
+    if role == "consequent":
+        member = self_hit
+    else:
+        # Laminar range count per (query, node) via numpy searchsorted on
+        # each query's posting slice — independent of the kernel's
+        # fixed-step in-VMEM binary search.  This reference is never
+        # jitted, so the slice bounds are concrete.
+        arr_lo = np.asarray(post_lo)
+        arr_hi = np.asarray(post_hi)
+        pos_np = np.arange(n)
+        rows = []
+        for qi in range(q):
+            plo, phi = int(plos[qi]), int(phis[qi])
+            rows.append(
+                np.searchsorted(arr_lo[plo:phi], pos_np, side="right")
+                - np.searchsorted(arr_hi[plo:phi], pos_np, side="right")
+            )
+        cnt = jnp.asarray(np.stack(rows).astype(np.int32))
+        if role == "antecedent":
+            member = (cnt - self_hit.astype(jnp.int32)) > 0
+        elif role == "any":
+            member = cnt > 0
+        else:
+            raise ValueError(f"unknown role {role!r}")
+    valid = member & (depth[None, :] >= min_depth)
+    masked = jnp.where(valid, score[None, :], -jnp.inf)
+    if k > n:
+        masked = jnp.pad(
+            masked, ((0, 0), (0, k - n)), constant_values=-jnp.inf
+        )
     vals, idx = jax.lax.top_k(masked, k)
     idx = jnp.where(vals > -jnp.inf, idx.astype(jnp.int32), -1)
     return vals, idx

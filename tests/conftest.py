@@ -1,0 +1,113 @@
+"""Shared fixtures for the whole suite (satellite of the batched-query PR).
+
+One place for what used to be copy-pasted per module:
+
+* session-scoped mined builds + frozen tries of the paper example DB
+  (memoized factories — parametrized tests share one build per config),
+* the random-trie / mixed-query builders the kernel parity tests draw
+  from (now living in ``repro.core.synthetic`` next to the benchmark
+  fixtures),
+* a ``DeviceTrie``-from-dict constructor,
+* hypothesis profiles: ``HYPOTHESIS_PROFILE=ci`` caps ``max_examples``
+  so the CI fast job stays fast; the default ``dev`` profile keeps the
+  library defaults (minus deadlines, which interpret-mode kernels blow).
+
+The ``slow`` marker (registered in ``pyproject.toml``) splits tier-1 into
+the CI fast job (``-m "not slow"``) and the slow job (``-m slow``).
+"""
+import os
+
+import pytest
+
+from repro.arm.datasets import paper_example_db
+from repro.core.array_trie import FrozenTrie
+from repro.core.builder import build_trie_of_rules
+from repro.core.synthetic import (
+    device_trie_from_arrays,
+    mixed_queries,
+    random_csr_trie,
+)
+from repro.core.trie import TrieOfRules
+
+try:  # hypothesis is optional locally; property tests importorskip it
+    from hypothesis import settings as _hyp_settings
+
+    # example counts are profile-governed (the property tests carry no
+    # per-test max_examples, which would override the profile): dev keeps
+    # the historical ~20, ci caps lower for fast feedback
+    _hyp_settings.register_profile("ci", max_examples=8, deadline=None)
+    _hyp_settings.register_profile("dev", max_examples=20, deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:  # pragma: no cover
+    pass
+
+
+# ----------------------------------------------------------------------
+# session-scoped builds (the paper example DB mined once per config)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="session")
+def paper_db():
+    return paper_example_db()
+
+
+@pytest.fixture(scope="session")
+def mined(paper_db):
+    """Memoized ``build_trie_of_rules`` factory on the paper DB:
+    ``mined(minsup=0.25, miner="fpgrowth", engine="pointer")``."""
+    cache = {}
+
+    def get(minsup=0.25, miner="fpgrowth", engine="pointer"):
+        key = (minsup, miner, engine)
+        if key not in cache:
+            cache[key] = build_trie_of_rules(
+                paper_db, minsup, miner=miner, engine=engine
+            )
+        return cache[key]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def frozen(mined):
+    """Memoized ``FrozenTrie.freeze`` factory over ``mined`` configs."""
+    cache = {}
+
+    def get(minsup=0.25, miner="fpgrowth"):
+        key = (minsup, miner)
+        if key not in cache:
+            cache[key] = FrozenTrie.freeze(mined(minsup, miner).trie)
+        return cache[key]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def empty_frozen():
+    """The degenerate trie: a frozen empty ``TrieOfRules`` (root only)."""
+    return FrozenTrie.freeze(TrieOfRules())
+
+
+# ----------------------------------------------------------------------
+# array-level builders (shared with benches via repro.core.synthetic)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="session")
+def random_trie():
+    """``random_trie(rng, n_nodes, n_items, max_children=6)`` → the
+    frozen-layout dict of arrays (CSR + DFS + item index + edge metrics)."""
+    return random_csr_trie
+
+
+@pytest.fixture(scope="session")
+def query_mix():
+    """``query_mix(rng, arrs, q, width)`` → (queries, ant_len): 1/3 real
+    paths, 1/3 junk, 1/3 all-padding rows."""
+    return mixed_queries
+
+
+@pytest.fixture(scope="session")
+def device_trie():
+    """``device_trie(arrs, csr=True)`` → DeviceTrie over an arrays dict
+    (``csr=False`` drops the CSR offsets → seed full-table search path).
+    The constructor itself lives in ``core.synthetic`` next to the dict
+    producers, shared with the benches."""
+    return device_trie_from_arrays

@@ -11,9 +11,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.synthetic import db_and_minsup, transaction_dbs
+
+pytestmark = pytest.mark.slow  # hypothesis-heavy: CI slow job
+
 from repro.arm.apriori import apriori
 from repro.arm.rulegen import canonical_sequences
-from repro.arm.transactions import TransactionDB
 from repro.core.array_trie import FrozenTrie
 from repro.core.build_arrays import build_frozen_trie
 from repro.core.builder import build_trie_of_rules
@@ -26,31 +29,6 @@ FROZEN_FIELDS = (
     "item_order", "item_rank",
 )
 METRIC_FIELDS = ("support", "confidence", "lift")
-
-
-@st.composite
-def transaction_dbs(draw):
-    n_items = draw(st.integers(min_value=3, max_value=14))
-    n_tx = draw(st.integers(min_value=4, max_value=40))
-    txs = []
-    for _ in range(n_tx):
-        size = draw(st.integers(min_value=1, max_value=min(6, n_items)))
-        tx = draw(
-            st.sets(
-                st.integers(min_value=0, max_value=n_items - 1),
-                min_size=1,
-                max_size=size,
-            )
-        )
-        txs.append(tx)
-    return TransactionDB(txs, n_items=n_items)
-
-
-@st.composite
-def db_and_minsup(draw):
-    db = draw(transaction_dbs())
-    minsup = draw(st.sampled_from([0.1, 0.2, 0.3, 0.5]))
-    return db, minsup
 
 
 def assert_field_for_field(expected: FrozenTrie, actual: FrozenTrie):
@@ -66,7 +44,7 @@ def assert_field_for_field(expected: FrozenTrie, actual: FrozenTrie):
         )
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_build_arrays_equals_pointer_freeze(case):
     """The tentpole invariant: mined sequences through both engines."""
@@ -75,7 +53,7 @@ def test_build_arrays_equals_pointer_freeze(case):
     assert_field_for_field(FrozenTrie.freeze(res.trie), res.frozen)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_build_arrays_equals_freeze_fpmax(case):
     """Maximal-itemset sequences (sparser tries, deeper relative paths)."""
@@ -84,7 +62,7 @@ def test_build_arrays_equals_freeze_fpmax(case):
     assert_field_for_field(FrozenTrie.freeze(res.trie), res.frozen)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(transaction_dbs(), st.integers(min_value=0, max_value=2**31 - 1))
 def test_build_arrays_on_raw_subsets(db, seed):
     """Arbitrary (non-mined) sequence lists, duplicates included."""
@@ -104,7 +82,7 @@ def test_build_arrays_on_raw_subsets(db, seed):
     assert_field_for_field(FrozenTrie.freeze(trie), frozen)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_support_batch_matches_itemset_count(case):
     db, minsup = case
@@ -119,7 +97,7 @@ def test_support_batch_matches_itemset_count(case):
     np.testing.assert_array_equal(counts, expect)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_apriori_kernel_counting_parity(case):
     """Mining Step 1 through the Pallas kernel == the numpy bitmap path."""

@@ -7,22 +7,20 @@
 - the CSR jnp oracle ≡ the seed full-table binary-search oracle,
 - empty-trie degenerate cases return all-not-found without tracing a
   zero-chunk kernel.
+
+Trie/query builders and mined fixtures come from ``tests/conftest.py``
+(shared with the DFS, kernel, and batched-query suites).
 """
 
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.arm.datasets import paper_example_db
-from repro.core.builder import build_trie_of_rules
 from repro.core.array_trie import (
-    DeviceTrie,
-    FrozenTrie,
     batched_rule_search,
     child_lookup,
     csr_offsets_from_edges,
 )
-from repro.core.trie import TrieOfRules
 from repro.kernels.ops import edge_metric_arrays, rule_search
 from repro.kernels.ref import rule_search_fused_ref
 from repro.kernels.rule_search import (
@@ -31,95 +29,16 @@ from repro.kernels.rule_search import (
 )
 
 
-def _random_trie(rng, n_nodes, n_items, max_children=6):
-    """Random well-formed trie as (FrozenTrie-like dict of arrays)."""
-    parent = np.full((n_nodes,), -1, np.int32)
-    item = np.full((n_nodes,), -1, np.int32)
-    depth = np.zeros((n_nodes,), np.int32)
-    edges = []
-    used = {0: set()}
-    for nid in range(1, n_nodes):
-        p = rng.randint(0, nid)
-        tries = 0
-        while len(used.setdefault(p, set())) >= min(max_children, n_items):
-            p = rng.randint(0, nid)
-            tries += 1
-            if tries > 50:
-                break
-        avail = [x for x in range(n_items) if x not in used[p]]
-        if not avail:
-            continue
-        it = int(rng.choice(avail))
-        used[p].add(it)
-        used[nid] = set()
-        parent[nid] = p
-        item[nid] = it
-        depth[nid] = depth[p] + 1
-        edges.append((p, it, nid))
-    edges.sort()
-    e = np.array(edges, np.int32).reshape(-1, 3)
-    conf = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
-    sup = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
-    lift = rng.rand(n_nodes).astype(np.float32) * 2
-    offsets, max_fanout = csr_offsets_from_edges(e[:, 0], n_nodes)
-    return {
-        "node_parent": parent, "node_item": item, "node_depth": depth,
-        "confidence": conf, "support": sup, "lift": lift,
-        "edge_parent": e[:, 0], "edge_item": e[:, 1], "edge_child": e[:, 2],
-        "child_offsets": offsets, "max_fanout": max_fanout,
-    }
-
-
-def _device_trie(arrs, csr=True):
-    return DeviceTrie(
-        node_item=jnp.asarray(arrs["node_item"]),
-        node_parent=jnp.asarray(arrs["node_parent"]),
-        node_depth=jnp.asarray(arrs["node_depth"]),
-        support=jnp.asarray(arrs["support"]),
-        confidence=jnp.asarray(arrs["confidence"]),
-        lift=jnp.asarray(arrs["lift"]),
-        edge_parent=jnp.asarray(arrs["edge_parent"]),
-        edge_item=jnp.asarray(arrs["edge_item"]),
-        edge_child=jnp.asarray(arrs["edge_child"]),
-        child_offsets=jnp.asarray(arrs["child_offsets"]) if csr else None,
-        max_fanout=arrs["max_fanout"] if csr else 0,
-    )
-
-
-def _mixed_queries(rng, arrs, q, width):
-    """1/3 real paths (random ant/cons split → compound consequents),
-    1/3 random junk (absent rules), 1/3 all-padding rows."""
-    n_nodes = arrs["node_item"].shape[0]
-    n_items = int(arrs["edge_item"].max()) + 1 if arrs["edge_item"].size else 1
-    queries = np.full((q, width), -1, np.int32)
-    ant_len = np.zeros((q,), np.int32)
-    for row in range(q):
-        kind = row % 3
-        if kind == 0 and n_nodes > 1:
-            nid = rng.randint(1, n_nodes)
-            path = []
-            while nid > 0:
-                path.append(int(arrs["node_item"][nid]))
-                nid = int(arrs["node_parent"][nid])
-            path = path[::-1][:width]
-            queries[row, : len(path)] = path
-            ant_len[row] = rng.randint(0, len(path) + 1)
-        elif kind == 1:
-            k = rng.randint(1, width + 1)
-            queries[row, :k] = rng.randint(0, n_items, size=k)
-            ant_len[row] = rng.randint(0, k + 1)
-        # kind == 2: all-padding row, ant_len 0
-    return queries, ant_len
-
-
 # ----------------------------------------------------------------------
 # CSR offsets round-trip against the pointer trie
 # ----------------------------------------------------------------------
-@pytest.mark.parametrize("minsup", [0.2, 0.3, 0.5])
-def test_child_offsets_roundtrip_pointer_trie(minsup):
-    db = paper_example_db()
-    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
-    fz = FrozenTrie.freeze(res.trie)
+@pytest.mark.parametrize(
+    "minsup",
+    [pytest.param(0.2, marks=pytest.mark.slow), 0.3, 0.5],
+)
+def test_child_offsets_roundtrip_pointer_trie(minsup, mined, frozen):
+    res = mined(minsup)
+    fz = frozen(minsup)
     co = fz.child_offsets
     assert co.shape == (fz.n_nodes + 1,)
     assert co[0] == 0 and co[-1] == fz.n_edges
@@ -160,11 +79,12 @@ def test_child_offsets_roundtrip_pointer_trie(minsup):
 # CSR child_lookup ≡ seed full-table binary search
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("n_nodes,n_items", [(2, 3), (60, 9), (400, 40)])
-def test_child_lookup_csr_matches_seed(n_nodes, n_items):
+def test_child_lookup_csr_matches_seed(n_nodes, n_items, random_trie,
+                                       device_trie):
     rng = np.random.RandomState(n_nodes * 7 + n_items)
-    arrs = _random_trie(rng, n_nodes, n_items)
-    dt_csr = _device_trie(arrs, csr=True)
-    dt_seed = _device_trie(arrs, csr=False)
+    arrs = random_trie(rng, n_nodes, n_items)
+    dt_csr = device_trie(arrs, csr=True)
+    dt_seed = device_trie(arrs, csr=False)
     # valid parents, invalid parents, absent items all covered
     parents = jnp.asarray(
         rng.randint(-2, n_nodes + 2, size=(256,)), jnp.int32
@@ -177,13 +97,14 @@ def test_child_lookup_csr_matches_seed(n_nodes, n_items):
 
 
 @pytest.mark.parametrize("n_nodes,n_items,q,width", [(80, 10, 60, 6)])
-def test_oracle_csr_matches_seed_search(n_nodes, n_items, q, width):
+def test_oracle_csr_matches_seed_search(n_nodes, n_items, q, width,
+                                        random_trie, device_trie, query_mix):
     rng = np.random.RandomState(5)
-    arrs = _random_trie(rng, n_nodes, n_items)
-    queries, ant_len = _mixed_queries(rng, arrs, q, width)
+    arrs = random_trie(rng, n_nodes, n_items)
+    queries, ant_len = query_mix(rng, arrs, q, width)
     qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
-    out_csr = batched_rule_search(_device_trie(arrs, csr=True), qj, alj)
-    out_seed = batched_rule_search(_device_trie(arrs, csr=False), qj, alj)
+    out_csr = batched_rule_search(device_trie(arrs, csr=True), qj, alj)
+    out_seed = batched_rule_search(device_trie(arrs, csr=False), qj, alj)
     for k in out_csr:
         np.testing.assert_array_equal(
             np.asarray(out_csr[k]), np.asarray(out_seed[k]), err_msg=k
@@ -197,10 +118,11 @@ def test_oracle_csr_matches_seed_search(n_nodes, n_items, q, width):
     "n_nodes,n_items,q,width",
     [(5, 4, 9, 3), (60, 8, 48, 5), (300, 24, 130, 7), (700, 150, 200, 4)],
 )
-def test_fused_kernel_parity(n_nodes, n_items, q, width):
+def test_fused_kernel_parity(n_nodes, n_items, q, width, random_trie,
+                             device_trie, query_mix):
     rng = np.random.RandomState(n_nodes + q)
-    arrs = _random_trie(rng, n_nodes, n_items, max_children=9)
-    queries, ant_len = _mixed_queries(rng, arrs, q, width)
+    arrs = random_trie(rng, n_nodes, n_items, max_children=9)
+    queries, ant_len = query_mix(rng, arrs, q, width)
     qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
 
     edge_args = [
@@ -217,7 +139,7 @@ def test_fused_kernel_parity(n_nodes, n_items, q, width):
     ref = rule_search_fused_ref(
         jnp.asarray(arrs["edge_parent"]), *edge_args, *emetrics, qj, alj
     )
-    oracle = batched_rule_search(_device_trie(arrs, csr=True), qj, alj)
+    oracle = batched_rule_search(device_trie(arrs, csr=True), qj, alj)
     for k in ("found", "node"):
         np.testing.assert_array_equal(
             np.asarray(out[k]), np.asarray(ref[k]), err_msg=k
@@ -239,12 +161,11 @@ def test_fused_kernel_parity(n_nodes, n_items, q, width):
     assert (np.asarray(out["lift"])[pad_rows] == 0).all()
 
 
-def test_fused_kernel_hub_bucket_chunked_sweep():
+def test_fused_kernel_hub_bucket_chunked_sweep(query_mix):
     """Root fanout > BF=128 forces n_fan_chunks > 1 — the chunked sweep
     over a hub node's bucket window must stay bit-identical to the
     reference (the low-minsup production shape: many frequent 1-items)."""
     root_fanout = 300  # > 2*BF: three fan chunks
-    n_items = root_fanout
     parent = [-1]
     item = [-1]
     edges = []
@@ -279,7 +200,7 @@ def test_fused_kernel_hub_bucket_chunked_sweep():
         "edge_child": e[:, 2].copy(),
         "child_offsets": offsets, "max_fanout": max_fanout,
     }
-    queries, ant_len = _mixed_queries(rng, arrs, 96, 4)
+    queries, ant_len = query_mix(rng, arrs, 96, 4)
     qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
     emetrics = [
         jnp.asarray(arrs[col])[jnp.asarray(arrs["edge_child"])]
@@ -305,13 +226,11 @@ def test_fused_kernel_hub_bucket_chunked_sweep():
         )
 
 
-def test_ops_rule_search_single_launch_matches_oracle():
+def test_ops_rule_search_single_launch_matches_oracle(frozen, query_mix):
     """The public op (fused path) against the oracle on real mined data."""
-    db = paper_example_db()
-    res = build_trie_of_rules(db, 0.25, miner="fpgrowth")
-    fz = FrozenTrie.freeze(res.trie)
+    fz = frozen(0.25)
     rng = np.random.RandomState(3)
-    queries, ant_len = _mixed_queries(
+    queries, ant_len = query_mix(
         rng,
         {
             "node_item": fz.node_item, "node_parent": fz.node_parent,
@@ -336,12 +255,8 @@ def test_ops_rule_search_single_launch_matches_oracle():
 # ----------------------------------------------------------------------
 # empty trie: guards instead of zero-chunk kernels
 # ----------------------------------------------------------------------
-def _empty_frozen_trie():
-    return FrozenTrie.freeze(TrieOfRules())
-
-
-def test_empty_trie_freeze_and_metric_arrays():
-    fz = _empty_frozen_trie()
+def test_empty_trie_freeze_and_metric_arrays(empty_frozen):
+    fz = empty_frozen
     assert fz.n_nodes == 1 and fz.n_edges == 0
     np.testing.assert_array_equal(fz.child_offsets, [0, 0])
     assert fz.max_fanout == 0
@@ -350,8 +265,8 @@ def test_empty_trie_freeze_and_metric_arrays():
     assert edges["max_fanout"] == 0
 
 
-def test_empty_trie_search_all_not_found():
-    fz = _empty_frozen_trie()
+def test_empty_trie_search_all_not_found(empty_frozen):
+    fz = empty_frozen
     queries = np.array([[0, 1], [-1, -1], [2, -1]], np.int32)
     ant_len = np.array([1, 0, 0], np.int32)
     for out in (
@@ -385,25 +300,27 @@ def test_empty_edge_table_kernels_guarded():
     assert float(out["lift"][0]) == 0.0
 
 
-def test_zero_width_queries_guarded():
-    db = paper_example_db()
-    res = build_trie_of_rules(db, 0.3, miner="fpgrowth")
-    fz = FrozenTrie.freeze(res.trie)
+def test_zero_width_queries_guarded(frozen):
+    fz = frozen(0.3)
     out = rule_search(
         fz, np.zeros((4, 0), np.int32), np.zeros((4,), np.int32)
     )
     assert not np.asarray(out["found"]).any()
 
 
-def test_device_trie_pytree_roundtrip():
+def test_device_trie_pytree_roundtrip(random_trie, device_trie):
     rng = np.random.RandomState(0)
-    arrs = _random_trie(rng, 30, 6)
-    dt = _device_trie(arrs, csr=True)
+    arrs = random_trie(rng, 30, 6)
+    dt = device_trie(arrs, csr=True)
     import jax
 
     leaves, treedef = jax.tree_util.tree_flatten(dt)
     dt2 = jax.tree_util.tree_unflatten(treedef, leaves)
     assert dt2.max_fanout == dt.max_fanout
+    assert dt2.max_postings == dt.max_postings
     np.testing.assert_array_equal(
         np.asarray(dt2.child_offsets), np.asarray(dt.child_offsets)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(dt2.item_offsets), np.asarray(dt.item_offsets)
     )

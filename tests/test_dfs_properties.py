@@ -12,29 +12,19 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.arm.transactions import TransactionDB
+from repro.core.synthetic import transaction_dbs as _shared_dbs
+
+pytestmark = pytest.mark.slow  # hypothesis-heavy: CI slow job
+
+
+def transaction_dbs():
+    return _shared_dbs(max_items=12, max_tx=30)
+
+
 from repro.core.array_trie import FrozenTrie
 from repro.core.builder import build_trie_of_rules
 from repro.kernels.metrics_inkernel import RANK_METRICS
 from repro.kernels.ops import top_k_rules
-
-
-@st.composite
-def transaction_dbs(draw):
-    n_items = draw(st.integers(min_value=3, max_value=12))
-    n_tx = draw(st.integers(min_value=4, max_value=30))
-    txs = []
-    for _ in range(n_tx):
-        size = draw(st.integers(min_value=1, max_value=min(6, n_items)))
-        tx = draw(
-            st.sets(
-                st.integers(min_value=0, max_value=n_items - 1),
-                min_size=1,
-                max_size=size,
-            )
-        )
-        txs.append(tx)
-    return TransactionDB(txs, n_items=n_items)
 
 
 def _pointer_subtrees(trie):
@@ -60,7 +50,7 @@ def _pointer_subtrees(trie):
     return {bfs[id(n)]: collect(n) for n in order}
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(transaction_dbs(), st.floats(min_value=0.1, max_value=0.6))
 def test_dfs_layout_roundtrips_pointer_subtrees(db, minsup):
     res = build_trie_of_rules(db, minsup, miner="fpgrowth")
@@ -86,7 +76,7 @@ def test_dfs_layout_roundtrips_pointer_subtrees(db, minsup):
         assert fz.subtree_size[p] >= fz.subtree_size[nid] + 1
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(
     transaction_dbs(),
     st.floats(min_value=0.15, max_value=0.5),

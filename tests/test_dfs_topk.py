@@ -9,13 +9,14 @@
 - ``ops.top_k_rules`` end-to-end: prefix descent via the CSR buckets,
   prefix-not-in-trie, node-id mapping back from DFS positions, agreement
   with the pointer trie's ``top_n``.
+
+Mined/frozen fixtures come from ``tests/conftest.py``; the 1e5-node
+acceptance-scale case is ``@pytest.mark.slow`` (CI slow job).
 """
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.arm.datasets import paper_example_db
-from repro.core.builder import build_trie_of_rules
 from repro.core.array_trie import FrozenTrie, dfs_layout
 from repro.core.synthetic import synthetic_csr_trie
 from repro.core.trie import TrieOfRules
@@ -72,10 +73,9 @@ def _arrs_from_frozen(fz: FrozenTrie):
 # DFS layout round-trips
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("minsup", [0.2, 0.3, 0.5])
-def test_dfs_layout_roundtrip_pointer_trie(minsup):
-    db = paper_example_db()
-    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
-    fz = FrozenTrie.freeze(res.trie)
+def test_dfs_layout_roundtrip_pointer_trie(minsup, mined, frozen):
+    res = mined(minsup)
+    fz = frozen(minsup)
     _assert_dfs_roundtrip(_arrs_from_frozen(fz))
     # pointer-trie ground truth: node v's subtree positions = the DFS
     # positions of every pointer node reachable below v
@@ -160,6 +160,7 @@ def test_topk_kernel_oracle_parity(metric, k):
         )
 
 
+@pytest.mark.slow
 def test_topk_parity_with_ties():
     """Quantized metric columns force many exact ties; tie order (lower
     DFS position first) must match lax.top_k bit-for-bit, including ties
@@ -197,6 +198,7 @@ def test_topk_k_exceeds_live_rules():
     assert (np.asarray(kp)[:40] >= 0).all()
 
 
+@pytest.mark.slow
 def test_topk_parity_100k_nodes():
     """Acceptance-scale parity: 1e5 nodes, interpret mode, k=100."""
     arrs = synthetic_csr_trie(100_000 - 1, seed=13)
@@ -227,15 +229,9 @@ def test_topk_empty_trie_guarded():
 # ----------------------------------------------------------------------
 # ops.top_k_rules end to end
 # ----------------------------------------------------------------------
-def _mined_frozen(minsup=0.25):
-    db = paper_example_db()
-    res = build_trie_of_rules(db, minsup, miner="fpgrowth")
-    return res, FrozenTrie.freeze(res.trie)
-
-
 @pytest.mark.parametrize("metric", RANK_METRICS)
-def test_top_k_rules_kernel_matches_oracle(metric):
-    _, fz = _mined_frozen()
+def test_top_k_rules_kernel_matches_oracle(metric, frozen):
+    fz = frozen(0.25)
     for prefix in (None, (int(fz.item_order[0]),)):
         out_k = top_k_rules(fz, 8, metric, prefix=prefix)
         out_o = top_k_rules(fz, 8, metric, prefix=prefix, use_kernel=False)
@@ -246,10 +242,10 @@ def test_top_k_rules_kernel_matches_oracle(metric):
             )
 
 
-def test_top_k_rules_matches_pointer_trie_top_n():
+def test_top_k_rules_matches_pointer_trie_top_n(mined, frozen):
     """Whole-trie ranking at min_depth=2 reproduces the pointer trie's
     heapq top_n for the stored metric columns."""
-    res, fz = _mined_frozen()
+    res, fz = mined(0.25), frozen(0.25)
     for metric in ("support", "confidence", "lift"):
         want = res.trie.top_n(5, metric, min_depth=2)
         out = top_k_rules(fz, 5, metric, min_depth=2)
@@ -261,10 +257,10 @@ def test_top_k_rules_matches_pointer_trie_top_n():
         )
 
 
-def test_top_k_rules_prefix_scopes_to_subtree():
+def test_top_k_rules_prefix_scopes_to_subtree(mined, frozen):
     """A prefix-scoped ranking returns exactly the best rules among the
     prefix node's subtree (brute-force verified) — nothing outside."""
-    res, fz = _mined_frozen()
+    res, fz = mined(0.25), frozen(0.25)
     item = int(fz.item_order[0])
     out = top_k_rules(fz, 10, "confidence", prefix=(item,))
     nodes = np.asarray(out["node"])
@@ -289,8 +285,8 @@ def test_top_k_rules_prefix_scopes_to_subtree():
     )
 
 
-def test_top_k_rules_prefix_not_in_trie():
-    _, fz = _mined_frozen()
+def test_top_k_rules_prefix_not_in_trie(frozen):
+    fz = frozen(0.25)
     out = top_k_rules(fz, 6, "lift", prefix=(123456,))
     assert (np.asarray(out["values"]) == -np.inf).all()
     assert (np.asarray(out["node"]) == -1).all()
@@ -299,16 +295,16 @@ def test_top_k_rules_prefix_not_in_trie():
     assert (np.asarray(out["node"]) == -1).all()
 
 
-def test_top_k_rules_rejects_unknown_metric():
-    _, fz = _mined_frozen()
+def test_top_k_rules_rejects_unknown_metric(frozen):
+    fz = frozen(0.25)
     with pytest.raises(ValueError, match="metric"):
         top_k_rules(fz, 3, "novelty")
 
 
-def test_dfs_rank_arrays_requires_layout():
+def test_dfs_rank_arrays_requires_layout(frozen):
     import dataclasses
 
-    _, fz = _mined_frozen()
+    fz = frozen(0.25)
     dt = dataclasses.replace(fz.device_arrays(), dfs_to_node=None)
     with pytest.raises(ValueError, match="DFS layout"):
         dfs_rank_arrays(dt)

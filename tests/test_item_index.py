@@ -1,0 +1,169 @@
+"""Item-inverted index layout tests.
+
+- ``item_offsets`` / ``item_nodes`` round-trip against the pointer trie's
+  per-item enumeration (``TrieOfRules.rules_with_item``): each posting
+  list is exactly the nodes with that consequent, DFS-position-sorted,
+- both construction engines (pointer freeze / array-native build) emit
+  bit-identical indexes,
+- posting subtree ranges are range-intersectable with the DFS layout
+  (the laminar count identity the membership kernel relies on),
+- degenerate shapes: empty trie, single item, items absent from the
+  universe, synthetic/random fixtures.
+"""
+import numpy as np
+import pytest
+
+from repro.core.array_trie import FrozenTrie, item_index_arrays
+from repro.core.synthetic import synthetic_csr_trie
+from repro.kernels.ops import item_rank_arrays
+
+
+def _bfs_ids(trie):
+    from collections import deque
+
+    ids = {id(trie.root): 0}
+    q = deque([trie.root])
+    while q:
+        node = q.popleft()
+        for child in sorted(node.children.values(), key=lambda c: c.item):
+            ids[id(child)] = len(ids)
+            q.append(child)
+    return ids
+
+
+# ----------------------------------------------------------------------
+# posting-list round-trip vs pointer-trie enumeration
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("minsup", [0.2, 0.25, 0.4])
+def test_posting_lists_roundtrip_pointer_trie(minsup, mined, frozen):
+    res = mined(minsup)
+    fz = frozen(minsup)
+    io, inodes = fz.item_offsets, fz.item_nodes
+    n_items = io.shape[0] - 1
+    # shape + coverage: every non-root node posts exactly once
+    assert inodes.shape == (fz.n_nodes - 1,)
+    assert io[0] == 0 and io[-1] == inodes.shape[0]
+    assert (np.diff(io) >= 0).all()
+    assert fz.max_postings == (np.diff(io).max() if n_items else 0)
+    assert sorted(inodes.tolist()) == list(range(1, fz.n_nodes))
+    bfs = _bfs_ids(res.trie)
+    for it in range(n_items):
+        lo, hi = int(io[it]), int(io[it + 1])
+        post = inodes[lo:hi]
+        # membership: exactly the pointer nodes with consequent `it`
+        want = {
+            bfs[id(nd)]
+            for nd in res.trie.rules_with_item(it, role="consequent")
+        }
+        assert set(post.tolist()) == want
+        assert (fz.node_item[post] == it).all()
+        # order: DFS position strictly ascending within the list
+        assert (np.diff(fz.dfs_order[post]) > 0).all()
+
+
+@pytest.mark.parametrize("role", ["antecedent", "any"])
+@pytest.mark.parametrize("minsup", [0.2, 0.3])
+def test_laminar_range_count_matches_pointer_walk(minsup, role, mined,
+                                                  frozen):
+    """The membership identity the kernel uses — node v involves item i
+    iff #(post_lo <= dfs(v)) - #(post_hi <= dfs(v)) (minus self for the
+    antecedent role) is positive — vs the pointer trie's path walk."""
+    res = mined(minsup)
+    fz = frozen(minsup)
+    arrays = item_rank_arrays(fz)
+    post_lo = np.asarray(arrays["post_lo"])
+    post_hi = np.asarray(arrays["post_hi"])
+    io = arrays["item_offsets"]
+    bfs = _bfs_ids(res.trie)
+    for it in range(io.shape[0] - 1):
+        plo, phi = int(io[it]), int(io[it + 1])
+        want = {bfs[id(nd)] for nd in res.trie.rules_with_item(it, role)}
+        got = set()
+        for nid in range(1, fz.n_nodes):
+            p = int(fz.dfs_order[nid])
+            cnt = int(
+                np.searchsorted(post_lo[plo:phi], p, side="right")
+                - np.searchsorted(post_hi[plo:phi], p, side="right")
+            )
+            if role == "antecedent":
+                cnt -= int(fz.node_item[nid] == it)
+            if cnt > 0:
+                got.add(nid)
+        assert got == want, (it, role)
+
+
+# ----------------------------------------------------------------------
+# engine parity: pointer freeze == array-native build
+# ----------------------------------------------------------------------
+def test_item_index_engine_parity(mined):
+    res = mined(0.2, engine="both")
+    fz = FrozenTrie.freeze(res.trie)
+    fa = res.frozen
+    np.testing.assert_array_equal(fz.item_offsets, fa.item_offsets)
+    np.testing.assert_array_equal(fz.item_nodes, fa.item_nodes)
+    assert fz.max_postings == fa.max_postings
+
+
+# ----------------------------------------------------------------------
+# degenerate shapes
+# ----------------------------------------------------------------------
+def test_item_index_empty_trie(empty_frozen):
+    fz = empty_frozen
+    assert fz.item_nodes.shape == (0,)
+    assert (np.diff(fz.item_offsets) == 0).all()
+    assert fz.max_postings == 0
+    arrays = item_rank_arrays(fz)  # empty gathers must not raise
+    assert arrays["post_lo"].shape == (0,)
+
+
+def test_item_index_arrays_function_direct():
+    # root + three nodes: items 1, 0, 1 at DFS positions 1, 2, 3
+    node_item = np.array([-1, 1, 0, 1], np.int32)
+    dfs_order = np.array([0, 1, 2, 3], np.int32)
+    io, inodes, maxp = item_index_arrays(node_item, dfs_order, 3)
+    np.testing.assert_array_equal(io, [0, 1, 3, 3])
+    np.testing.assert_array_equal(inodes, [2, 1, 3])  # item 0, then item 1
+    assert maxp == 2
+    # item 2 never occurs: empty slice
+    assert io[2] == io[3]
+
+
+def test_item_index_synthetic_fixture_consistent():
+    arrs = synthetic_csr_trie(2_000, seed=3)
+    io, inodes = arrs["item_offsets"], arrs["item_nodes"]
+    assert inodes.shape[0] == 2_000
+    for it in (0, 1, int(arrs["edge_item"].max())):
+        post = inodes[int(io[it]): int(io[it + 1])]
+        assert (arrs["node_item"][post] == it).all()
+        assert (np.diff(arrs["dfs_order"][post]) > 0).all()
+    # every node with the item is in the posting list (count equality)
+    counts = np.bincount(
+        arrs["node_item"][arrs["node_item"] >= 0],
+        minlength=io.shape[0] - 1,
+    )
+    np.testing.assert_array_equal(np.diff(io), counts)
+
+
+def test_item_rank_arrays_requires_index(device_trie):
+    import dataclasses
+
+    arrs = synthetic_csr_trie(50)
+    dt = dataclasses.replace(
+        device_trie(arrs), item_offsets=None, item_nodes=None
+    )
+    with pytest.raises(ValueError, match="item-inverted index"):
+        item_rank_arrays(dt)
+
+
+def test_post_hi_sorted_per_item(frozen):
+    """``item_rank_arrays`` must deliver per-item ascending subtree ends
+    (the second binary-searchable side of the laminar count)."""
+    fz = frozen(0.2)
+    arrays = item_rank_arrays(fz)
+    post_lo = np.asarray(arrays["post_lo"])
+    post_hi = np.asarray(arrays["post_hi"])
+    io = arrays["item_offsets"]
+    for it in range(io.shape[0] - 1):
+        lo, hi = int(io[it]), int(io[it + 1])
+        assert (np.diff(post_lo[lo:hi]) > 0).all()
+        assert (np.diff(post_hi[lo:hi]) >= 0).all()

@@ -3,10 +3,11 @@
 Every Pallas kernel is swept over shapes (incl. non-tile-multiple sizes,
 which exercise the padding paths) and dtypes, and asserted allclose against
 ``ref.py``.
+
+Random-trie builders and mined fixtures come from ``tests/conftest.py``.
 """
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.core.array_trie import csr_offsets_from_edges
@@ -115,56 +116,13 @@ def test_support_count_op_equals_db():
 # ----------------------------------------------------------------------
 # rule_search
 # ----------------------------------------------------------------------
-def _random_trie_arrays(rng, n_nodes, n_items, max_children=4):
-    """Random well-formed trie edge arrays + node metric columns."""
-    parent = np.full((n_nodes,), -1, np.int32)
-    item = np.full((n_nodes,), -1, np.int32)
-    depth = np.zeros((n_nodes,), np.int32)
-    edges = []
-    used = {0: set()}
-    for nid in range(1, n_nodes):
-        p = rng.randint(0, nid)
-        tries = 0
-        while len(used.setdefault(p, set())) >= min(max_children, n_items):
-            p = rng.randint(0, nid)
-            tries += 1
-            if tries > 50:
-                break
-        avail = [x for x in range(n_items) if x not in used[p]]
-        if not avail:
-            continue
-        it = int(rng.choice(avail))
-        used[p].add(it)
-        used[nid] = set()
-        parent[nid] = p
-        item[nid] = it
-        depth[nid] = depth[p] + 1
-        edges.append((p, it, nid))
-    edges.sort()
-    e = np.array(edges, np.int32).reshape(-1, 3)
-    conf = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
-    sup = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
-    lift = rng.rand(n_nodes).astype(np.float32) * 2
-    return {
-        "edge_parent": e[:, 0],
-        "edge_item": e[:, 1],
-        "edge_child": e[:, 2],
-        "edge_conf": conf[e[:, 2]],
-        "edge_sup": sup[e[:, 2]],
-        "edge_lift": lift[e[:, 2]],
-        "node_parent": parent,
-        "node_item": item,
-        "node_depth": depth,
-    }
-
-
 @pytest.mark.parametrize(
     "n_nodes,n_items,q,width",
     [(5, 4, 3, 2), (50, 12, 40, 5), (200, 30, 129, 7), (512, 64, 256, 4)],
 )
-def test_rule_search_sweep(n_nodes, n_items, q, width):
+def test_rule_search_sweep(n_nodes, n_items, q, width, random_trie):
     rng = np.random.RandomState(n_nodes + q)
-    arrs = _random_trie_arrays(rng, n_nodes, n_items)
+    arrs = random_trie(rng, n_nodes, n_items, max_children=4)
     queries = rng.randint(-1, n_items, size=(q, width)).astype(np.int32)
     ant_len = rng.randint(0, width + 1, size=(q,)).astype(np.int32)
 
@@ -195,11 +153,11 @@ def test_rule_search_sweep(n_nodes, n_items, q, width):
     "n_nodes,n_items,q,width",
     [(5, 4, 3, 2), (50, 12, 40, 5), (200, 30, 129, 7), (512, 64, 256, 4)],
 )
-def test_rule_search_fused_sweep(n_nodes, n_items, q, width):
+def test_rule_search_fused_sweep(n_nodes, n_items, q, width, random_trie):
     """Fused CSR kernel ≡ layout-agnostic full-table reference (incl. the
     compound lift it computes in-kernel)."""
     rng = np.random.RandomState(n_nodes + q)
-    arrs = _random_trie_arrays(rng, n_nodes, n_items)
+    arrs = random_trie(rng, n_nodes, n_items, max_children=4)
     queries = rng.randint(-1, n_items, size=(q, width)).astype(np.int32)
     ant_len = rng.randint(0, width + 1, size=(q,)).astype(np.int32)
     offsets, max_fanout = csr_offsets_from_edges(
@@ -234,16 +192,13 @@ def test_rule_search_fused_sweep(n_nodes, n_items, q, width):
         )
 
 
-def test_rule_search_walks_real_trie():
+def test_rule_search_walks_real_trie(paper_db, mined, frozen):
     """End-to-end: kernel answers == pointer trie answers on real data."""
-    from repro.arm.datasets import paper_example_db
-    from repro.core.builder import build_flat_table, build_trie_of_rules
-    from repro.core.array_trie import FrozenTrie
+    from repro.core.builder import build_flat_table
 
-    db = paper_example_db()
-    res = build_trie_of_rules(db, 0.3, miner="fpgrowth")
-    _, rules, _ = build_flat_table(db, res.itemsets)
-    fz = FrozenTrie.freeze(res.trie)
+    res = mined(0.3)
+    _, rules, _ = build_flat_table(paper_db, res.itemsets)
+    fz = frozen(0.3)
     q, al = fz.canonicalize_queries(
         [r.antecedent for r in rules], [r.consequent for r in rules]
     )

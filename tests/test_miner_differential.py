@@ -1,0 +1,126 @@
+"""Differential tests for the Step-1 miners (satellite of the batched PR).
+
+``apriori`` and ``fpgrowth`` implement the same spec through disjoint
+algorithms (level-wise bitmap joins vs conditional FP-trees) — random
+databases must produce the SAME itemset→count dict.  ``fpmax`` must be
+exactly the maximal frontier of ``fpgrowth``'s output.  fpgrowth
+previously had no direct parity suite; these close that gap.
+
+Deterministic cases run in the CI fast job; the hypothesis sweeps carry
+the module's ``slow``-marked deep coverage.
+"""
+import pytest
+
+from repro.arm.apriori import apriori
+from repro.arm.datasets import paper_example_db
+from repro.arm.fpgrowth import fpgrowth, fpmax
+from repro.arm.transactions import TransactionDB
+
+
+def _maximal(itemsets):
+    """The maximal frontier: no frequent proper superset present."""
+    keys = list(itemsets)
+    return {
+        s: c for s, c in itemsets.items()
+        if not any(s < t for t in keys)
+    }
+
+
+def assert_miners_agree(db, minsup, max_len=12):
+    ap = apriori(db, minsup, max_len=max_len)
+    fp = fpgrowth(db, minsup, max_len=max_len)
+    assert ap == fp, (
+        f"apriori/fpgrowth disagree at minsup={minsup}: "
+        f"only_apriori={set(ap) - set(fp)} only_fpgrowth={set(fp) - set(ap)} "
+        f"count_diffs={ {s: (ap[s], fp[s]) for s in set(ap) & set(fp) if ap[s] != fp[s]} }"
+    )
+    fm = fpmax(db, minsup, max_len=max_len)
+    # fpmax ⊆ fpgrowth with identical counts, and equals the maximal set
+    for s, c in fm.items():
+        assert s in fp and fp[s] == c
+    assert fm == _maximal(fp)
+
+
+# ----------------------------------------------------------------------
+# deterministic cases (CI fast job)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("minsup", [0.1, 0.2, 0.3, 0.5, 0.9])
+def test_miners_agree_paper_example(minsup):
+    assert_miners_agree(paper_example_db(), minsup)
+
+
+def test_miners_agree_edge_databases():
+    # single transaction, single item
+    assert_miners_agree(TransactionDB([{0}], n_items=1), 0.5)
+    # all transactions identical
+    assert_miners_agree(
+        TransactionDB([{0, 1, 2}] * 5, n_items=3), 0.4
+    )
+    # pairwise disjoint transactions
+    assert_miners_agree(
+        TransactionDB([{0}, {1}, {2}, {3}], n_items=4), 0.2
+    )
+    # minsup above every support: both miners must return empty
+    db = TransactionDB([{0}, {1}], n_items=2)
+    assert fpgrowth(db, 0.9) == {} and apriori(db, 0.9) == {}
+
+
+def test_miners_agree_max_len_cap():
+    """The max_len cutoff must prune identically in both miners."""
+    db = TransactionDB([{0, 1, 2, 3, 4}] * 4 + [{0, 1}], n_items=5)
+    for max_len in (1, 2, 3):
+        ap = apriori(db, 0.5, max_len=max_len)
+        fp = fpgrowth(db, 0.5, max_len=max_len)
+        assert ap == fp
+        assert max(len(s) for s in ap) <= max_len
+
+
+@pytest.mark.parametrize(
+    "minsup", [pytest.param(0.2, marks=pytest.mark.slow), 0.4]
+)
+def test_apriori_kernel_path_agrees(minsup):
+    """use_kernel=True (the Pallas support_count route) mines the same
+    dict as the host bitmap route AND as fpgrowth."""
+    db = paper_example_db()
+    host = apriori(db, minsup, use_kernel=False)
+    kern = apriori(db, minsup, use_kernel=True)
+    assert host == kern == fpgrowth(db, minsup)
+
+
+# ----------------------------------------------------------------------
+# hypothesis sweeps (CI slow job; the guard keeps the deterministic
+# cases above collectible when hypothesis is absent locally)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings
+
+    from repro.core.synthetic import db_and_minsup
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(deadline=None)
+    @given(db_and_minsup())
+    def test_miners_agree_random_dbs(case):
+        db, minsup = case
+        assert_miners_agree(db, minsup)
+
+    @pytest.mark.slow
+    @settings(deadline=None)
+    @given(db_and_minsup())
+    def test_fpmax_is_maximal_frontier_random_dbs(case):
+        db, minsup = case
+        fp = fpgrowth(db, minsup)
+        fm = fpmax(db, minsup)
+        # every frequent itemset is covered by some maximal set
+        for s in fp:
+            assert any(s <= m for m in fm)
+        # and no maximal set is contained in another
+        for a in fm:
+            for b in fm:
+                if a is not b:
+                    assert not a < b

@@ -8,25 +8,21 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.synthetic import transaction_dbs
+
+pytestmark = pytest.mark.slow  # hypothesis-heavy: CI slow job
+
 from repro.arm.rulegen import prefix_split_rules
-from repro.arm.transactions import TransactionDB
 from repro.core.array_trie import FrozenTrie, batched_rule_search
 from repro.core.builder import build_trie_of_rules
 from repro.data.corpus_rules import NgramTrie
 
 
-@st.composite
-def dbs(draw):
-    n_items = draw(st.integers(4, 12))
-    n_tx = draw(st.integers(5, 30))
-    txs = [
-        draw(st.sets(st.integers(0, n_items - 1), min_size=1, max_size=5))
-        for _ in range(n_tx)
-    ]
-    return TransactionDB(txs, n_items=n_items)
+def dbs():
+    return transaction_dbs(max_items=12, max_tx=30)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(dbs())
 def test_metric_inequalities(db):
     """0 ≤ conf ≤ 1; sup(rule) ≤ min(sup(A), sup(C)); lift·sup(C) = conf."""
@@ -43,7 +39,7 @@ def test_metric_inequalities(db):
             )
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(dbs(), st.randoms(use_true_random=False))
 def test_query_order_invariance(db, rnd):
     """Item order inside A and C must not affect the answer (the trie
@@ -83,7 +79,7 @@ def token_rows(draw):
                           min_size=n, max_size=n))]
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(token_rows())
 def test_ngram_trie_identities(rows):
     """Ordered-trie node stats equal raw n-gram counts, and compound
@@ -121,7 +117,7 @@ def test_ngram_trie_identities(rows):
         )
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(token_rows())
 def test_ngram_propose_is_greedy_argmax(rows):
     t = NgramTrie(n=3).fit(rows)

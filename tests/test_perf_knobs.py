@@ -33,6 +33,7 @@ def test_causal_skip_forward_equivalent():
     assert abs(float(l0) - float(l2)) / float(l0) < 1e-3
 
 
+@pytest.mark.slow
 def test_causal_skip_gradients_equivalent():
     cfg, params, batch = _setup(s=512)
     g0 = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)

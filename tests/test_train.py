@@ -202,6 +202,7 @@ def test_error_feedback_preserves_signal():
     assert np.abs(acc - total).max() < 0.01
 
 
+@pytest.mark.slow
 def test_train_step_with_microbatches_matches_full():
     cfg = get_reduced_config("granite-3-2b")
     params, _ = materialize_params(cfg, jax.random.PRNGKey(0))

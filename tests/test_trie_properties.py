@@ -9,10 +9,13 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+
+from repro.core.synthetic import db_and_minsup
+
+pytestmark = pytest.mark.slow  # hypothesis-heavy: CI slow job
 
 from repro.arm.rulegen import prefix_split_rules
-from repro.arm.transactions import TransactionDB
 from repro.arm.fpgrowth import fpgrowth, fpmax
 from repro.core.array_trie import (
     FrozenTrie,
@@ -23,32 +26,7 @@ from repro.core.array_trie import (
 from repro.core.builder import build_trie_of_rules
 
 
-@st.composite
-def transaction_dbs(draw):
-    n_items = draw(st.integers(min_value=3, max_value=14))
-    n_tx = draw(st.integers(min_value=4, max_value=40))
-    txs = []
-    for _ in range(n_tx):
-        size = draw(st.integers(min_value=1, max_value=min(6, n_items)))
-        tx = draw(
-            st.sets(
-                st.integers(min_value=0, max_value=n_items - 1),
-                min_size=1,
-                max_size=size,
-            )
-        )
-        txs.append(tx)
-    return TransactionDB(txs, n_items=n_items)
-
-
-@st.composite
-def db_and_minsup(draw):
-    db = draw(transaction_dbs())
-    minsup = draw(st.sampled_from([0.1, 0.2, 0.3, 0.5]))
-    return db, minsup
-
-
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_support_monotone_along_paths(case):
     """Child support ≤ parent support on every trie edge (anti-monotone)."""
@@ -63,7 +41,7 @@ def test_support_monotone_along_paths(case):
         assert node.support <= parent_sup + 1e-12
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_every_mined_rule_retrievable(case):
     """Completeness: every canonical rule is findable with exact metrics."""
@@ -80,7 +58,7 @@ def test_every_mined_rule_retrievable(case):
         assert math.isclose(m.lift, r.metrics.lift, abs_tol=1e-9)
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_compound_confidence_factorizes(case):
     """Eq. 4 holds for every length-≥3 path and every split pair."""
@@ -103,7 +81,7 @@ def test_compound_confidence_factorizes(case):
                 )
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_array_trie_equals_pointer_trie(case):
     """The frozen SoA encoding answers exactly like the pointer trie."""
@@ -131,7 +109,7 @@ def test_array_trie_equals_pointer_trie(case):
         )
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_array_trie_rejects_absent_rules(case):
     """Soundness: rules not in the trie are reported not-found."""
@@ -147,7 +125,7 @@ def test_array_trie_rejects_absent_rules(case):
     assert float(out["support"][0]) == 0.0
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_traverse_and_topn_consistency(case):
     db, minsup = case
@@ -166,7 +144,7 @@ def test_traverse_and_topn_consistency(case):
         )
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_fpgrowth_equals_apriori(case):
     """Two independent miners agree on the frequent itemsets + counts."""
@@ -178,7 +156,7 @@ def test_fpgrowth_equals_apriori(case):
     assert a == b
 
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(db_and_minsup())
 def test_fpmax_subset_of_fpgrowth_and_maximal(case):
     db, minsup = case
