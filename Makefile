@@ -1,8 +1,12 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast test-slow lint bench-smoke bench-gate \
-	bench-baseline bench-search bench-topk bench-build bench-batched bench
+.PHONY: test test-fast test-slow test-multidevice lint bench-smoke \
+	bench-gate bench-baseline bench-search bench-topk bench-build \
+	bench-batched bench-traversal bench-sharded bench
+
+# 8 simulated CPU devices for the sharded-trie tier (tests + benches)
+MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
 # tier-1 verification (ROADMAP.md)
 test:
@@ -15,6 +19,11 @@ test-fast:
 
 test-slow:
 	$(PY) -m pytest -x -q -m slow
+
+# the multi-device tier: the sharded suite under 8 simulated CPU devices
+# (P in {1, 2, 8} all execute; on plain hosts the same tests cover P=1)
+test-multidevice:
+	$(MULTIDEV) $(PY) -m pytest -x -q tests/test_sharded.py
 
 # static checks (ruff config lives in pyproject.toml)
 lint:
@@ -36,6 +45,14 @@ bench-smoke:
 	$(PY) -m benchmarks.run --only batched_query --smoke \
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched BENCH_batched_query_smoke.json
+	$(PY) -m benchmarks.run --only traversal --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-traversal BENCH_traversal_smoke.json
+	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-sharded BENCH_sharded_query_smoke.json
 
 # CI bench gates: fresh smoke runs vs the committed baselines
 # (benchmarks/baselines/, ratio-based: fail on >2x relative slowdown of
@@ -61,6 +78,18 @@ bench-gate:
 		--json-out-batched /tmp/bench_fresh_batched.json
 	$(PY) benchmarks/check_regression.py \
 		--fresh /tmp/bench_fresh_batched.json
+	$(PY) -m benchmarks.run --only traversal --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-traversal /tmp/bench_fresh_traversal.json
+	$(PY) benchmarks/check_regression.py \
+		--fresh /tmp/bench_fresh_traversal.json
+	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-sharded /tmp/bench_fresh_sharded.json
+	$(PY) benchmarks/check_regression.py --max-ratio 3.0 \
+		--fresh /tmp/bench_fresh_sharded.json
 
 # refresh the committed gate baselines (explicit — bench-smoke never
 # touches them)
@@ -78,6 +107,14 @@ bench-baseline:
 	$(PY) -m benchmarks.run --only batched_query --smoke \
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched benchmarks/baselines/batched_query_smoke.json
+	$(PY) -m benchmarks.run --only traversal --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-traversal benchmarks/baselines/traversal_smoke.json
+	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-sharded benchmarks/baselines/sharded_query_smoke.json
 
 # full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
 bench-search:
@@ -95,6 +132,21 @@ bench-build:
 bench-batched:
 	$(PY) -m benchmarks.run --only batched_query
 
-# every paper figure + kernel benches
+# paper traversal lanes incl. the trie_reduce kernel (BENCH_traversal.json)
+bench-traversal:
+	$(PY) -m benchmarks.run --only traversal
+
+# sharded multi-device engine vs single device, P in {1, 2, 8}
+# (8 simulated CPU devices; real accelerators drop the XLA_FLAGS)
+bench-sharded:
+	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query
+
+# every paper figure + kernel benches.  The sharded lane needs the
+# 8-device env to produce its full P sweep, so the first pass (plain
+# env, honest single-device timings for every other lane) disables its
+# JSON and a second MULTIDEV pass rewrites BENCH_sharded_query.json —
+# otherwise a plain host would clobber the committed P∈{1,2,8}
+# trajectory with a P=1-only file.
 bench:
-	$(PY) -m benchmarks.run
+	$(PY) -m benchmarks.run --json-out-sharded ''
+	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query

@@ -7,7 +7,7 @@ compared is a speedup *measured within the same run*, never absolute
 microseconds.  A fresh speedup below ``baseline / max-ratio`` for any
 matching config fails the gate.
 
-Four bench kinds are gated (auto-detected from the fresh JSON's
+Six bench kinds are gated (auto-detected from the fresh JSON's
 ``bench`` field):
 
 ========================  ==============================  =====================
@@ -17,7 +17,15 @@ kind                      in-run speedup gated            config key
 ``topk_rank``             segmented kernel vs full sort   (n_nodes, k, metric)
 ``build_engines``         array engine vs pointer build   (dataset, n_sequences)
 ``batched_query``         one-launch batch vs Q launches  (op, n_edges, batch)
+``traversal``             trie_reduce kernel vs flat walk (dataset, minsup)
+``sharded_query``         sharded engine vs single device (op, n_edges, n_shards)
 ========================  ==============================  =====================
+
+The sharded_query gate needs a multi-device host for its P sweep —
+``make bench-sharded`` / the CI recipes export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; keys for shard
+counts beyond the visible devices are absent from the fresh JSON and
+simply don't gate (the comparison is over the key intersection).
 
 The committed baselines live under ``benchmarks/baselines/`` and are
 refreshed only by the explicit ``make bench-baseline`` target — routine
@@ -62,6 +70,18 @@ GATES = {
         "metric": "speedup_batched_vs_loop",
         "label": "batched_vs_loop",
         "baseline": "benchmarks/baselines/batched_query_smoke.json",
+    },
+    "traversal": {
+        "key": ("dataset", "minsup"),
+        "metric": "speedup_kernel_vs_flat",
+        "label": "kernel_vs_flat",
+        "baseline": "benchmarks/baselines/traversal_smoke.json",
+    },
+    "sharded_query": {
+        "key": ("op", "n_edges", "n_shards"),
+        "metric": "speedup_sharded_vs_single",
+        "label": "sharded_vs_single",
+        "baseline": "benchmarks/baselines/sharded_query_smoke.json",
     },
 }
 

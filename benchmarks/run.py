@@ -26,6 +26,7 @@ BENCHES = [
     ("rule_search_kernels", paper_figs.bench_rule_search_kernels),
     ("topk_rank_kernel", paper_figs.bench_topk_rank),
     ("batched_query_ops", paper_figs.bench_batched_query),
+    ("sharded_query", paper_figs.bench_sharded_query),
 ]
 
 
@@ -56,12 +57,24 @@ def main() -> None:
         help="path for the batched-vs-loop query-engine perf-trajectory "
              "JSON ('' disables writing)",
     )
+    parser.add_argument(
+        "--json-out-traversal", default="BENCH_traversal.json",
+        help="path for the traversal-lane perf-trajectory JSON "
+             "('' disables writing)",
+    )
+    parser.add_argument(
+        "--json-out-sharded", default="BENCH_sharded_query.json",
+        help="path for the sharded-vs-single query-engine "
+             "perf-trajectory JSON ('' disables writing)",
+    )
     args = parser.parse_args()
     paper_figs.SMOKE = args.smoke
     paper_figs.JSON_OUT = args.json_out
     paper_figs.JSON_OUT_TOPK = args.json_out_topk
     paper_figs.JSON_OUT_BUILD = args.json_out_build
     paper_figs.JSON_OUT_BATCHED = args.json_out_batched
+    paper_figs.JSON_OUT_TRAVERSAL = args.json_out_traversal
+    paper_figs.JSON_OUT_SHARDED = args.json_out_sharded
 
     print("name,us_per_call,derived")
     failed = []

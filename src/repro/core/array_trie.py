@@ -77,6 +77,66 @@ from .trie import TrieNode, TrieOfRules
 NO_NODE = np.int32(-1)
 
 
+def canonical_prefix_rows(prefixes, item_rank=None) -> List[List[int]]:
+    """Normalize Q antecedent prefixes into frequency-sorted item rows.
+
+    The ONE implementation behind both prefix-resolution paths — the
+    device descent (``kernels.ops.prefix_ranges``) and the host descent
+    (``distributed.trie_sharding.host_prefix_ranges``) — whose
+    integer-for-integer agreement the sharded/single bit-parity contract
+    rests on.
+
+    In an already-padded ``[Q, P]`` MATRIX, ``-1`` entries are padding
+    (the repo-wide query-matrix convention) and are dropped per row; in
+    ragged sequences every element is a literal item, so ``-1`` there is
+    remapped off the padding sentinel (to ``-9``) and reads as "not in
+    the trie", exactly like any other absent item.  Items sort by
+    ``(frequency rank, item)`` when an ``item_rank`` table is given;
+    unknown items rank last.
+    """
+    as_matrix = isinstance(prefixes, np.ndarray) and prefixes.ndim == 2
+    rows: List[List[int]] = []
+    for p in prefixes:
+        if as_matrix:
+            its = [int(it) for it in np.asarray(p).reshape(-1) if it != -1]
+        else:
+            its = [
+                int(it) if int(it) != -1 else -9
+                for it in np.asarray(p).reshape(-1)
+            ]
+        if item_rank is not None:
+            nr = int(np.asarray(item_rank).shape[0])
+            its.sort(
+                key=lambda it: (
+                    int(item_rank[it]) if 0 <= it < nr else 1 << 30, it
+                )
+            )
+        rows.append(its)
+    return rows
+
+
+def sanitize_query_items(
+    items, n_items: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Absent-item sanitization shared by every posting-slice resolver.
+
+    Returns ``(valid bool[Q], safe int64[Q], qitems int32[Q])``: items
+    outside ``[0, n_items)`` are invalid (they resolve to empty posting
+    slices), ``safe`` is the clipped index usable against any
+    ``[n_items(+1)]``-sized offsets table, and ``qitems`` carries the
+    sanitized id ``-1`` (matched by no node) for invalid entries.  Both
+    the single-device resolver (``kernels.ops._posting_slices``) and the
+    per-shard one (``trie_sharding._sharded_posting_slices``) go through
+    THIS function — the sharded==single bit-parity contract for
+    absent-item queries rests on the two agreeing integer-for-integer.
+    """
+    items = np.asarray(list(items), np.int64).reshape(-1)
+    valid = (items >= 0) & (items < n_items)
+    safe = np.clip(items, 0, max(n_items - 1, 0))
+    qitems = np.where(valid, items, -1).astype(np.int32)
+    return valid, safe, qitems
+
+
 def item_tables(item_order) -> Tuple[np.ndarray, np.ndarray]:
     """Frequency-order lookup tables shared by both construction engines.
 
@@ -384,6 +444,29 @@ class FrozenTrie:
             item_offsets=jnp.asarray(self.item_offsets),
             item_nodes=jnp.asarray(self.item_nodes),
             max_postings=self.max_postings,
+        )
+
+    def depth1_subtrees(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Shard metadata: the root's child subtrees in DFS order.
+
+        Returns ``(child_ids, dfs_los, sizes)`` — for each depth-1 node
+        (root bucket order = item-sorted = DFS order) its node id, its
+        subtree's DFS start position, and its subtree size.  Because the
+        layout is DFS-contiguous, these subtrees tile ``[1, N)`` with
+        consecutive ranges ``[dfs_los[t], dfs_los[t] + sizes[t])`` — the
+        natural shard boundaries the multi-device partitioner
+        (``repro.distributed.trie_sharding``) bin-packs into contiguous
+        DFS ranges.  The pointer-trie parity oracle is
+        ``TrieOfRules.depth1_subtree_sizes``.
+        """
+        lo, hi = int(self.child_offsets[0]), int(self.child_offsets[1])
+        kids = self.edge_child[lo:hi].astype(np.int64)
+        order = np.argsort(self.dfs_order[kids], kind="stable")
+        kids = kids[order]
+        return (
+            kids.astype(np.int32),
+            self.dfs_order[kids].astype(np.int32),
+            self.subtree_size[kids].astype(np.int32),
         )
 
     def path_items(self, node_id: int) -> Tuple[Item, ...]:

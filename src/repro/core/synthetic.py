@@ -202,6 +202,47 @@ def mixed_queries(
     return queries, ant_len
 
 
+def frozen_from_arrays(arrs: Dict[str, np.ndarray]):
+    """``FrozenTrie`` over one of this module's arrays dicts.
+
+    The synthetic dicts carry no item-frequency tables (their items are
+    already canonical ids), so identity tables stand in — which keeps
+    query canonicalization a no-op, matching how the synthetic fixtures
+    build queries.  Shared by the sharding tests/benches, which need the
+    host-side ``FrozenTrie`` view (``depth1_subtrees``, shard planning)
+    of the same trie the ``DeviceTrie`` fixtures exercise.
+    """
+    from .array_trie import FrozenTrie, item_tables
+
+    edge_item = arrs.get("edge_item")
+    n_items = (
+        int(edge_item.max()) + 1
+        if edge_item is not None and edge_item.size else 0
+    )
+    item_order, item_rank = item_tables(np.arange(n_items, dtype=np.int32))
+    return FrozenTrie(
+        node_item=arrs["node_item"],
+        node_parent=arrs["node_parent"],
+        node_depth=arrs["node_depth"],
+        support=arrs["support"],
+        confidence=arrs["confidence"],
+        lift=arrs["lift"],
+        edge_parent=arrs["edge_parent"],
+        edge_item=arrs["edge_item"],
+        edge_child=arrs["edge_child"],
+        item_order=item_order,
+        item_rank=item_rank,
+        child_offsets=arrs["child_offsets"],
+        max_fanout=arrs["max_fanout"],
+        dfs_order=arrs["dfs_order"],
+        subtree_size=arrs["subtree_size"],
+        dfs_to_node=arrs["dfs_to_node"],
+        item_offsets=arrs["item_offsets"],
+        item_nodes=arrs["item_nodes"],
+        max_postings=arrs["max_postings"],
+    )
+
+
 def device_trie_from_arrays(arrs: Dict[str, np.ndarray], csr: bool = True):
     """``DeviceTrie`` over one of this module's arrays dicts.
 

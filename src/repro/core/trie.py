@@ -254,6 +254,25 @@ class TrieOfRules:
             if hit:
                 yield node
 
+    def depth1_subtree_sizes(self) -> List[Tuple[Item, int]]:
+        """Per-(root-child) subtree sizes, item-sorted — the shard oracle.
+
+        Returns ``[(item, |subtree|), ...]`` over the root's children in
+        item order (the order ``FrozenTrie.freeze`` numbers them, which is
+        also their DFS-range order).  This recursive walk is the pointer
+        parity oracle for ``FrozenTrie.depth1_subtrees`` — the metadata
+        the multi-device partitioner bin-packs into shard ranges.
+        """
+        def size(node: TrieNode) -> int:
+            return 1 + sum(size(c) for c in node.children.values())
+
+        return [
+            (child.item, size(child))
+            for child in sorted(
+                self.root.children.values(), key=lambda c: c.item
+            )
+        ]
+
     def top_n(
         self, n: int, metric: str = "support", min_depth: int = 2
     ) -> List[TrieNode]:

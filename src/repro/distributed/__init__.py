@@ -1,9 +1,16 @@
-"""Distribution substrate: logical-axis sharding, collectives, compression."""
+"""Distribution substrate: logical-axis sharding, the sharded trie
+(subtree-range partitioning + shard_map query engine), compression."""
 from .sharding import (
     LOGICAL_RULES,
     logical_to_spec,
     shard_params_specs,
     constrain,
+)
+from .trie_sharding import (
+    ShardedDeviceTrie,
+    ShardPlan,
+    shard_device_trie,
+    shard_dfs_ranges,
 )
 
 __all__ = [
@@ -11,4 +18,8 @@ __all__ = [
     "logical_to_spec",
     "shard_params_specs",
     "constrain",
+    "ShardedDeviceTrie",
+    "ShardPlan",
+    "shard_device_trie",
+    "shard_dfs_ranges",
 ]

@@ -16,6 +16,11 @@
 
 The shared Eq. 1-4 / interestingness math lives in ``metrics_inkernel`` —
 one implementation for every kernel AND its jnp oracle (``ref``).
+
+The three batched ops are shard_map-aware: handed a
+``repro.distributed.trie_sharding.ShardPlan`` instead of a trie, each
+runs distributed over the plan's ``("data",)`` mesh (per-device kernels
+over local DFS ranges + bit-identical k-best / found-winner merges).
 """
 from .item_index import ROLES
 from .metrics_inkernel import RANK_METRICS

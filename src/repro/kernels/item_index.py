@@ -27,19 +27,35 @@ via the same incremental-extraction + rank-merge machinery as the
 segmented rank kernel (``rank.kbest_update`` — ONE implementation, so tie
 order matches ``jax.lax.top_k`` everywhere).
 
+VMEM envelope — two statically-selected posting layouts:
+
+* **full-array** (default while the posting arrays fit): both ``[E]``
+  posting arrays map into VMEM each grid step and the binary search runs
+  on the query's ``[plo, phi)`` slice in place.  Cheapest at today's
+  sizes (a constant block the compiler hoists across grid steps), but
+  residency grows with E — ~8 MB at 1e6 nodes.
+* **per-query windows** (``window=True``, auto-selected once
+  ``E > POSTING_WINDOW_EDGES``): each query's posting slice is gathered
+  once XLA-side into a ``[Q, Wpad]`` stack
+  (``Wpad = ceil(max_postings / LANE) * LANE`` — the windowed analogue
+  of ``max_fanout`` bounding bucket scans) and the kernel maps only
+  ``2 x Wpad`` lanes per grid step.  This is what makes the 1e7-node
+  tier fit: residency is bounded by the longest posting list no matter
+  how large E grows.  The gathered stack lives in HBM; the
+  ``ops.rules_with`` wrappers dedup duplicate items before the launch
+  (identical items → bit-identical rows), so skewed traffic pays for U
+  unique windows, not Q.
+
+Both layouts are bit-identical (the tests sweep them); ``max_postings``
+MUST bound every queried slice length in window mode
+(``item_index_arrays`` emits it) — shorter truncates the slice.
+
 The consequent-only role needs no range counting (membership is just
 ``node_item == item``); ``kernels.ops.rules_with`` routes it through the
 posting-ordered columns + ``rank.topk_rank_batch_pallas`` instead (a
 contiguous posting-range scan), keeping this kernel for the roles that
 need the laminar range-count.  Both paths return identical node order for
 overlapping queries (postings are DFS-sorted), which the tests assert.
-
-VMEM envelope: like the fused rule-search kernel's whole-edge-table
-residency (6 arrays x E), the two posting arrays (2 x int32 x E ≈ 8 MB
-at N=1e6) are mapped fully into VMEM each grid step.  A per-query
-posting window (scalar-prefetch block start, the way ``max_fanout``
-bounds bucket scans) would shrink that to 2 x max_postings; tracked as a
-ROADMAP open item for the multi-device scale-up.
 """
 from __future__ import annotations
 
@@ -58,6 +74,11 @@ ROLES = ("consequent", "antecedent", "any")
 
 _BIG = 2**30
 
+# Full-array posting residency above this edge count would crowd VMEM
+# (2 arrays x 4 B x E = 4 MB at this threshold), so the windowed layout
+# takes over.  Static, so the choice is part of the compiled kernel.
+POSTING_WINDOW_EDGES = 512 * 1024
+
 
 def _n_bsearch_steps(max_postings: int) -> int:
     n = max(int(max_postings), 1)
@@ -66,8 +87,13 @@ def _n_bsearch_steps(max_postings: int) -> int:
 
 def _make_member_kernel(
     k: int, kpad: int, metric: str, min_depth: int, role: str,
-    n_steps: int, e_pad: int,
+    n_steps: int, p_width: int, windowed: bool,
 ):
+    """Kernel body factory.  ``p_width`` is the posting operand's lane
+    width: the padded full-array length, or ``Wpad`` when ``windowed``
+    (then the search runs on ``[0, slice_len)`` of the query's window
+    instead of ``[plo, phi)`` of the shared arrays)."""
+
     def kernel(
         params_ref, post_lo_ref, post_hi_ref,
         sup_ref, conf_ref, lift_ref, depth_ref, nitem_ref,
@@ -80,7 +106,7 @@ def _make_member_kernel(
             vals_ref[...] = jnp.full_like(vals_ref[...], -jnp.inf)
             pos_ref[...] = jnp.full_like(pos_ref[...], -1)
 
-        plo = params_ref[0, 0]
+        plo = jnp.int32(0) if windowed else params_ref[0, 0]
         phi = params_ref[0, 1]
         qitem = params_ref[0, 2]
         sup = sup_ref[...][0]
@@ -93,13 +119,14 @@ def _make_member_kernel(
 
         def count_le(arr_ref, x):
             """|{j in [plo, phi) : arr[j] <= x}| for each lane of ``x``,
-            by fixed-step binary search (arr ascending on the slice)."""
+            by fixed-step binary search (arr ascending on the slice,
+            ``_BIG`` beyond it in window mode)."""
             arr = arr_ref[...][0]
             lo = jnp.full((BN,), plo, jnp.int32)
             hi = jnp.full((BN,), phi, jnp.int32)
             for _ in range(n_steps):
                 mid = (lo + hi) // 2
-                midc = jnp.clip(mid, 0, e_pad - 1)
+                midc = jnp.clip(mid, 0, p_width - 1)
                 v = arr[midc]
                 go = (mid < phi) & (v <= x)
                 lo = jnp.where(go, mid + 1, lo)
@@ -128,7 +155,8 @@ def _make_member_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "metric", "min_depth", "role", "max_postings", "interpret",
+        "k", "metric", "min_depth", "role", "max_postings", "window",
+        "interpret",
     ),
 )
 def rules_with_pallas(
@@ -148,6 +176,7 @@ def rules_with_pallas(
     min_depth: int = 1,
     role: str = "any",
     max_postings: int = 0,
+    window: bool | None = None,
     interpret: bool = False,
 ):
     """Top-k (scores, DFS positions) of the rules involving each queried
@@ -158,6 +187,11 @@ def rules_with_pallas(
     ``"any"``.  Rows follow ``jax.lax.top_k`` order with ``(-inf, -1)``
     empty slots.  Absent items are expressed as empty posting slices
     (``plos[q] == phis[q]``) plus an item id no node carries.
+
+    ``window`` selects the posting layout (see module docstring);
+    ``None`` auto-picks: full-array residency while
+    ``E <= POSTING_WINDOW_EDGES``, per-query ``max_postings``-bounded
+    windows beyond.  Both layouts are bit-identical.
     """
     if role not in ROLES:
         raise ValueError(f"role {role!r} not in {ROLES}")
@@ -183,32 +217,59 @@ def rules_with_pallas(
     # -2 never equals a query item (absent queries are sanitized to -1)
     nit = pad_col(node_item, -2, jnp.int32)
 
+    plos = jnp.asarray(plos, jnp.int32)
+    phis = jnp.asarray(phis, jnp.int32)
     e = post_lo.shape[0]
-    e_pad = max(e + (-e % LANE), LANE)
-    # padding past the live postings sorts after every real position
-    plo_arr = jnp.pad(
-        post_lo.astype(jnp.int32), (0, e_pad - e), constant_values=_BIG
-    ).reshape(1, -1)
-    phi_arr = jnp.pad(
-        post_hi.astype(jnp.int32), (0, e_pad - e), constant_values=_BIG
-    ).reshape(1, -1)
+    if window is None:
+        window = e > POSTING_WINDOW_EDGES
 
     params = jnp.zeros((q, LANE), jnp.int32)
-    params = (
-        params.at[:, 0].set(plos.astype(jnp.int32))
-        .at[:, 1].set(phis.astype(jnp.int32))
-        .at[:, 2].set(items.astype(jnp.int32))
-    )
+    if window:
+        # Per-query posting windows [Q, w_pad]: each query's slice
+        # gathered once XLA-side; lanes beyond the slice read _BIG
+        # (sorts after every real DFS position, so the in-window binary
+        # search never crosses it).
+        w_pad = max(int(max_postings) + (-int(max_postings) % LANE), LANE)
+        widx = plos[:, None] + jax.lax.broadcasted_iota(
+            jnp.int32, (q, w_pad), 1
+        )
+        if e == 0:
+            plo_arr = jnp.full((q, w_pad), _BIG, jnp.int32)
+            phi_arr = jnp.full((q, w_pad), _BIG, jnp.int32)
+        else:
+            wvalid = widx < phis[:, None]
+            wsafe = jnp.clip(widx, 0, e - 1)
+            plo_arr = jnp.where(
+                wvalid, post_lo.astype(jnp.int32)[wsafe], _BIG
+            )
+            phi_arr = jnp.where(
+                wvalid, post_hi.astype(jnp.int32)[wsafe], _BIG
+            )
+        p_width = w_pad
+        post_spec = pl.BlockSpec((1, w_pad), lambda qi, i: (qi, 0))
+        params = params.at[:, 1].set(jnp.maximum(phis - plos, 0))
+    else:
+        e_pad = max(e + (-e % LANE), LANE)
+        # padding past the live postings sorts after every real position
+        plo_arr = jnp.pad(
+            post_lo.astype(jnp.int32), (0, e_pad - e), constant_values=_BIG
+        ).reshape(1, -1)
+        phi_arr = jnp.pad(
+            post_hi.astype(jnp.int32), (0, e_pad - e), constant_values=_BIG
+        ).reshape(1, -1)
+        p_width = e_pad
+        post_spec = pl.BlockSpec((1, e_pad), lambda qi, i: (0, 0))
+        params = params.at[:, 0].set(plos).at[:, 1].set(phis)
+    params = params.at[:, 2].set(items.astype(jnp.int32))
 
     nn = sup.shape[1]
     grid = (q, nn // BN)
-    post_spec = pl.BlockSpec((1, e_pad), lambda qi, i: (0, 0))
     col_spec = pl.BlockSpec((1, BN), lambda qi, i: (0, i))
     out_spec = pl.BlockSpec((1, kpad), lambda qi, i: (qi, 0))
     vals, pos = pl.pallas_call(
         _make_member_kernel(
             k, kpad, metric, min_depth, role,
-            _n_bsearch_steps(max_postings), e_pad,
+            _n_bsearch_steps(max_postings), p_width, window,
         ),
         grid=grid,
         in_specs=[

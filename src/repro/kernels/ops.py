@@ -14,7 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.array_trie import DeviceTrie, child_lookup
+from repro.core.array_trie import (
+    DeviceTrie,
+    canonical_prefix_rows,
+    child_lookup,
+    sanitize_query_items,
+)
 
 from .item_index import ROLES, rules_with_pallas
 from .metrics_inkernel import RANK_METRICS, compound_lift, rank_score
@@ -27,6 +32,15 @@ from .trie_reduce import trie_reduce_pallas
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _as_shard_plan(trie):
+    """The ShardPlan when ``trie`` is one, else None (lazy import: the
+    distributed package imports kernel submodules, so importing it at
+    module scope would cycle through ``repro.kernels.__init__``)."""
+    from repro.distributed.trie_sharding import ShardPlan
+
+    return trie if isinstance(trie, ShardPlan) else None
 
 
 # ----------------------------------------------------------------------
@@ -190,12 +204,15 @@ def rule_search(
         }
 
     if edges.get("child_offsets") is not None:
-        return rule_search_fused_pallas(
+        out = rule_search_fused_pallas(
             edges["child_offsets"], edges["edge_item"],
             edges["edge_child"], edges["edge_conf"], edges["edge_sup"],
             edges["edge_lift"], queries, ant_len,
             max_fanout=edges["max_fanout"], interpret=interp,
         )
+        # con_support is kernel plumbing for the sharded merge, not part
+        # of the op-level contract (keeps single/sharded dicts identical)
+        return {k: v for k, v in out.items() if k != "con_support"}
 
     full = rule_search_pallas(
         edges["edge_parent"], edges["edge_item"], edges["edge_child"],
@@ -395,18 +412,36 @@ def item_rank_arrays(trie) -> Dict[str, jax.Array]:
     }
 
 
+def _pad_pow2_rows(plos, phis, qitems, axis: int = 0) -> tuple:
+    """Pad deduped query rows up to the next power of two with
+    absent-item queries (empty slice [0, 0), item id -1) so kernel
+    launch shapes stay bucketed (at most log2(Q) compiled variants)."""
+    u = qitems.shape[0]
+    u_pad = 1 << max(u - 1, 0).bit_length()
+    if u_pad == u:
+        return plos, phis, qitems
+    pad = u_pad - u
+    widths = [(0, 0)] * plos.ndim
+    widths[axis] = (0, pad)
+    return (
+        np.pad(plos, widths),
+        np.pad(phis, widths),
+        np.pad(qitems, (0, pad), constant_values=-1),
+    )
+
+
 def _posting_slices(offsets: np.ndarray, items) -> tuple:
     """Per-query posting slice [plo, phi) + sanitized item ids.
 
     Items outside ``[0, I)`` (absent from the universe) get the empty
-    slice and item id -1 (matched by no node)."""
-    items = np.asarray(list(items), np.int64).reshape(-1)
-    n_items = offsets.shape[0] - 1
-    valid = (items >= 0) & (items < n_items)
-    safe = np.clip(items, 0, max(n_items - 1, 0))
+    slice and item id -1 (matched by no node) — the sanitize step is
+    ``array_trie.sanitize_query_items``, shared with the sharded
+    resolver."""
+    valid, safe, qitems = sanitize_query_items(
+        items, offsets.shape[0] - 1
+    )
     plos = np.where(valid, offsets[safe], 0).astype(np.int32)
     phis = np.where(valid, offsets[safe + 1], 0).astype(np.int32)
-    qitems = np.where(valid, items, -1).astype(np.int32)
     return plos, phis, qitems
 
 
@@ -434,7 +469,26 @@ def rules_with(
     role, DFS position otherwise); ``node`` is always the node id.
     Absent items, duplicate items, and k beyond the match count are all
     well-defined (empty slices / repeated rows / ``(-inf, -1)`` tails).
+
+    ``trie`` may also be a ``distributed.trie_sharding.ShardPlan`` — the
+    query then runs shard_map-distributed over the plan's mesh (each
+    device answering over its co-partitioned posting lists, k-best
+    all-gather + rank-merge), bit-identical to this single-device form.
     """
+    plan = _as_shard_plan(trie)
+    if plan is not None:
+        if arrays is not None or not use_kernel:
+            raise ValueError(
+                "sharded rules_with supports neither arrays= (the plan "
+                "already owns its device residency) nor use_kernel=False "
+                "(the jnp oracle is single-device only)"
+            )
+        from repro.distributed.trie_sharding import sharded_rules_with
+
+        return sharded_rules_with(
+            plan, items, role=role, k=k, metric=metric,
+            min_depth=min_depth,
+        )
     if role not in ROLES:
         raise ValueError(f"role {role!r} not in {ROLES}")
     if metric not in RANK_METRICS:
@@ -442,6 +496,23 @@ def rules_with(
     if arrays is None:
         arrays = item_rank_arrays(trie)
     plos, phis, qitems = _posting_slices(arrays["item_offsets"], items)
+    # Duplicate-item dedup: identical (sanitized) items produce
+    # bit-identical result rows, and the membership kernel materializes a
+    # [Q, ~max_postings] posting window per query — running the launch
+    # over the U unique items bounds that at [U, ...] and cuts compute on
+    # skewed traffic; rows expand back via the inverse map afterwards.
+    # (Every absent item sanitizes to -1, so they dedup together too.)
+    # U pads up to a power of two so a serving stream of fixed-Q batches
+    # with varying duplicate multiplicity hits a bounded set of compiled
+    # launch shapes instead of one trace per distinct unique-count; the
+    # pad rows are absent-item queries (empty slice, item -1) that no
+    # inverse-map entry ever reads.
+    _, first, inv = np.unique(
+        qitems, return_index=True, return_inverse=True
+    )
+    plos, phis, qitems = _pad_pow2_rows(
+        plos[first], phis[first], qitems[first]
+    )
     plos_j = jnp.asarray(plos)
     phis_j = jnp.asarray(phis)
     if role == "consequent":
@@ -471,6 +542,9 @@ def rules_with(
                if use_kernel else {}),
         )
         back = arrays["dfs_to_node"]
+    inv_j = jnp.asarray(inv, jnp.int32)
+    vals = vals[inv_j]
+    pos = pos[inv_j]
     if back.shape[0] == 0:
         node = jnp.full_like(pos, -1)
     else:
@@ -496,31 +570,15 @@ def prefix_ranges(
     (the repo-wide query-matrix convention) and are dropped per row; in
     ragged sequences every element is a literal item, so a negative id
     there reads as "not in the trie" (empty range), exactly like any
-    other absent item.
+    other absent item.  (Normalization itself lives in
+    ``array_trie.canonical_prefix_rows``, shared with the host descent
+    the sharded engine resolves prefixes through.)
 
     Returns ``(los int32[Q], his int32[Q], nodes int32[Q])``.
     """
-    item_rank = getattr(trie, "item_rank", None)
-    as_matrix = isinstance(prefixes, np.ndarray) and prefixes.ndim == 2
-    rows = []
-    for p in prefixes:
-        if as_matrix:
-            its = [int(it) for it in np.asarray(p).reshape(-1) if it != -1]
-        else:
-            # ragged input: -1 is a literal (absent) item, not padding;
-            # remap it off the padding sentinel so the descent keeps it
-            its = [
-                int(it) if int(it) != -1 else -9
-                for it in np.asarray(p).reshape(-1)
-            ]
-        if item_rank is not None:
-            nr = int(np.asarray(item_rank).shape[0])
-            its.sort(
-                key=lambda it: (
-                    int(item_rank[it]) if 0 <= it < nr else 1 << 30, it
-                )
-            )
-        rows.append(its)
+    rows = canonical_prefix_rows(
+        prefixes, getattr(trie, "item_rank", None)
+    )
     q = len(rows)
     width = max((len(r) for r in rows), default=0)
     mat = np.full((q, max(width, 1)), -1, np.int32)
@@ -564,7 +622,27 @@ def top_k_rules_batch(
 
     Returns ``{"values" f32[Q, k], "node" int32[Q, k],
     "dfs_pos" int32[Q, k]}``.
+
+    ``trie`` may also be a ``distributed.trie_sharding.ShardPlan`` — the
+    Q rankings then run shard_map-distributed (host-side prefix descent,
+    per-device range-clipped kernels, k-best all-gather + rank-merge),
+    bit-identical to this single-device form.
     """
+    plan = _as_shard_plan(trie)
+    if plan is not None:
+        if arrays is not None or not use_kernel:
+            raise ValueError(
+                "sharded top_k_rules_batch supports neither arrays= (the "
+                "plan already owns its device residency) nor "
+                "use_kernel=False (the jnp oracle is single-device only)"
+            )
+        from repro.distributed.trie_sharding import (
+            sharded_top_k_rules_batch,
+        )
+
+        return sharded_top_k_rules_batch(
+            plan, prefixes, k, metric=metric, min_depth=min_depth,
+        )
     if metric not in RANK_METRICS:
         raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
     if arrays is None:
@@ -609,7 +687,25 @@ def rule_search_batch(
     Either way the whole batch descends in one ``pallas_call`` (the PR-1
     CSR fused kernel), replacing Q separate single-query launches.
     Bit-identical per row to looping ``rule_search`` over the queries.
+
+    ``trie`` may also be a ``distributed.trie_sharding.ShardPlan`` — the
+    batch then descends shard_map-distributed (each device's fused kernel
+    over its local subforest, found-winner merge + global compound-lift
+    re-assembly), bit-identical to this single-device form.
     """
+    plan = _as_shard_plan(trie)
+    if plan is not None:
+        if edges is not None:
+            raise ValueError(
+                "sharded rule_search_batch ignores precomputed edges= — "
+                "the plan already owns its (relabeled, sharded) edge "
+                "residency; drop the argument"
+            )
+        from repro.distributed.trie_sharding import (
+            sharded_rule_search_batch,
+        )
+
+        return sharded_rule_search_batch(plan, queries, ant_len)
     if ant_len is None:
         canonicalize = getattr(trie, "canonicalize_queries", None)
         if canonicalize is None:

@@ -52,11 +52,18 @@ def _iota(n: int) -> jax.Array:
     return jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
 
 
-def _rank_merge(av, ap, tv, tp, kpad: int):
+def rank_merge(av, ap, tv, tp, kpad: int):
     """Merge two internally-sorted (value desc, pos asc) kpad-lists into
     the top-kpad of their union via rank scatter (one comparison matrix
     each way; ranks over the union are a permutation, so every output slot
-    is hit by exactly one element)."""
+    is hit by exactly one element).
+
+    Pure ``jnp`` with no refs, so it runs both inside a Pallas kernel body
+    (``kbest_update``) and as a plain array op — the sharded query engine
+    (``repro.distributed.trie_sharding``) folds per-device k-best lists
+    through it after the all-gather, which is what keeps the multi-device
+    merge bit-identical (tie order included) to the single-device kernels.
+    Live positions must be distinct between the two lists."""
     lane = _iota(kpad)
     # -inf padding entries get unique, largest tie keys so the order stays
     # strictly total (live positions are distinct by construction: the
@@ -126,7 +133,7 @@ def kbest_update(vals_ref, pos_ref, score, pos, k: int, kpad: int):
                 jnp.full((kpad,), -1, jnp.int32),
             ),
         )
-        nv, np_ = _rank_merge(
+        nv, np_ = rank_merge(
             vals_ref[...][0], pos_ref[...][0], tv, tp, kpad
         )
         vals_ref[...] = nv[None, :]

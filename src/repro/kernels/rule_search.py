@@ -18,7 +18,9 @@ nodes (buckets wider than one BF tile — typically just the root) are
 handled by a chunked sweep over their window (the ``n_fan_chunks`` loop).
 The consequent-only walk needed for compound lift (paper Eq. 1-4) runs
 fused inside the SAME kernel body, so a full-metric ``rule_search`` is one
-``pallas_call`` launch returning found/node/support/confidence/lift.
+``pallas_call`` launch returning found/node/support/confidence/lift plus
+the consequent-path Support (``con_support`` — the sharded engine merges
+it across devices before re-assembling compound lift globally).
 
 ``rule_search_pallas`` — the seed full-sweep kernel, kept as the benchmark
 baseline and as the fallback when no CSR offsets are available.  It
@@ -206,7 +208,7 @@ def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
     def kernel(
         q_ref, al_ref,
         co_ref, ei_ref, ec_ref, econf_ref, esup_ref, elift_ref,
-        node_ref, ok_ref, conf_ref, sup_ref, lift_ref,
+        node_ref, ok_ref, conf_ref, sup_ref, lift_ref, csup_ref,
     ):
         bq = q_ref.shape[0]
         qs = q_ref[...]
@@ -296,6 +298,11 @@ def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
         lift_ref[...] = compound_lift(
             found, single, nlift, conf, con_sup
         )[:, None]
+        # Consequent-path Support as its own output: the sharded engine
+        # merges it across devices (the consequent path may live on a
+        # DIFFERENT shard than the main path) before re-running the same
+        # compound_lift select globally.
+        csup_ref[...] = con_sup[:, None]
 
     return kernel
 
@@ -320,7 +327,9 @@ def rule_search_fused_pallas(
     q, width = queries.shape
     e = edge_item.shape[0]
     if e == 0 or width == 0:
-        return _all_not_found(q, "lift")
+        out = _all_not_found(q, "lift")
+        out["con_support"] = jnp.zeros((q,), jnp.float32)
+        return out
 
     fan = max(int(max_fanout), 1)
     n_fan_chunks = -(-fan // BF)
@@ -353,7 +362,7 @@ def rule_search_fused_pallas(
     co_spec = pl.BlockSpec((1, co_pad), lambda qi: (0, 0))
     edge_spec = pl.BlockSpec((1, e_pad), lambda qi: (0, 0))
     out_specs = [
-        pl.BlockSpec((BQ, 1), lambda qi: (qi, 0)) for _ in range(5)
+        pl.BlockSpec((BQ, 1), lambda qi: (qi, 0)) for _ in range(6)
     ]
     out_shapes = [
         jax.ShapeDtypeStruct((qq, 1), jnp.int32),
@@ -361,8 +370,9 @@ def rule_search_fused_pallas(
         jax.ShapeDtypeStruct((qq, 1), jnp.float32),
         jax.ShapeDtypeStruct((qq, 1), jnp.float32),
         jax.ShapeDtypeStruct((qq, 1), jnp.float32),
+        jax.ShapeDtypeStruct((qq, 1), jnp.float32),
     ]
-    node, okv, conf, sup, lift = pl.pallas_call(
+    node, okv, conf, sup, lift, csup = pl.pallas_call(
         _make_fused_kernel(width, n_fan_chunks, e_pad),
         grid=grid,
         in_specs=[
@@ -381,4 +391,7 @@ def rule_search_fused_pallas(
         "confidence": conf[:q, 0],
         "support": sup[:q, 0],
         "lift": lift[:q, 0],
+        # Support of the consequent-only root walk (0 where that path is
+        # absent) — consumed by the sharded cross-device lift merge.
+        "con_support": csup[:q, 0],
     }

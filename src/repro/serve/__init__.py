@@ -1,4 +1,11 @@
-"""Serving substrate: prefill/decode steps + trie-backed speculation."""
+"""Serving substrate: prefill/decode steps, trie-backed speculation, and
+the trie query engine (replicated vs sharded routing)."""
 from .engine import make_decode_step, make_prefill_step
+from .trie_engine import TrieQueryEngine, make_trie_engine
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = [
+    "make_decode_step",
+    "make_prefill_step",
+    "TrieQueryEngine",
+    "make_trie_engine",
+]

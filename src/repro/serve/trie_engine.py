@@ -1,0 +1,150 @@
+"""Trie query serving: one front door over the replicated and sharded
+engines.
+
+``TrieQueryEngine`` owns a frozen trie's device residency and routes the
+three batched query ops (``rule_search_batch`` / ``top_k_rules_batch`` /
+``rules_with``) to one of two bit-identical backends:
+
+* ``"replicated"`` — the whole trie on one device (a ``DeviceTrie`` plus
+  the memoized gather dicts), queries run as single-device one-launch
+  kernels.  Right for small tries and single-device hosts: no collective
+  latency, no partitioning work.
+* ``"sharded"`` — the trie partitioned into contiguous DFS subtree
+  ranges across the ``("data",)`` mesh
+  (``distributed.trie_sharding.shard_device_trie``), queries run under
+  ``shard_map`` with k-best/found-winner merges.  Right when the trie
+  outgrows one device's memory or its tile sweep dominates latency —
+  each device scans ``~N/P`` nodes per ranked query.
+
+``mode="auto"`` picks sharded exactly when there is more than one device
+to shard over AND the trie clears ``shard_threshold_nodes`` (default
+64Ki nodes — below that the per-launch tile sweep is a handful of tiles
+and the all-gather merge would dominate).  Both backends answer through
+the SAME ``kernels.ops`` entry points and are bit-identical (tie order
+included), so routing is purely a performance decision.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+
+from repro.core.array_trie import FrozenTrie
+from repro.kernels import ops as trie_ops
+
+DEFAULT_SHARD_THRESHOLD = 1 << 16   # nodes
+
+
+class TrieQueryEngine:
+    """Serving front door for one frozen Trie of Rules."""
+
+    def __init__(
+        self,
+        frozen: FrozenTrie,
+        mesh=None,
+        mode: str = "auto",
+        shard_threshold_nodes: int = DEFAULT_SHARD_THRESHOLD,
+    ):
+        if mode not in ("auto", "replicated", "sharded"):
+            raise ValueError(
+                f"mode {mode!r} not in ('auto', 'replicated', 'sharded')"
+            )
+        self.frozen = frozen
+        self.plan = None
+        self._dt = None
+        self._edges = None
+        self._dfs_arrays = None
+        self._item_arrays = None
+        if mode != "replicated" and mesh is None and jax.device_count() > 1:
+            from repro.launch.mesh import make_trie_mesh
+
+            mesh = make_trie_mesh()
+        n_dev = int(mesh.shape["data"]) if mesh is not None else 1
+        sharded = mode == "sharded" or (
+            mode == "auto"
+            and n_dev > 1
+            and frozen.n_nodes >= shard_threshold_nodes
+        )
+        if sharded:
+            if mesh is None:
+                from repro.launch.mesh import make_trie_mesh
+
+                mesh = make_trie_mesh()
+            from repro.distributed.trie_sharding import shard_device_trie
+
+            self.plan = shard_device_trie(frozen, mesh)
+        self.mesh = mesh
+
+    # ------------------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return "sharded" if self.plan is not None else "replicated"
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards if self.plan is not None else 1
+
+    def _device_trie(self):
+        if self._dt is None:
+            self._dt = self.frozen.device_arrays()
+        return self._dt
+
+    # ------------------------------------------------------------------
+    # the three batched ops (thin routing over kernels.ops)
+    # ------------------------------------------------------------------
+    def rule_search_batch(self, queries, ant_len=None) -> Dict:
+        if self.plan is not None:
+            return trie_ops.rule_search_batch(self.plan, queries, ant_len)
+        if self._edges is None:
+            self._edges = trie_ops.edge_metric_arrays(self._device_trie())
+        # the FrozenTrie keeps ragged-pair canonicalization host-side
+        return trie_ops.rule_search_batch(
+            self.frozen, queries, ant_len, edges=self._edges
+        )
+
+    def top_k_rules_batch(
+        self, prefixes, k: int, metric: str = "confidence",
+        min_depth: int = 1,
+    ) -> Dict:
+        if self.plan is not None:
+            return trie_ops.top_k_rules_batch(
+                self.plan, prefixes, k, metric=metric, min_depth=min_depth
+            )
+        if self._dfs_arrays is None:
+            self._dfs_arrays = trie_ops.dfs_rank_arrays(self._device_trie())
+            self._dfs_arrays["_device_trie"] = self._device_trie()
+        return trie_ops.top_k_rules_batch(
+            self.frozen, prefixes, k, metric=metric, min_depth=min_depth,
+            arrays=self._dfs_arrays,
+        )
+
+    def rules_with(
+        self, items: Sequence[int], role: str = "any", k: int = 10,
+        metric: str = "confidence", min_depth: int = 1,
+    ) -> Dict:
+        if self.plan is not None:
+            return trie_ops.rules_with(
+                self.plan, items, role=role, k=k, metric=metric,
+                min_depth=min_depth,
+            )
+        if self._item_arrays is None:
+            self._item_arrays = trie_ops.item_rank_arrays(
+                self._device_trie()
+            )
+        return trie_ops.rules_with(
+            self.frozen, items, role=role, k=k, metric=metric,
+            min_depth=min_depth, arrays=self._item_arrays,
+        )
+
+
+def make_trie_engine(
+    frozen: FrozenTrie,
+    mesh=None,
+    mode: str = "auto",
+    shard_threshold_nodes: int = DEFAULT_SHARD_THRESHOLD,
+) -> TrieQueryEngine:
+    """Factory alias (mirrors the ``make_*_step`` serving constructors)."""
+    return TrieQueryEngine(
+        frozen, mesh=mesh, mode=mode,
+        shard_threshold_nodes=shard_threshold_nodes,
+    )

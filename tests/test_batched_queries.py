@@ -238,22 +238,28 @@ def test_rules_with_pallas_matches_ref_on_synthetic():
     items_j = jnp.asarray(items, jnp.int32)
     for role in ROLES:
         for k in (10, 100):
-            kv, kp = rules_with_pallas(
-                sup, conf, lif, dep, nit, post_lo, post_hi,
-                plos, phis, items_j,
-                k=k, metric="support", role=role,
-                max_postings=arrs["max_postings"], interpret=True,
-            )
-            rv, rp = rules_with_ref(
-                sup, conf, lif, dep, nit, post_lo, post_hi,
-                plos, phis, items_j, k=k, metric="support", role=role,
-            )
-            np.testing.assert_array_equal(
-                np.asarray(kv), np.asarray(rv), err_msg=f"{role} k={k}"
-            )
-            np.testing.assert_array_equal(
-                np.asarray(kp), np.asarray(rp), err_msg=f"{role} k={k}"
-            )
+            # both posting layouts (full-array residency AND the
+            # max_postings-bounded per-query windows) against the ref
+            for window in (False, True):
+                kv, kp = rules_with_pallas(
+                    sup, conf, lif, dep, nit, post_lo, post_hi,
+                    plos, phis, items_j,
+                    k=k, metric="support", role=role,
+                    max_postings=arrs["max_postings"], window=window,
+                    interpret=True,
+                )
+                rv, rp = rules_with_ref(
+                    sup, conf, lif, dep, nit, post_lo, post_hi,
+                    plos, phis, items_j, k=k, metric="support", role=role,
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(kv), np.asarray(rv),
+                    err_msg=f"{role} k={k} window={window}",
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(kp), np.asarray(rp),
+                    err_msg=f"{role} k={k} window={window}",
+                )
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,384 @@
+"""Sharded multi-device trie: partition invariants + bit-parity of the
+shard_map query engine against the single-device ops.
+
+The parity lanes run at every P in {1, 2, 8} that the visible device
+count allows: under plain CPU (1 device) only P=1 executes, and the
+multi-device tier (``make test-multidevice`` /  the CI job) re-runs the
+whole module under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+so every P is exercised.  Bit-parity is asserted with
+``assert_array_equal`` — tie order included — on irregular tries, uneven
+partitions, empty shards, absent items/prefixes, and the mined paper DB.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.array_trie import FrozenTrie
+from repro.core.synthetic import (
+    device_trie_from_arrays,
+    frozen_from_arrays,
+    mixed_queries,
+    random_csr_trie,
+    synthetic_csr_trie,
+)
+from repro.distributed.trie_sharding import (
+    host_prefix_ranges,
+    merge_kbest,
+    plan_shard_bounds,
+    shard_device_trie,
+    shard_dfs_ranges,
+)
+from repro.kernels import ops
+from repro.launch.mesh import make_trie_mesh
+
+SHARD_COUNTS = (1, 2, 8)
+
+
+def needs_devices(p):
+    return pytest.mark.skipif(
+        jax.device_count() < p,
+        reason=f"needs {p} devices (run under XLA_FLAGS="
+               f"--xla_force_host_platform_device_count=8)",
+    )
+
+
+def _plan(fz, p):
+    return shard_device_trie(fz, make_trie_mesh(p))
+
+
+@pytest.fixture(scope="module")
+def small_random():
+    rng = np.random.RandomState(7)
+    arrs = random_csr_trie(rng, 160, 10)
+    return arrs, frozen_from_arrays(arrs), device_trie_from_arrays(arrs)
+
+
+@pytest.fixture(scope="module")
+def synthetic_mid():
+    arrs = synthetic_csr_trie(4_096)
+    return arrs, frozen_from_arrays(arrs), device_trie_from_arrays(arrs)
+
+
+# ----------------------------------------------------------------------
+# partitioning invariants (host-side, device-count independent)
+# ----------------------------------------------------------------------
+class TestPartitioning:
+    def test_bounds_cover_and_are_contiguous(self):
+        rng = np.random.RandomState(0)
+        for _ in range(20):
+            m = rng.randint(0, 12)
+            sizes = rng.randint(1, 50, size=m)
+            p = rng.randint(1, 9)
+            bounds = plan_shard_bounds(sizes, p)
+            assert len(bounds) == p
+            assert bounds[0][0] == 0 and bounds[-1][1] == m
+            for (_, b), (c, _) in zip(bounds, bounds[1:]):
+                assert b == c
+
+    def test_ranges_tile_dfs_space_at_subtree_cuts(self, small_random):
+        _, fz, _ = small_random
+        _kids, los, _sizes = fz.depth1_subtrees()
+        cut_points = {0, fz.n_nodes} | set(
+            int(lo) for lo in los
+        )
+        for p in (1, 2, 3, 8, 16):
+            ranges = shard_dfs_ranges(fz, p)
+            assert ranges[0][0] == 0
+            assert ranges[-1][1] == fz.n_nodes
+            for (_, b), (c, _) in zip(ranges, ranges[1:]):
+                assert b == c
+            for lo, hi in ranges:
+                assert lo <= hi
+                # every cut lands on a depth-1 subtree boundary
+                assert lo in cut_points or lo == 1  # shard 1 starts past root
+                assert hi in cut_points
+
+    def test_depth1_metadata_matches_pointer_oracle(self, mined):
+        res = mined(0.25, engine="pointer")
+        fz = FrozenTrie.freeze(res.trie)
+        kids, los, sizes = fz.depth1_subtrees()
+        oracle = res.trie.depth1_subtree_sizes()
+        assert [int(fz.node_item[k]) for k in kids] == [
+            it for it, _ in oracle
+        ]
+        assert list(sizes) == [sz for _, sz in oracle]
+        # subtree ranges tile [1, N)
+        assert int(los[0]) == 1 if len(los) else True
+        assert int(sizes.sum()) == fz.n_nodes - 1
+
+    def test_empty_trie_ranges(self, empty_frozen):
+        ranges = shard_dfs_ranges(empty_frozen, 4)
+        assert ranges[0] == (0, 1)
+        assert all(r == (1, 1) for r in ranges[1:])
+
+    def test_balance_on_regular_trie(self):
+        fz = frozen_from_arrays(synthetic_csr_trie(10_000))
+        ranges = shard_dfs_ranges(fz, 8)
+        loads = [hi - lo for lo, hi in ranges]
+        assert max(loads) <= 1.5 * fz.n_nodes / 8
+
+    def test_host_prefix_ranges_matches_device_descent(self, small_random):
+        _, fz, dt = small_random
+        prefixes = [(), (0,), (1, 2), (99,), (-1,), (3, 3)]
+        hlos, hhis, hnodes = host_prefix_ranges(fz, prefixes)
+        dlos, dhis, dnodes = ops.prefix_ranges(fz, prefixes, dt=dt)
+        np.testing.assert_array_equal(hlos, np.asarray(dlos))
+        np.testing.assert_array_equal(hhis, np.asarray(dhis))
+        np.testing.assert_array_equal(hnodes, np.asarray(dnodes))
+
+
+# ----------------------------------------------------------------------
+# merge machinery
+# ----------------------------------------------------------------------
+class TestMergeKBest:
+    def test_matches_topk_on_random_lists(self):
+        rng = np.random.RandomState(1)
+        p, q, k = 4, 3, 6
+        # per-device (value desc, pos asc)-sorted lists; heavy ties (3
+        # distinct values), positions distinct across devices
+        vals = np.full((p, q, k), -np.inf, np.float32)
+        pos = np.full((p, q, k), -1, np.int32)
+        for d in range(p):
+            for qi in range(q):
+                n_live = rng.randint(0, k + 1)
+                v = rng.choice([0.25, 0.5, 0.75], size=n_live).astype(
+                    np.float32
+                )
+                x = d * 100 + rng.choice(100, size=n_live, replace=False)
+                order = np.lexsort((x, -v))
+                vals[d, qi, :n_live] = v[order]
+                pos[d, qi, :n_live] = x[order]
+        mv, mp = merge_kbest(jnp.asarray(vals), jnp.asarray(pos), k)
+        # oracle: flatten, lax.top_k over (value, -pos) ordering
+        for qi in range(q):
+            flat_v = vals[:, qi, :].reshape(-1)
+            flat_p = pos[:, qi, :].reshape(-1)
+            order = np.lexsort((flat_p, -flat_v))
+            live = flat_v[order] > -np.inf
+            exp_v = np.full((k,), -np.inf, np.float32)
+            exp_p = np.full((k,), -1, np.int32)
+            take = min(k, int(live.sum()))
+            exp_v[:take] = flat_v[order][:take]
+            exp_p[:take] = flat_p[order][:take]
+            np.testing.assert_array_equal(np.asarray(mv)[qi], exp_v)
+            np.testing.assert_array_equal(np.asarray(mp)[qi], exp_p)
+
+
+# ----------------------------------------------------------------------
+# sharded == single-device bit-parity, every op, P in {1, 2, 8}
+# ----------------------------------------------------------------------
+def _assert_dicts_equal(a, b, keys, msg):
+    for key in keys:
+        np.testing.assert_array_equal(
+            np.asarray(a[key]), np.asarray(b[key]),
+            err_msg=f"{msg}:{key}",
+        )
+
+
+@pytest.mark.parametrize(
+    "p", [pytest.param(p, marks=needs_devices(p)) for p in SHARD_COUNTS]
+)
+class TestShardedParity:
+    def test_top_k_rules_batch(self, small_random, p):
+        _, fz, dt = small_random
+        plan = _plan(fz, p)
+        prefixes = [(), (0,), (2, 1), (9,), (99,), (-1,), (0, 0)]
+        for metric in ("confidence", "lift", "conviction"):
+            sh = ops.top_k_rules_batch(plan, prefixes, 6, metric=metric)
+            sd = ops.top_k_rules_batch(dt, prefixes, 6, metric=metric)
+            or_ = ops.top_k_rules_batch(
+                dt, prefixes, 6, metric=metric, use_kernel=False
+            )
+            _assert_dicts_equal(
+                sh, sd, ("values", "node", "dfs_pos"),
+                f"P={p} kernel {metric}",
+            )
+            _assert_dicts_equal(
+                sh, or_, ("values", "node", "dfs_pos"),
+                f"P={p} oracle {metric}",
+            )
+
+    def test_rules_with_all_roles(self, small_random, p):
+        _, fz, dt = small_random
+        plan = _plan(fz, p)
+        # duplicates, absent (too big / negative), and live items
+        items = [0, 4, 4, 9, 77, -3, 1]
+        for role in ("consequent", "antecedent", "any"):
+            for metric in ("confidence", "leverage"):
+                sh = ops.rules_with(
+                    plan, items, role=role, k=5, metric=metric
+                )
+                sd = ops.rules_with(
+                    dt, items, role=role, k=5, metric=metric
+                )
+                _assert_dicts_equal(
+                    sh, sd, ("values", "node", "pos"),
+                    f"P={p} {role} {metric}",
+                )
+
+    def test_rules_with_k_exceeds_matches(self, small_random, p):
+        _, fz, dt = small_random
+        plan = _plan(fz, p)
+        sh = ops.rules_with(plan, [0, 99], role="any", k=400)
+        sd = ops.rules_with(dt, [0, 99], role="any", k=400)
+        _assert_dicts_equal(
+            sh, sd, ("values", "node", "pos"), f"P={p} k>matches"
+        )
+
+    def test_rule_search_batch(self, small_random, p):
+        arrs, fz, dt = small_random
+        plan = _plan(fz, p)
+        rng = np.random.RandomState(11)
+        q, al = mixed_queries(rng, arrs, 64, 6)
+        sh = ops.rule_search_batch(plan, q, al)
+        sd = ops.rule_search_batch(dt, jnp.asarray(q), jnp.asarray(al))
+        _assert_dicts_equal(
+            sh, sd, ("found", "node", "support", "confidence", "lift"),
+            f"P={p} search",
+        )
+
+    def test_rule_search_ragged_pairs_compound_consequents(
+        self, small_random, p
+    ):
+        """Compound consequents whose consequent path lives in a
+        DIFFERENT depth-1 subtree than the main path — the cross-shard
+        lift merge lane."""
+        arrs, fz, dt = small_random
+        plan = _plan(fz, p)
+        paths = []
+        for nid in range(1, arrs["node_item"].shape[0]):
+            path, n = [], nid
+            while n > 0:
+                path.append(int(arrs["node_item"][n]))
+                n = int(arrs["node_parent"][n])
+            paths.append(path[::-1])
+        deep = [tuple(pth) for pth in paths if len(pth) >= 3][:8]
+        pairs = [(pth[:1], pth[1:]) for pth in deep]
+        # plus consequent-only rules rooted elsewhere (cons path exists,
+        # main path may not)
+        pairs += [((pth[-1],), pth[:2]) for pth in deep]
+        sh = ops.rule_search_batch(plan, pairs)
+        sd = ops.rule_search_batch(fz, pairs)
+        _assert_dicts_equal(
+            sh, sd, ("found", "node", "support", "confidence", "lift"),
+            f"P={p} compound",
+        )
+
+    def test_uneven_and_empty_shards(self, p):
+        """A chain-heavy trie: few depth-1 subtrees, so high P leaves
+        shards empty and the partition is necessarily uneven."""
+        rng = np.random.RandomState(5)
+        arrs = random_csr_trie(rng, 60, 3, max_children=2)
+        fz = frozen_from_arrays(arrs)
+        dt = device_trie_from_arrays(arrs)
+        plan = _plan(fz, p)
+        if p == 8:
+            kids, _, _ = fz.depth1_subtrees()
+            if len(kids) < 8:
+                loads = [hi - lo for lo, hi in plan.ranges]
+                assert loads.count(0) >= 8 - len(kids) - 1
+        sh = ops.rules_with(plan, [0, 1, 2], role="any", k=8)
+        sd = ops.rules_with(dt, [0, 1, 2], role="any", k=8)
+        _assert_dicts_equal(
+            sh, sd, ("values", "node", "pos"), f"P={p} chain"
+        )
+        shk = ops.top_k_rules_batch(plan, [(), (0,)], 5)
+        sdk = ops.top_k_rules_batch(dt, [(), (0,)], 5)
+        _assert_dicts_equal(
+            shk, sdk, ("values", "node", "dfs_pos"), f"P={p} chain topk"
+        )
+
+    def test_mined_paper_db(self, mined, p):
+        """End-to-end on a REAL mined trie (both construction engines'
+        shared FrozenTrie), not just synthetic fixtures."""
+        res = mined(0.2, engine="pointer")
+        fz = FrozenTrie.freeze(res.trie)
+        dt = fz.device_arrays()
+        plan = _plan(fz, p)
+        items = [int(it) for it in fz.item_order[:3]] + [999]
+        sh = ops.rules_with(plan, items, role="antecedent", k=4)
+        sd = ops.rules_with(dt, items, role="antecedent", k=4)
+        _assert_dicts_equal(
+            sh, sd, ("values", "node", "pos"), f"P={p} mined"
+        )
+        prefixes = [(), (int(fz.item_order[0]),)]
+        shk = ops.top_k_rules_batch(plan, prefixes, 5, metric="lift")
+        sdk = ops.top_k_rules_batch(dt, prefixes, 5, metric="lift")
+        _assert_dicts_equal(
+            shk, sdk, ("values", "node", "dfs_pos"), f"P={p} mined topk"
+        )
+
+    def test_q_zero(self, small_random, p):
+        _, fz, _ = small_random
+        plan = _plan(fz, p)
+        out = ops.rules_with(plan, [], role="any", k=3)
+        assert np.asarray(out["values"]).shape == (0, 3)
+        out = ops.top_k_rules_batch(plan, [], 3)
+        assert np.asarray(out["values"]).shape == (0, 3)
+        out = ops.rule_search_batch(plan, [])
+        assert np.asarray(out["found"]).shape == (0,)
+
+    def test_empty_trie(self, empty_frozen, p):
+        plan = _plan(empty_frozen, p)
+        out = ops.rule_search_batch(plan, [((0,), (1,))])
+        assert not bool(np.asarray(out["found"])[0])
+        outk = ops.top_k_rules_batch(plan, [()], 4)
+        assert (np.asarray(outk["node"]) == -1).all()
+
+
+# ----------------------------------------------------------------------
+# serving front door
+# ----------------------------------------------------------------------
+class TestTrieQueryEngine:
+    def test_auto_routes_small_to_replicated(self, small_random):
+        from repro.serve.trie_engine import TrieQueryEngine
+
+        _, fz, _ = small_random
+        eng = TrieQueryEngine(fz)
+        assert eng.backend == "replicated"
+        out = eng.rules_with([0, 1], role="any", k=3)
+        assert np.asarray(out["values"]).shape == (2, 3)
+
+    def test_forced_modes_agree(self, synthetic_mid):
+        from repro.serve.trie_engine import TrieQueryEngine
+
+        _, fz, _ = synthetic_mid
+        rep = TrieQueryEngine(fz, mode="replicated")
+        sh = TrieQueryEngine(fz, mode="sharded")
+        assert rep.backend == "replicated"
+        assert sh.backend == "sharded"
+        assert sh.n_shards == jax.device_count()
+        items = [0, 17, 300]
+        _assert_dicts_equal(
+            sh.rules_with(items, k=4), rep.rules_with(items, k=4),
+            ("values", "node", "pos"), "engine rules_with",
+        )
+        prefixes = [(0,), (1, 2), ()]
+        _assert_dicts_equal(
+            sh.top_k_rules_batch(prefixes, 5),
+            rep.top_k_rules_batch(prefixes, 5),
+            ("values", "node", "dfs_pos"), "engine topk",
+        )
+        pairs = [((0,), (1,)), ((5,), (0, 2))]
+        _assert_dicts_equal(
+            sh.rule_search_batch(pairs), rep.rule_search_batch(pairs),
+            ("found", "node", "support", "confidence", "lift"),
+            "engine search",
+        )
+
+    def test_auto_shards_large_trie_with_devices(self):
+        from repro.serve.trie_engine import TrieQueryEngine
+
+        fz = frozen_from_arrays(synthetic_csr_trie(70_000))
+        eng = TrieQueryEngine(fz)
+        expected = "sharded" if jax.device_count() > 1 else "replicated"
+        assert eng.backend == expected
+
+    def test_bad_mode_rejected(self, small_random):
+        from repro.serve.trie_engine import TrieQueryEngine
+
+        _, fz, _ = small_random
+        with pytest.raises(ValueError):
+            TrieQueryEngine(fz, mode="nope")
