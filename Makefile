@@ -3,7 +3,7 @@ export PYTHONPATH := src
 
 .PHONY: test test-fast test-slow test-multidevice lint bench-smoke \
 	bench-gate bench-baseline bench-search bench-topk bench-build \
-	bench-batched bench-traversal bench-sharded bench
+	bench-batched bench-traversal bench-sharded bench-serve bench
 
 # 8 simulated CPU devices for the sharded-trie tier (tests + benches)
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -20,10 +20,12 @@ test-fast:
 test-slow:
 	$(PY) -m pytest -x -q -m slow
 
-# the multi-device tier: the sharded suite under 8 simulated CPU devices
-# (P in {1, 2, 8} all execute; on plain hosts the same tests cover P=1)
+# the multi-device tier: the sharded suite plus the serve loop's
+# degraded-mode cases under 8 simulated CPU devices (P in {1, 2, 8} all
+# execute; on plain hosts the same tests cover P=1)
 test-multidevice:
-	$(MULTIDEV) $(PY) -m pytest -x -q tests/test_sharded.py
+	$(MULTIDEV) $(PY) -m pytest -x -q tests/test_sharded.py \
+		tests/test_serve_loop.py
 
 # static checks (ruff config lives in pyproject.toml)
 lint:
@@ -53,6 +55,10 @@ bench-smoke:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-sharded BENCH_sharded_query_smoke.json
+	$(PY) -m benchmarks.run --only serve_loop --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-serve BENCH_serve_smoke.json
 
 # CI bench gates: fresh smoke runs vs the committed baselines
 # (benchmarks/baselines/, ratio-based: fail on >2x relative slowdown of
@@ -90,6 +96,12 @@ bench-gate:
 		--json-out-sharded /tmp/bench_fresh_sharded.json
 	$(PY) benchmarks/check_regression.py --max-ratio 3.0 \
 		--fresh /tmp/bench_fresh_sharded.json
+	$(PY) -m benchmarks.run --only serve_loop --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-serve /tmp/bench_fresh_serve.json
+	$(PY) benchmarks/check_regression.py \
+		--fresh /tmp/bench_fresh_serve.json
 
 # refresh the committed gate baselines (explicit — bench-smoke never
 # touches them)
@@ -115,6 +127,10 @@ bench-baseline:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-sharded benchmarks/baselines/sharded_query_smoke.json
+	$(PY) -m benchmarks.run --only serve_loop --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-serve benchmarks/baselines/serve_smoke.json
 
 # full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
 bench-search:
@@ -140,6 +156,12 @@ bench-traversal:
 # (8 simulated CPU devices; real accelerators drop the XLA_FLAGS)
 bench-sharded:
 	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query
+
+# resilient serve loop under zipfian multi-tenant load: measured +
+# deterministic-gate lanes, three load levels, shard-kill fault replay
+# (BENCH_serve.json)
+bench-serve:
+	$(PY) -m benchmarks.run --only serve_loop
 
 # every paper figure + kernel benches.  The sharded lane needs the
 # 8-device env to produce its full P sweep, so the first pass (plain

@@ -7,11 +7,11 @@ compared is a speedup *measured within the same run*, never absolute
 microseconds.  A fresh speedup below ``baseline / max-ratio`` for any
 matching config fails the gate.
 
-Six bench kinds are gated (auto-detected from the fresh JSON's
+Seven bench kinds are gated (auto-detected from the fresh JSON's
 ``bench`` field):
 
 ========================  ==============================  =====================
-kind                      in-run speedup gated            config key
+kind                      in-run quantity gated           config key
 ========================  ==============================  =====================
 ``rule_search_kernels``   fused kernel vs seed sweep      (n_edges, batch)
 ``topk_rank``             segmented kernel vs full sort   (n_nodes, k, metric)
@@ -19,7 +19,15 @@ kind                      in-run speedup gated            config key
 ``batched_query``         one-launch batch vs Q launches  (op, n_edges, batch)
 ``traversal``             trie_reduce kernel vs flat walk (dataset, minsup)
 ``sharded_query``         sharded engine vs single device (op, n_edges, n_shards)
+``serve``                 p99/p50 tail ratio + shed rate  (load,)
 ========================  ==============================  =====================
+
+Most kinds gate one higher-is-better in-run speedup.  A kind may instead
+declare a ``metrics`` list of LOWER-is-better quantities (the serve
+loop's p99/p50 tail ratio and shed rate): each fails when the fresh
+value exceeds ``baseline * max-ratio + atol`` — the additive ``atol``
+keeps zero-valued baselines (no shedding at low load) from turning into
+impossible zero ceilings.
 
 The sharded_query gate needs a multi-device host for its P sweep —
 ``make bench-sharded`` / the CI recipes export
@@ -83,6 +91,16 @@ GATES = {
         "label": "sharded_vs_single",
         "baseline": "benchmarks/baselines/sharded_query_smoke.json",
     },
+    "serve": {
+        "key": ("load",),
+        "metrics": [
+            {"metric": "p99_over_p50", "label": "p99/p50",
+             "atol": 1.0},
+            {"metric": "shed_rate", "label": "shed_rate",
+             "atol": 0.05},
+        ],
+        "baseline": "benchmarks/baselines/serve_smoke.json",
+    },
 }
 
 
@@ -131,29 +149,49 @@ def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
             f"{baseline_path} and {fresh_path}", file=sys.stderr,
         )
         return 2
+    # higher-is-better single speedup (legacy) vs a declared list of
+    # lower-is-better metrics (the serve SLO gate)
+    lower_metrics = gate.get("metrics")
     failures = 0
+    checks = 0
     for key in common:
-        base = float(baseline[key][gate["metric"]])
-        new = float(fresh[key][gate["metric"]])
-        floor = base / max_ratio
-        verdict = "OK" if new >= floor else "REGRESSION"
         cfg = ",".join(f"{k}={v}" for k, v in zip(gate["key"], key))
-        print(
-            f"bench-gate[{kind}] {cfg}: {gate['label']} "
-            f"baseline=x{base:.2f} fresh=x{new:.2f} "
-            f"floor=x{floor:.2f} -> {verdict}"
-        )
-        if new < floor:
-            failures += 1
+        if lower_metrics is None:
+            base = float(baseline[key][gate["metric"]])
+            new = float(fresh[key][gate["metric"]])
+            floor = base / max_ratio
+            verdict = "OK" if new >= floor else "REGRESSION"
+            print(
+                f"bench-gate[{kind}] {cfg}: {gate['label']} "
+                f"baseline=x{base:.2f} fresh=x{new:.2f} "
+                f"floor=x{floor:.2f} -> {verdict}"
+            )
+            checks += 1
+            if new < floor:
+                failures += 1
+            continue
+        for m in lower_metrics:
+            base = float(baseline[key][m["metric"]])
+            new = float(fresh[key][m["metric"]])
+            ceil = base * max_ratio + float(m.get("atol", 0.0))
+            verdict = "OK" if new <= ceil else "REGRESSION"
+            print(
+                f"bench-gate[{kind}] {cfg}: {m['label']} "
+                f"baseline={base:.3f} fresh={new:.3f} "
+                f"ceiling={ceil:.3f} -> {verdict}"
+            )
+            checks += 1
+            if new > ceil:
+                failures += 1
     if failures:
         print(
-            f"bench-gate[{kind}]: {failures}/{len(common)} config(s) "
+            f"bench-gate[{kind}]: {failures}/{checks} check(s) "
             f"regressed >{max_ratio:.1f}x vs {baseline_path}",
             file=sys.stderr,
         )
         return 1
     print(
-        f"bench-gate[{kind}]: {len(common)} config(s) within "
+        f"bench-gate[{kind}]: {checks} check(s) within "
         f"{max_ratio:.1f}x"
     )
     return 0

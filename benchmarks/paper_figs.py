@@ -53,6 +53,7 @@ JSON_OUT_BUILD = "BENCH_build.json"      # construction-engine trajectory
 JSON_OUT_BATCHED = "BENCH_batched_query.json"  # batched-vs-loop trajectory
 JSON_OUT_TRAVERSAL = "BENCH_traversal.json"    # traversal-lane trajectory
 JSON_OUT_SHARDED = "BENCH_sharded_query.json"  # multi-device trajectory
+JSON_OUT_SERVE = "BENCH_serve.json"      # serve-loop SLO trajectory
 
 # (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
 # with E, so the largest trie runs a single batch size.  Q=2048 is the
@@ -1037,4 +1038,249 @@ def bench_build() -> List[Row]:
         }
         with open(JSON_OUT_BUILD, "w") as f:
             json.dump(payload, f, indent=2)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# beyond-paper: the resilient serve loop under zipfian multi-tenant load
+# (system-level SLOs — p50/p99 latency, sustained QPS, timeout/shed
+#  rates — not per-call microseconds; plus a fault replay proving a
+#  killed shard degrades to bit-correct replicated answers with zero
+#  dropped in-flight requests)
+# ----------------------------------------------------------------------
+SERVE_EDGES = 32_768
+SERVE_EDGES_SMOKE = 4_096
+SERVE_N = 480
+SERVE_N_SMOKE = 160
+# offered load as multiples of the measured drain capacity; symbolic
+# names key the regression gate so baselines survive capacity drift
+SERVE_LOADS = (("low", 0.5), ("med", 0.9), ("overload", 2.0))
+
+
+class _FixedServiceTimer:
+    """Deterministic stand-in for ``time.monotonic``: each call advances
+    by half the fixed per-launch service time (the scheduler reads the
+    timer exactly twice per launch), so a replay driven by this timer
+    plus a ``VirtualClock`` has bit-reproducible queueing dynamics —
+    the regression GATE compares scheduling behavior, not host speed."""
+
+    def __init__(self, service_s: float = 0.01):
+        self.t = 0.0
+        self.half = service_s / 2.0
+
+    def __call__(self) -> float:
+        self.t += self.half
+        return self.t
+
+
+def _serve_replay(sched, workload, clock):
+    """Discrete-event replay: admit each request at its (virtual) arrival
+    time, step the scheduler between arrivals.  Kernel service time is
+    measured on the REAL timer and charged to the virtual timeline by the
+    scheduler, so latency percentiles are honest while arrivals stay
+    reproducible."""
+    from collections import deque
+
+    from repro.serve import QueueFull
+
+    arrivals = deque(sorted(workload, key=lambda w: w["arrival_s"]))
+    responses = []
+    while arrivals or sched.pending:
+        while arrivals and arrivals[0]["arrival_s"] <= clock.now() + 1e-12:
+            w = arrivals.popleft()
+            try:
+                sched.submit(
+                    w["op"], w["payload"], w["kwargs"],
+                    deadline_ms=w["deadline_ms"], tenant=w["tenant"],
+                )
+            except QueueFull:
+                pass                     # counted in sched.stats["shed"]
+        if sched.pending:
+            responses.extend(sched.step())
+        elif arrivals:
+            clock.sleep(arrivals[0]["arrival_s"] - clock.now())
+    return responses
+
+
+def bench_serve() -> List[Row]:
+    """Zipfian multi-tenant replay through ``serve.TrieScheduler`` at
+    three offered-load levels (fractions/multiples of the measured drain
+    capacity), reporting p50/p99 latency, sustained QPS, and
+    timeout/shed/cache-hit rates per level, plus a shard-kill fault
+    replay.  Writes ``BENCH_serve.json`` (gated on p99/p50 + shed_rate
+    by ``check_regression.py``)."""
+    import time as _time
+
+    import jax
+
+    from repro.core.synthetic import frozen_from_arrays
+    from repro.serve import (
+        FaultInjector,
+        FaultyEngine,
+        ResilientTrieEngine,
+        TrieQueryEngine,
+        TrieScheduler,
+        VirtualClock,
+        zipfian_workload,
+    )
+
+    n_edges = SERVE_EDGES_SMOKE if SMOKE else SERVE_EDGES
+    n_req = SERVE_N_SMOKE if SMOKE else SERVE_N
+    max_batch = 32
+    arrs = _synthetic_csr_trie(n_edges)
+    fz = frozen_from_arrays(arrs)
+    engine = TrieQueryEngine(fz, mode="replicated")
+
+    def make_sched(eng, clock, max_pending=32, timer=None, **kw):
+        return TrieScheduler(
+            eng, clock=clock, timer=timer or _time.monotonic,
+            max_pending=max_pending, max_batch=max_batch, **kw,
+        )
+
+    # warm every launch shape the scheduler can produce: the scheduler
+    # normalizes batches to pow2 rows x fixed pow2 width, so one pass
+    # over the pow2 sizes (with the workload's op kwargs) pre-compiles
+    # everything and the replays below measure service, not compilation
+    depth = np.asarray(fz.node_depth)
+    width = 1 << max(int(depth.max()) - 1, 0).bit_length()
+    b = 1
+    while b <= max_batch:
+        q = np.full((b, width), -1, np.int32)
+        q[:, 0] = np.arange(b, dtype=np.int32)
+        engine.rule_search_batch(q, np.ones((b,), np.int32))
+        engine.top_k_rules_batch(q, 8, metric="confidence")
+        engine.rules_with(list(range(b)), role="any", k=8, metric="lift")
+        b *= 2
+
+    inf = float("inf")
+    rows: List[Row] = []
+
+    def run_lane(timer_factory, tag):
+        """One three-level load sweep.  ``timer_factory() -> timer``;
+        the real ``time.monotonic`` gives the honest measured lane, a
+        fresh ``_FixedServiceTimer`` per scheduler gives the
+        bit-reproducible gate lane."""
+        # drain capacity: the whole workload offered at once, no
+        # deadlines — every request completes, makespan is pure service
+        warm = zipfian_workload(fz, n_req, seed=0, deadline_ms=(inf,))
+        clock = VirtualClock()
+        sched = make_sched(engine, clock, timer=timer_factory())
+        _serve_replay(sched, warm, clock)
+        capacity_qps = sched.stats["ok"] / max(clock.now(), 1e-9)
+        launch_ms = clock.now() * 1e3 / max(sched.stats["launches"], 1)
+        # tenant deadlines scale with the per-launch service time so the
+        # timeout rate reflects LOAD, not the host's absolute speed
+        deadlines = tuple(m * launch_ms for m in (4.0, 16.0, 64.0))
+
+        lane = []
+        for load_name, mult in SERVE_LOADS:
+            wl = zipfian_workload(
+                fz, n_req, seed=1, arrival_rate=mult * capacity_qps,
+                deadline_ms=deadlines,
+            )
+            clock = VirtualClock()
+            sched = make_sched(engine, clock, timer=timer_factory())
+            responses = _serve_replay(sched, wl, clock)
+            ok = [r for r in responses if r.status == "ok"]
+            # the gated latency distribution is over KERNEL-served
+            # responses: cache hits return in ~0 ms and would pin p50 to
+            # the cache floor whenever the hit rate crosses 50%, turning
+            # the p99/p50 gate into a cache-rate gate
+            served = np.sort(np.array([
+                r.latency_ms for r in ok if not r.cache_hit
+            ]))
+            lat = np.sort(np.array([r.latency_ms for r in ok]))
+            p50 = float(np.percentile(lat, 50)) if len(lat) else 0.0
+            p99 = float(np.percentile(lat, 99)) if len(lat) else 0.0
+            s50 = float(np.percentile(served, 50)) if len(served) else 0.0
+            s99 = float(np.percentile(served, 99)) if len(served) else 0.0
+            makespan = max(clock.now(), 1e-9)
+            stats = sched.stats
+            n_sub = max(stats["submitted"] + stats["shed"], 1)
+            res = {
+                "load": load_name,
+                "offered_x_capacity": mult,
+                "n_requests": n_req,
+                "n_edges": n_edges,
+                "capacity_qps": capacity_qps,
+                "p50_ms": p50,
+                "p99_ms": p99,
+                "p50_served_ms": s50,
+                "p99_served_ms": s99,
+                "p99_over_p50": (s99 / s50) if s50 > 0 else 1.0,
+                "qps_sustained": len(ok) / makespan,
+                "ok_rate": len(ok) / n_sub,
+                "timeout_rate": stats["timeout"] / n_sub,
+                "shed_rate": stats["shed"] / n_sub,
+                "cache_hit_rate": stats["cache_hits"] / n_sub,
+                "dedup_collapsed": stats["dedup_collapsed"],
+                "launches": stats["launches"],
+            }
+            lane.append(res)
+            rows.append(Row(
+                f"serve_{tag}{load_name}_E{n_edges}", p50 * 1e3,
+                f"p99_ms={p99:.1f};qps={res['qps_sustained']:.0f};"
+                f"timeout={res['timeout_rate']:.2f};"
+                f"shed={res['shed_rate']:.2f};"
+                f"cache_hit={res['cache_hit_rate']:.2f}",
+            ))
+        return lane
+
+    # measured lane: honest wall-clock service charged to the virtual
+    # timeline — host-dependent, reported but NOT gated
+    measured = run_lane(lambda: _time.monotonic, "")
+    # gate lane: fixed 10 ms service per launch — queueing dynamics are
+    # bit-reproducible, so check_regression.py can hold p99/p50 and
+    # shed_rate to tight ceilings across arbitrary CI hosts
+    results = run_lane(lambda: _FixedServiceTimer(0.01), "gate_")
+
+    # fault replay: kill a shard mid-run; every in-flight request must
+    # complete (failover to the replicated backend, bit-correct by the
+    # engine parity contract — asserted in tests/test_serve_loop.py)
+    clock = VirtualClock()
+    inj = FaultInjector().fail_nth_launch(2, shard=0)
+    primary = TrieQueryEngine(fz, mode="sharded")
+    res_eng = ResilientTrieEngine(FaultyEngine(primary, inj, clock=clock))
+    wl = zipfian_workload(
+        fz, max(n_req // 4, 32), seed=2, deadline_ms=(inf,),
+    )
+    # admission sized to the whole burst: this replay proves no ADMITTED
+    # request is dropped across the failover, not the shed policy
+    sched = make_sched(res_eng, clock, max_pending=len(wl))
+    responses = _serve_replay(sched, wl, clock)
+    fault = {
+        "n_requests": len(wl),
+        "n_responses": len(responses),
+        "zero_dropped": len(responses) == len(wl),
+        "all_answered": all(
+            r.status in ("ok", "timeout") for r in responses
+        ),
+        "failovers": res_eng.failovers,
+        "backend_after": res_eng.backend,
+        "degraded_responses": sum(r.degraded for r in responses),
+    }
+    rows.append(Row(
+        "serve_fault_shard_kill", 0.0,
+        f"zero_dropped={fault['zero_dropped']};"
+        f"failovers={fault['failovers']};"
+        f"backend={fault['backend_after']}",
+    ))
+    assert fault["zero_dropped"], "fault replay dropped in-flight work"
+
+    if JSON_OUT_SERVE:
+        payload = {
+            "bench": "serve",
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "n_devices": jax.device_count(),
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "fault_replay": fault,
+            # gated lane: deterministic fixed-service replay (stable
+            # across hosts); measured lane: honest wall-clock numbers
+            "results": results,
+            "measured": measured,
+        }
+        with open(JSON_OUT_SERVE, "w") as fh:
+            json.dump(payload, fh, indent=2)
     return rows

@@ -27,6 +27,7 @@ BENCHES = [
     ("topk_rank_kernel", paper_figs.bench_topk_rank),
     ("batched_query_ops", paper_figs.bench_batched_query),
     ("sharded_query", paper_figs.bench_sharded_query),
+    ("serve_loop", paper_figs.bench_serve),
 ]
 
 
@@ -67,6 +68,11 @@ def main() -> None:
         help="path for the sharded-vs-single query-engine "
              "perf-trajectory JSON ('' disables writing)",
     )
+    parser.add_argument(
+        "--json-out-serve", default="BENCH_serve.json",
+        help="path for the serve-loop SLO trajectory JSON "
+             "('' disables writing)",
+    )
     args = parser.parse_args()
     paper_figs.SMOKE = args.smoke
     paper_figs.JSON_OUT = args.json_out
@@ -75,6 +81,7 @@ def main() -> None:
     paper_figs.JSON_OUT_BATCHED = args.json_out_batched
     paper_figs.JSON_OUT_TRAVERSAL = args.json_out_traversal
     paper_figs.JSON_OUT_SHARDED = args.json_out_sharded
+    paper_figs.JSON_OUT_SERVE = args.json_out_serve
 
     print("name,us_per_call,derived")
     failed = []

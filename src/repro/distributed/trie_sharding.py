@@ -76,11 +76,31 @@ from repro.kernels.metrics_inkernel import RANK_METRICS, compound_lift
 # ops only imports THIS module lazily (inside its dispatch helper), so a
 # module-scope import back into it is cycle-safe — and keeps the
 # interpret-mode heuristic in exactly one place.
-from repro.kernels.ops import _interpret
+from repro.kernels.ops import (
+    InvalidQueryError,
+    TrieQueryError,
+    _interpret,
+    dedup_query_rows,
+)
 from repro.kernels.rank import LANE, rank_merge, topk_rank_batch_pallas
 from repro.kernels.rule_search import rule_search_fused_pallas
 
 _BIG = 2**30
+
+
+class ShardFailure(TrieQueryError):
+    """A specific trie shard is unhealthy (raised by fault injection or a
+    real per-device launch failure).  Deliberately NOT retryable under
+    ``kernels.ops.is_retryable`` — re-launching on the same sharded
+    backend hits the same dead shard; the serve loop's ``ShardHealth``
+    handles it by demoting to the replicated backend or to a
+    dead-shard-masked degraded plan (``mask_dead_shards``)."""
+
+    def __init__(self, shard: int, message: str = ""):
+        self.shard = int(shard)
+        super().__init__(
+            message or f"shard {self.shard} failed"
+        )
 
 
 def _shard_map(fn, mesh: Mesh, in_specs, out_specs):
@@ -469,6 +489,87 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
 
 
 # ----------------------------------------------------------------------
+# degraded plans: answering around dead shards
+# ----------------------------------------------------------------------
+# every [P, ...] leaf's padding value — masking a shard's rows with its
+# own padding convention makes the dead shard indistinguishable from an
+# empty one: rank ops return nothing from its DFS range, posting windows
+# come back empty, and descents routed to it report found=False.
+_MASK_FILLS = {
+    "support": 0.0, "confidence": 0.0, "lift": 0.0,
+    "depth": -1, "node_item": -2,
+    "dfs_len": 0,
+    "post_lo": _BIG, "post_hi": _BIG,
+    "p_support": 0.0, "p_confidence": 0.0, "p_lift": 0.0, "p_depth": -1,
+    "child_offsets": 0, "edge_item": -7, "edge_child": -1,
+    "edge_conf": 0.0, "edge_sup": 0.0, "edge_lift": 0.0, "l2g": -1,
+}
+
+
+def mask_dead_shards(
+    plan: ShardPlan, dead: Sequence[int]
+) -> ShardPlan:
+    """A DEGRADED copy of ``plan`` with the listed shards' data blanked.
+
+    The masked plan still answers every batched op without error, but
+    each dead shard's DFS range, posting lists, and subforest simply
+    vanish: ranked results silently exclude its rules and descents whose
+    first item routes to it return ``found=False``.  This is the partial-
+    answer fallback the serve loop's ``ShardHealth`` selects when the
+    replicated backend is unavailable; callers must surface the loss
+    explicitly (the scheduler stamps ``degraded=True`` on every response
+    answered through a masked plan).
+
+    Host-side and allocation-only — the original plan (and its device
+    buffers) is untouched, so recovery is just "resume using the old
+    plan".  Raises ``ValueError`` when ``dead`` names an out-of-range
+    shard or would kill ALL shards (no data left to answer from).
+    """
+    dead_set = sorted({int(d) for d in dead})
+    p = plan.n_shards
+    bad = [d for d in dead_set if not 0 <= d < p]
+    if bad:
+        raise ValueError(
+            f"dead shard ids {bad} out of range for {p}-shard plan"
+        )
+    if not dead_set:
+        return plan
+    if len(dead_set) == p:
+        raise ValueError(
+            f"masking all {p} shards leaves nothing to answer from"
+        )
+    st = plan.trie
+    shd = NamedSharding(plan.mesh, P("data"))
+    masked = {}
+    for name in ShardedDeviceTrie._LEAVES:
+        arr = getattr(st, name)
+        if name not in _MASK_FILLS:       # replicated tables / dfs_base
+            masked[name] = arr
+            continue
+        host = np.array(arr)              # gather + copy
+        host[dead_set] = _MASK_FILLS[name]
+        masked[name] = jax.device_put(jnp.asarray(host), shd)
+    trie = ShardedDeviceTrie(
+        **masked,
+        n_shards=st.n_shards,
+        max_fanout=st.max_fanout,
+        max_postings=st.max_postings,
+    )
+    local_item_offsets = plan.local_item_offsets.copy()
+    local_item_offsets[dead_set] = 0
+    gbase = plan.gbase.copy()
+    gbase[dead_set] = 0
+    return ShardPlan(
+        mesh=plan.mesh,
+        trie=trie,
+        frozen=plan.frozen,
+        ranges=plan.ranges,
+        local_item_offsets=local_item_offsets,
+        gbase=gbase,
+    )
+
+
+# ----------------------------------------------------------------------
 # k-best merge (the static rank-merge over all-gathered device lists)
 # ----------------------------------------------------------------------
 def merge_kbest(vals: jax.Array, pos: jax.Array, k: int):
@@ -590,10 +691,15 @@ def sharded_top_k_rules_batch(
     ranking over the local DFS slice + k-best all-gather/rank-merge.
     Bit-identical (tie order included) to the single-device op."""
     if metric not in RANK_METRICS:
-        raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
-    # list() unconditionally — the exact input normalization of the
-    # single-device op (a [Q, P] matrix becomes Q ragged rows there too)
-    prefixes = list(prefixes)
+        raise InvalidQueryError(
+            f"metric {metric!r} not in {RANK_METRICS}"
+        )
+    # the exact input normalization of the single-device op: a [Q, P]
+    # matrix stays a matrix (its -1 entries are padding under the
+    # repo-wide query-matrix convention — list()-ing it would turn them
+    # into literal absent items), everything else becomes Q ragged rows
+    if not isinstance(prefixes, np.ndarray):
+        prefixes = list(prefixes)
     if len(prefixes) == 0:
         kk = max(int(k), 0)
         return {
@@ -700,9 +806,11 @@ def sharded_rules_with(
     co-partitioned posting lists / DFS slice, then k-best merge.
     Bit-identical (tie order included) to the single-device op."""
     if role not in ROLES:
-        raise ValueError(f"role {role!r} not in {ROLES}")
+        raise InvalidQueryError(f"role {role!r} not in {ROLES}")
     if metric not in RANK_METRICS:
-        raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
+        raise InvalidQueryError(
+            f"metric {metric!r} not in {RANK_METRICS}"
+        )
     plos, phis, gdelta, qitems = _sharded_posting_slices(plan, items)
     q = qitems.shape[0]
     if q == 0:
@@ -830,8 +938,8 @@ def sharded_rule_search_batch(
             ants = [p[0] for p in pairs]
             cons = [p[1] for p in pairs]
             queries, ant_len = plan.frozen.canonicalize_queries(ants, cons)
-    queries = jnp.asarray(queries, jnp.int32)
-    ant_len = jnp.asarray(ant_len, jnp.int32)
+    queries = np.asarray(queries, np.int32)
+    ant_len = np.asarray(ant_len, np.int32)
     q, width = queries.shape
     if q == 0 or width == 0 or plan.frozen.n_edges == 0:
         z = jnp.zeros((q,), jnp.float32)
@@ -840,12 +948,19 @@ def sharded_rule_search_batch(
             "node": jnp.full((q,), -1, jnp.int32),
             "support": z, "confidence": z, "lift": z,
         }
+    # whole-query dedup, same helper as the single-device op: skewed
+    # serving traffic descends each unique canonical row once per shard
+    queries, ant_len, inv = dedup_query_rows(queries, ant_len)
     found, node, conf, sup, lift = _rule_search_sharded(
-        plan.trie, queries, ant_len,
+        plan.trie, jnp.asarray(queries), jnp.asarray(ant_len),
         mesh=plan.mesh, max_fanout=plan.trie.max_fanout,
         interpret=_interpret(),
     )
-    return {
+    out = {
         "found": found, "node": node,
         "support": sup, "confidence": conf, "lift": lift,
     }
+    if inv is None:
+        return out
+    inv_j = jnp.asarray(inv)
+    return {key: v[inv_j] for key, v in out.items()}

@@ -25,9 +25,14 @@ over local DFS ranges + bit-identical k-best / found-winner merges).
 from .item_index import ROLES
 from .metrics_inkernel import RANK_METRICS
 from .ops import (
+    InvalidQueryError,
+    TransientBackendError,
+    TrieQueryError,
+    dedup_query_rows,
     dense_from_bitmaps,
     dfs_rank_arrays,
     edge_metric_arrays,
+    is_retryable,
     item_rank_arrays,
     members_from_candidates,
     prefix_ranges,
@@ -43,6 +48,11 @@ from .ops import (
 __all__ = [
     "RANK_METRICS",
     "ROLES",
+    "InvalidQueryError",
+    "TransientBackendError",
+    "TrieQueryError",
+    "dedup_query_rows",
+    "is_retryable",
     "dense_from_bitmaps",
     "dfs_rank_arrays",
     "edge_metric_arrays",

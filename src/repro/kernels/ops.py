@@ -34,6 +34,235 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ----------------------------------------------------------------------
+# error taxonomy (the serve loop's retryable-vs-fatal classification)
+# ----------------------------------------------------------------------
+class TrieQueryError(Exception):
+    """Base of the trie-query error taxonomy."""
+
+
+class InvalidQueryError(TrieQueryError, ValueError):
+    """Malformed query input — fatal for the offending request, never
+    retried.  Subclasses ``ValueError`` so existing ``except ValueError``
+    call sites (and tests) keep working."""
+
+
+class TransientBackendError(TrieQueryError):
+    """Transient backend/launch failure — safe to retry with backoff."""
+
+
+# runtime-error message markers that indicate a transient backend
+# condition (allocator pressure, collective flakes) rather than a bug;
+# matched case-sensitively against gRPC/XLA status phrases
+_RETRYABLE_MARKERS = (
+    "RESOURCE_EXHAUSTED",
+    "UNAVAILABLE",
+    "DEADLINE_EXCEEDED",
+    "ABORTED",
+    "out of memory",
+)
+
+
+def is_retryable(exc: BaseException) -> bool:
+    """Retryable-vs-fatal classification for the serve loop's retry path.
+
+    ``TransientBackendError`` (and subclasses) is retryable by
+    construction; ``InvalidQueryError`` never is, and neither is
+    ``distributed.trie_sharding.ShardFailure`` (re-launching on the same
+    backend hits the same dead shard — the resilience ladder demotes
+    instead of retrying).  Anything else is classified by message:
+    backend ``RuntimeError``s carrying a transient status phrase
+    (RESOURCE_EXHAUSTED / UNAVAILABLE / ...) retry, all other errors are
+    treated as bugs and surface immediately.
+    """
+    if isinstance(exc, InvalidQueryError):
+        return False
+    if isinstance(exc, TransientBackendError):
+        return True
+    msg = str(exc)
+    return any(marker in msg for marker in _RETRYABLE_MARKERS)
+
+
+# ----------------------------------------------------------------------
+# typed input validation (InvalidQueryError instead of XLA shape errors)
+# ----------------------------------------------------------------------
+_UNKNOWN_RANK = np.iinfo(np.int32).max // 2   # item_tables' unknown-item rank
+
+
+def _validate_k(k, op: str) -> int:
+    if isinstance(k, bool) or not isinstance(k, (int, np.integer)):
+        raise InvalidQueryError(
+            f"{op}: k must be a positive int, got {k!r}"
+        )
+    if int(k) <= 0:
+        raise InvalidQueryError(
+            f"{op}: k must be positive, got {int(k)}"
+        )
+    return int(k)
+
+
+def _scalar_item_ok(it) -> bool:
+    if isinstance(it, bool) or it is None:
+        return False
+    if isinstance(it, (int, np.integer)):
+        return True
+    # 0-d integer arrays (numpy or jax scalars) count as item ids too
+    shape = getattr(it, "shape", None)
+    if shape == ():
+        return bool(np.issubdtype(np.asarray(it).dtype, np.integer))
+    return False
+
+
+def validate_items(
+    items, op: str = "rules_with",
+    n_items: Optional[int] = None, strict: bool = False,
+) -> list:
+    """Typed validation of a flat item-id list (``rules_with`` input).
+
+    Always rejects ``None`` and non-integer entries with the offending
+    value and index.  With ``strict=True`` (the serve loop's admission
+    contract) ids outside ``[0, n_items)`` also raise; the default keeps
+    the documented lenient semantics, where absent/negative ids resolve
+    to empty result rows.
+    """
+    seq = list(items)
+    try:
+        arr = np.asarray(seq)
+    except (ValueError, TypeError):
+        arr = np.asarray(seq, dtype=object)
+    if arr.ndim != 1:
+        raise InvalidQueryError(
+            f"{op}: expected a flat list of item ids, got shape "
+            f"{arr.shape}"
+        )
+    if arr.size and not np.issubdtype(arr.dtype, np.integer):
+        offender_i, offender = next(
+            ((i, v) for i, v in enumerate(seq) if not _scalar_item_ok(v)),
+            (0, seq[0]),
+        )
+        raise InvalidQueryError(
+            f"{op}: query item at index {offender_i} is {offender!r}; "
+            f"expected an integer item id"
+        )
+    if strict and n_items is not None and arr.size:
+        bad = np.where((arr < 0) | (arr >= n_items))[0]
+        if bad.size:
+            i = int(bad[0])
+            raise InvalidQueryError(
+                f"{op}: item id {int(arr[i])} at index {i} outside the "
+                f"vocabulary [0, {n_items})"
+            )
+    return seq
+
+
+def _strict_vocab_check(its, qi: int, op: str, item_rank) -> None:
+    nr = int(np.asarray(item_rank).shape[0])
+    for it in its:
+        v = int(it)
+        if not (0 <= v < nr) or int(item_rank[v]) >= _UNKNOWN_RANK:
+            raise InvalidQueryError(
+                f"{op}: item id {v} in query {qi} is not in the trie's "
+                f"vocabulary"
+            )
+
+
+def validate_prefixes(
+    prefixes, op: str = "top_k_rules_batch",
+    item_rank=None, strict: bool = False,
+) -> None:
+    """Typed validation of Q ragged antecedent prefixes.
+
+    ``None`` prefixes and ``None``/non-integer entries inside a prefix
+    raise with the offending value; ``strict=True`` additionally rejects
+    ids outside the trie's item vocabulary (requires ``item_rank``).
+    An already-padded ``[Q, P]`` integer matrix passes wholesale (its
+    ``-1`` entries are padding by the repo-wide convention).
+    """
+    if isinstance(prefixes, np.ndarray) and prefixes.ndim == 2:
+        if not np.issubdtype(prefixes.dtype, np.integer):
+            raise InvalidQueryError(
+                f"{op}: prefix matrix must be integer-typed, got "
+                f"{prefixes.dtype}"
+            )
+        return
+    for qi, p in enumerate(list(prefixes)):
+        if p is None:
+            raise InvalidQueryError(f"{op}: prefix {qi} is None")
+        its = list(np.asarray(p).reshape(-1)) if not isinstance(
+            p, (list, tuple)
+        ) else list(p)
+        for i, it in enumerate(its):
+            if not _scalar_item_ok(it):
+                raise InvalidQueryError(
+                    f"{op}: entry {i} of prefix {qi} is {it!r}; "
+                    f"expected an integer item id"
+                )
+        if strict and item_rank is not None:
+            _strict_vocab_check(its, qi, op, item_rank)
+
+
+def validate_rule_pairs(
+    pairs, op: str = "rule_search_batch",
+    item_rank=None, strict: bool = False,
+) -> None:
+    """Typed validation of ragged (antecedent, consequent) query pairs."""
+    for qi, pair in enumerate(pairs):
+        if pair is None or len(pair) != 2:
+            raise InvalidQueryError(
+                f"{op}: query {qi} is {pair!r}; expected an "
+                f"(antecedent, consequent) pair"
+            )
+        for side_name, side in zip(("antecedent", "consequent"), pair):
+            if side is None:
+                raise InvalidQueryError(
+                    f"{op}: {side_name} of query {qi} is None; expected "
+                    f"a sequence of integer item ids"
+                )
+            its = list(side)
+            for i, it in enumerate(its):
+                if not _scalar_item_ok(it):
+                    raise InvalidQueryError(
+                        f"{op}: entry {i} of the {side_name} of query "
+                        f"{qi} is {it!r}; expected an integer item id"
+                    )
+            if strict and item_rank is not None:
+                _strict_vocab_check(its, qi, op, item_rank)
+
+
+def dedup_query_rows(queries, ant_len):
+    """Whole-query dedup for canonical ``[Q, L]`` search rows.
+
+    Equal (row, ant_len) queries descend identically, so the kernel only
+    needs the unique rows — skewed serving traffic otherwise re-descends
+    duplicates Q times.  Returns ``(uq, ual, inv)`` where ``inv`` scatters
+    unique-row results back to the original Q rows, or
+    ``(queries, ant_len, None)`` when every row is already unique AND the
+    count is already a power of two (the original launch path, no extra
+    padding).  The unique count otherwise pads up to a power of two with
+    all-padding rows (item -1, ant_len 0 — found False by construction):
+    a serving stream of arbitrary batch sizes then hits a BOUNDED set of
+    compiled launch shapes instead of recompiling per distinct Q.
+    """
+    q = np.asarray(queries)
+    al = np.asarray(ant_len)
+    if q.shape[0] <= 1:
+        return q, al, None
+    key = np.concatenate(
+        [q.astype(np.int64), al.astype(np.int64)[:, None]], axis=1
+    )
+    uniq, inv = np.unique(key, axis=0, return_inverse=True)
+    inv = np.asarray(inv).reshape(-1)
+    u = uniq.shape[0]
+    upad = 1 << max(u - 1, 0).bit_length()
+    if u == q.shape[0] and upad == u:
+        return q, al, None
+    uq = np.full((upad, q.shape[1]), -1, np.int32)
+    ual = np.zeros((upad,), np.int32)
+    uq[:u] = uniq[:, :-1]
+    ual[:u] = uniq[:, -1]
+    return uq, ual, inv.astype(np.int32)
+
+
 def _as_shard_plan(trie):
     """The ShardPlan when ``trie`` is one, else None (lazy import: the
     distributed package imports kernel submodules, so importing it at
@@ -302,8 +531,14 @@ def top_k_rules(
     oracle are bit-identical.
     """
     if metric not in RANK_METRICS:
-        raise ValueError(
+        raise InvalidQueryError(
             f"metric {metric!r} not in {RANK_METRICS}"
+        )
+    _validate_k(k, "top_k_rules")
+    if prefix is not None:
+        validate_prefixes(
+            [prefix], "top_k_rules",
+            item_rank=getattr(trie, "item_rank", None),
         )
     if arrays is None:
         arrays = dfs_rank_arrays(trie)
@@ -454,6 +689,7 @@ def rules_with(
     min_depth: int = 1,
     arrays: Optional[Dict[str, jax.Array]] = None,
     use_kernel: bool = True,
+    strict: bool = False,
 ) -> Dict[str, jax.Array]:
     """Top-k rules involving each queried item, Q items in ONE launch.
 
@@ -475,6 +711,11 @@ def rules_with(
     device answering over its co-partitioned posting lists, k-best
     all-gather + rank-merge), bit-identical to this single-device form.
     """
+    if role not in ROLES:
+        raise InvalidQueryError(f"role {role!r} not in {ROLES}")
+    if metric not in RANK_METRICS:
+        raise InvalidQueryError(f"metric {metric!r} not in {RANK_METRICS}")
+    _validate_k(k, "rules_with")
     plan = _as_shard_plan(trie)
     if plan is not None:
         if arrays is not None or not use_kernel:
@@ -483,18 +724,22 @@ def rules_with(
                 "already owns its device residency) nor use_kernel=False "
                 "(the jnp oracle is single-device only)"
             )
+        items = validate_items(
+            items, "rules_with",
+            n_items=plan.local_item_offsets.shape[1] - 1, strict=strict,
+        )
         from repro.distributed.trie_sharding import sharded_rules_with
 
         return sharded_rules_with(
             plan, items, role=role, k=k, metric=metric,
             min_depth=min_depth,
         )
-    if role not in ROLES:
-        raise ValueError(f"role {role!r} not in {ROLES}")
-    if metric not in RANK_METRICS:
-        raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
     if arrays is None:
         arrays = item_rank_arrays(trie)
+    items = validate_items(
+        items, "rules_with",
+        n_items=arrays["item_offsets"].shape[0] - 1, strict=strict,
+    )
     plos, phis, qitems = _posting_slices(arrays["item_offsets"], items)
     # Duplicate-item dedup: identical (sanitized) items produce
     # bit-identical result rows, and the membership kernel materializes a
@@ -611,6 +856,7 @@ def top_k_rules_batch(
     min_depth: int = 1,
     arrays: Optional[Dict[str, jax.Array]] = None,
     use_kernel: bool = True,
+    strict: bool = False,
 ) -> Dict[str, jax.Array]:
     """Top-k rules under EACH of Q antecedent prefixes, one launch total.
 
@@ -628,7 +874,18 @@ def top_k_rules_batch(
     per-device range-clipped kernels, k-best all-gather + rank-merge),
     bit-identical to this single-device form.
     """
+    if metric not in RANK_METRICS:
+        raise InvalidQueryError(f"metric {metric!r} not in {RANK_METRICS}")
+    _validate_k(k, "top_k_rules_batch")
     plan = _as_shard_plan(trie)
+    item_rank = getattr(
+        plan.frozen if plan is not None else trie, "item_rank", None
+    )
+    if not isinstance(prefixes, np.ndarray):
+        prefixes = list(prefixes)   # normalize once (generators included)
+    validate_prefixes(
+        prefixes, "top_k_rules_batch", item_rank=item_rank, strict=strict,
+    )
     if plan is not None:
         if arrays is not None or not use_kernel:
             raise ValueError(
@@ -643,11 +900,8 @@ def top_k_rules_batch(
         return sharded_top_k_rules_batch(
             plan, prefixes, k, metric=metric, min_depth=min_depth,
         )
-    if metric not in RANK_METRICS:
-        raise ValueError(f"metric {metric!r} not in {RANK_METRICS}")
     if arrays is None:
         arrays = dfs_rank_arrays(trie)
-    prefixes = list(prefixes)
     if len(prefixes) == 0:
         return {
             "values": jnp.zeros((0, max(int(k), 0)), jnp.float32),
@@ -677,6 +931,7 @@ def rule_search_batch(
     queries,                                # (A, C) pairs or [Q, L] rows
     ant_len=None,                           # int32 [Q] with array queries
     edges: Optional[Dict[str, jax.Array]] = None,
+    strict: bool = False,
 ) -> Dict[str, jax.Array]:
     """Search Q rules in ONE fused kernel launch.
 
@@ -684,8 +939,10 @@ def rule_search_batch(
     ``(antecedent, consequent)`` item-sequence pairs — canonicalized and
     packed host-side via ``FrozenTrie.canonicalize_queries`` — or an
     already-canonical padded ``[Q, L]`` row matrix with ``ant_len``.
-    Either way the whole batch descends in one ``pallas_call`` (the PR-1
-    CSR fused kernel), replacing Q separate single-query launches.
+    Either way the whole batch dedups to its UNIQUE canonical rows
+    host-side (``dedup_query_rows`` — skewed serving traffic otherwise
+    re-descends duplicates), descends in one ``pallas_call`` (the PR-1
+    CSR fused kernel), and scatters results back to the original Q rows.
     Bit-identical per row to looping ``rule_search`` over the queries.
 
     ``trie`` may also be a ``distributed.trie_sharding.ShardPlan`` — the
@@ -694,6 +951,16 @@ def rule_search_batch(
     re-assembly), bit-identical to this single-device form.
     """
     plan = _as_shard_plan(trie)
+    if ant_len is None and not isinstance(queries, np.ndarray):
+        queries = list(queries)
+        validate_rule_pairs(
+            queries, "rule_search_batch",
+            item_rank=getattr(
+                plan.frozen if plan is not None else trie,
+                "item_rank", None,
+            ),
+            strict=strict,
+        )
     if plan is not None:
         if edges is not None:
             raise ValueError(
@@ -723,7 +990,12 @@ def rule_search_batch(
         ants = [p[0] for p in pairs]
         cons = [p[1] for p in pairs]
         queries, ant_len = canonicalize(ants, cons)
-    return rule_search(trie, queries, ant_len, edges=edges)
+    uq, ual, inv = dedup_query_rows(queries, ant_len)
+    out = rule_search(trie, uq, ual, edges=edges)
+    if inv is None:
+        return out
+    inv_j = jnp.asarray(inv)
+    return {key: v[inv_j] for key, v in out.items()}
 
 
 # ----------------------------------------------------------------------

@@ -1,6 +1,23 @@
-"""Serving substrate: prefill/decode steps, trie-backed speculation, and
-the trie query engine (replicated vs sharded routing)."""
+"""Serving substrate: prefill/decode steps, trie-backed speculation, the
+trie query engine (replicated vs sharded routing), and the resilient
+continuous-batching serve loop (scheduler / resilience / faults)."""
 from .engine import make_decode_step, make_prefill_step
+from .faults import FaultInjector, FaultyEngine, zipfian_workload
+from .resilience import (
+    MonotonicClock,
+    ResilientTrieEngine,
+    RetryPolicy,
+    ShardHealth,
+    VirtualClock,
+    retry_call,
+)
+from .scheduler import (
+    LaunchPredictor,
+    QueueFull,
+    Request,
+    Response,
+    TrieScheduler,
+)
 from .trie_engine import TrieQueryEngine, make_trie_engine
 
 __all__ = [
@@ -8,4 +25,18 @@ __all__ = [
     "make_prefill_step",
     "TrieQueryEngine",
     "make_trie_engine",
+    "TrieScheduler",
+    "QueueFull",
+    "Request",
+    "Response",
+    "LaunchPredictor",
+    "ResilientTrieEngine",
+    "RetryPolicy",
+    "ShardHealth",
+    "VirtualClock",
+    "MonotonicClock",
+    "retry_call",
+    "FaultInjector",
+    "FaultyEngine",
+    "zipfian_workload",
 ]

@@ -1,0 +1,596 @@
+"""Resilient continuous-batching serve loop over ``TrieQueryEngine``.
+
+The paper's claim is that the Trie of Rules makes *serving a ruleset*
+fast; this module turns the one-batch-per-call engine into a system that
+survives production traffic: a stream of ragged, skewed, mixed-op
+requests that duplicate heavily, carry deadlines, and outlive failed
+shards.  The JetStream-style loop:
+
+    submit() ──► bounded admission queue ──► step(): ──► Response
+                 (QueueFull beyond            1 expire deadlines
+                  max_pending; shed           2 serve LRU-cache hits
+                  policy pluggable)           3 shape one bucket batch
+                                                (same op+kwargs, ≤
+                                                max_batch, pow2-padded
+                                                by the kernels)
+                                              4 dedup identical rows
+                                              5 launch w/ retry+backoff
+                                                (ShardFailure → the
+                                                resilience ladder
+                                                demotes mid-call)
+                                              6 scatter rows, fill cache
+
+Every request is ONE query row (a rule pair, a ranked prefix, or an
+item), so canonical-key hashing gives whole-query dedup for free: the
+key that addresses the LRU result cache is the same key that collapses
+duplicates inside a batch, lifting the per-item dedup ``rules_with``
+already does to whole queries of every op.
+
+Deadlines are enforced at three points: queued requests past their
+``deadline_ms`` expire to ``Timeout`` (never a hang), the batch shaper
+refuses to pack a request whose predicted launch (per-bucket EWMA of
+measured service time) would bust its budget — it times out immediately
+instead of poisoning a batch it cannot survive — and post-launch expiry
+still returns ``Timeout`` (the computed row only feeds the cache).
+
+Time flows through the ``resilience`` clock seam: tests and the bench
+replay drive a ``VirtualClock`` (deterministic backoff/deadline
+behavior, injected fault latency), while a separate real ``timer``
+measures kernel service time and charges it to the virtual timeline —
+honest latency distributions under a reproducible arrival process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from collections import OrderedDict, deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.array_trie import canonical_prefix_rows
+from repro.kernels.ops import (
+    InvalidQueryError,
+    validate_items,
+    validate_prefixes,
+    validate_rule_pairs,
+)
+from repro.serve.resilience import (
+    MonotonicClock,
+    ResilientTrieEngine,
+    RetryPolicy,
+    retry_call,
+)
+
+OPS = ("rule_search", "top_k", "rules_with")
+
+# Response.status values
+OK = "ok"
+TIMEOUT = "timeout"
+SHED = "shed"
+FAILED = "failed"
+INVALID = "invalid"
+
+
+class QueueFull(Exception):
+    """Admission rejected: the pending queue is at ``max_pending`` and
+    the shed policy chose to reject the newcomer."""
+
+    def __init__(self, request=None):
+        self.request = request
+        super().__init__("admission queue full")
+
+
+@dataclasses.dataclass
+class Request:
+    """One query row travelling through the loop."""
+
+    id: int
+    op: str                      # "rule_search" | "top_k" | "rules_with"
+    payload: object              # (ant, con) | prefix items | item id
+    kwargs: Dict                 # op kwargs (k / metric / role / ...)
+    tenant: str
+    deadline_ms: float           # budget from submit; inf = none
+    submit_s: float              # clock time at admission
+    key: Tuple = ()              # canonical whole-query key (dedup+cache)
+    bucket: Tuple = ()           # batchable group: (op, kwargs signature)
+    canon: object = None         # canonical payload for batch assembly
+
+    def expires_s(self) -> float:
+        if math.isinf(self.deadline_ms):
+            return math.inf
+        return self.submit_s + self.deadline_ms / 1e3
+
+
+@dataclasses.dataclass
+class Response:
+    id: int
+    op: str
+    tenant: str
+    status: str                  # OK / TIMEOUT / SHED / FAILED / INVALID
+    result: Optional[Dict] = None   # per-row numpy slice of the op output
+    degraded: bool = False       # answered over a dead-shard-masked plan
+    backend: str = ""            # "sharded"/"replicated"/"degraded"/"cache"
+    cache_hit: bool = False
+    retries: int = 0
+    latency_ms: float = 0.0
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+
+class LaunchPredictor:
+    """EWMA of measured service seconds per (bucket, pow2 batch size) —
+    the batch shaper's deadline oracle.  Unseen shapes predict
+    ``default_ms`` (0 by default: never preemptively time out before the
+    first observation)."""
+
+    def __init__(self, alpha: float = 0.3, default_ms: float = 0.0):
+        self.alpha = float(alpha)
+        self.default_ms = float(default_ms)
+        self._ewma_ms: Dict[Tuple, float] = {}
+
+    @staticmethod
+    def _shape(bucket: Tuple, batch: int) -> Tuple:
+        pow2 = 1 << max(int(batch) - 1, 0).bit_length()
+        return (*bucket, pow2)
+
+    def predict_ms(self, bucket: Tuple, batch: int) -> float:
+        return self._ewma_ms.get(self._shape(bucket, batch),
+                                 self.default_ms)
+
+    def observe(self, bucket: Tuple, batch: int, seconds: float) -> None:
+        key = self._shape(bucket, batch)
+        ms = float(seconds) * 1e3
+        prev = self._ewma_ms.get(key)
+        self._ewma_ms[key] = ms if prev is None else (
+            (1 - self.alpha) * prev + self.alpha * ms
+        )
+
+
+class TrieScheduler:
+    """Continuous-batching scheduler over a (resilient) trie engine.
+
+    ``engine`` may be a plain ``TrieQueryEngine`` (wrapped into a
+    ``ResilientTrieEngine`` automatically), an already-wrapped resilient
+    engine, or a fault-injected ``FaultyEngine`` wrapped by one.
+    """
+
+    def __init__(
+        self,
+        engine,
+        max_pending: int = 256,
+        max_batch: int = 64,
+        cache_size: int = 1024,
+        retry_policy: Optional[RetryPolicy] = None,
+        shed_policy: Union[str, Callable] = "reject_new",
+        clock=None,
+        timer: Optional[Callable[[], float]] = None,
+        seed: int = 0,
+        strict_admission: bool = True,
+        predictor: Optional[LaunchPredictor] = None,
+    ):
+        if not isinstance(engine, ResilientTrieEngine):
+            engine = ResilientTrieEngine(engine)
+        self.engine = engine
+        self.frozen = engine.frozen
+        # fixed query-matrix width: canonical rows are root paths, so the
+        # trie's max depth bounds them; padding every launch to this pow2
+        # width (and batches to pow2 rows) keeps the set of compiled
+        # kernel shapes bounded under arbitrary traffic — no
+        # recompile-per-batch-size storms.
+        depth = np.asarray(getattr(self.frozen, "node_depth", [1]))
+        max_w = int(depth.max()) if depth.size else 1
+        self._qwidth = 1 << max(max_w - 1, 0).bit_length()
+        self.max_pending = int(max_pending)
+        self.max_batch = int(max_batch)
+        self.retry_policy = retry_policy or RetryPolicy()
+        if isinstance(shed_policy, str) and shed_policy not in (
+            "reject_new", "drop_oldest"
+        ):
+            raise ValueError(
+                f"shed_policy {shed_policy!r} not in "
+                "('reject_new', 'drop_oldest') and not callable"
+            )
+        self.shed_policy = shed_policy
+        self.strict_admission = bool(strict_admission)
+        self.clock = clock or MonotonicClock()
+        self._timer = timer
+        self._rng = random.Random(seed)
+        self.predictor = predictor or LaunchPredictor()
+        self._pending: deque = deque()
+        self._cache: OrderedDict = OrderedDict()
+        self.cache_size = int(cache_size)
+        self.responses: Dict[int, Response] = {}
+        self._next_id = 0
+        self.stats = {
+            "submitted": 0, "ok": 0, "timeout": 0, "shed": 0,
+            "failed": 0, "invalid": 0, "cache_hits": 0,
+            "dedup_collapsed": 0, "retries": 0, "launches": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _canonicalize(self, op, payload, kwargs):
+        """→ ``(key, bucket, canon)``; raises ``InvalidQueryError`` on a
+        malformed payload (strict mode also rejects out-of-vocab ids —
+        poison never reaches a batch)."""
+        strict = self.strict_admission
+        rank = getattr(self.frozen, "item_rank", None)
+        if op == "rule_search":
+            ant, con = payload
+            validate_rule_pairs(
+                [(ant, con)], "rule_search_batch", item_rank=rank,
+                strict=strict,
+            )
+            rows, als = self.frozen.canonicalize_queries([ant], [con])
+            row = tuple(int(x) for x in np.asarray(rows)[0])
+            al = int(np.asarray(als)[0])
+            return ("rule_search", row, al), ("rule_search",), (row, al)
+        if op == "top_k":
+            validate_prefixes(
+                [payload], "top_k_rules_batch", item_rank=rank,
+                strict=strict,
+            )
+            crow = tuple(
+                int(x) for x in canonical_prefix_rows([payload], rank)[0]
+            )
+            sig = (
+                int(kwargs.get("k", 10)),
+                str(kwargs.get("metric", "confidence")),
+                int(kwargs.get("min_depth", 1)),
+            )
+            return ("top_k", crow, sig), ("top_k", sig), crow
+        if op == "rules_with":
+            it = validate_items(
+                [payload], "rules_with",
+                n_items=int(np.asarray(self.frozen.item_offsets).shape[0])
+                - 1,
+                strict=strict,
+            )[0]
+            sig = (
+                str(kwargs.get("role", "any")),
+                int(kwargs.get("k", 10)),
+                str(kwargs.get("metric", "confidence")),
+                int(kwargs.get("min_depth", 1)),
+            )
+            return ("rules_with", it, sig), ("rules_with", sig), it
+        raise InvalidQueryError(f"op {op!r} not in {OPS}")
+
+    def submit(
+        self,
+        op: str,
+        payload,
+        kwargs: Optional[Dict] = None,
+        deadline_ms: float = math.inf,
+        tenant: str = "default",
+    ) -> Request:
+        """Admit one request; raises ``QueueFull`` when the bounded queue
+        rejects it and ``InvalidQueryError`` on malformed payloads."""
+        kwargs = dict(kwargs or {})
+        try:
+            key, bucket, canon = self._canonicalize(op, payload, kwargs)
+        except InvalidQueryError:
+            self.stats["invalid"] += 1
+            raise
+        if len(self._pending) >= self.max_pending:
+            victim = self._pick_victim()
+            if victim is None:
+                self.stats["shed"] += 1
+                raise QueueFull()
+            self._pending.remove(victim)
+            self._finish(victim, Response(
+                id=victim.id, op=victim.op, tenant=victim.tenant,
+                status=SHED, error="shed by drop_oldest policy",
+            ))
+        req = Request(
+            id=self._next_id, op=op, payload=payload, kwargs=kwargs,
+            tenant=tenant, deadline_ms=float(deadline_ms),
+            submit_s=self.clock.now(), key=key, bucket=bucket,
+            canon=canon,
+        )
+        self._next_id += 1
+        self.stats["submitted"] += 1
+        self._pending.append(req)
+        return req
+
+    def _pick_victim(self) -> Optional[Request]:
+        if callable(self.shed_policy):
+            return self.shed_policy(self._pending)
+        if self.shed_policy == "drop_oldest" and self._pending:
+            return self._pending[0]
+        return None            # reject_new
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------------
+    # the serve step
+    # ------------------------------------------------------------------
+    def step(self) -> List[Response]:
+        """Expire deadlines, serve cache hits, launch ONE shaped batch.
+        Returns the responses completed by this step (possibly empty)."""
+        done: List[Response] = []
+        self._expire(done)
+        if not self._pending:
+            return done
+
+        # shape one batch: the head request's bucket, arrival order
+        bucket = self._pending[0].bucket
+        batch: List[Request] = []
+        keep: deque = deque()
+        while self._pending:
+            r = self._pending.popleft()
+            if r.bucket == bucket and len(batch) < self.max_batch:
+                batch.append(r)
+            else:
+                keep.append(r)
+        self._pending = keep
+
+        # cache hits never touch the kernels
+        misses: List[Request] = []
+        for r in batch:
+            hit = self._cache_get(r.key)
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+                done.append(self._finish(r, self._respond_ok(
+                    r, hit, backend="cache", cache_hit=True,
+                )))
+            else:
+                misses.append(r)
+        if not misses:
+            return done
+
+        # whole-query dedup inside the batch
+        unique: "OrderedDict[Tuple, List[Request]]" = OrderedDict()
+        for r in misses:
+            unique.setdefault(r.key, []).append(r)
+        self.stats["dedup_collapsed"] += len(misses) - len(unique)
+
+        # the deadline shaper: predicted service for THIS bucket shape —
+        # a request that cannot survive the launch times out now rather
+        # than riding (and slowing) a batch it will miss anyway
+        predicted_ms = self.predictor.predict_ms(bucket, len(unique))
+        now = self.clock.now()
+        live: "OrderedDict[Tuple, List[Request]]" = OrderedDict()
+        for key, reqs in unique.items():
+            still = []
+            for r in reqs:
+                if now + predicted_ms / 1e3 > r.expires_s():
+                    done.append(self._finish(r, Response(
+                        id=r.id, op=r.op, tenant=r.tenant, status=TIMEOUT,
+                        error=(
+                            f"predicted launch {predicted_ms:.1f}ms "
+                            f"busts deadline {r.deadline_ms:.1f}ms"
+                        ),
+                        latency_ms=(now - r.submit_s) * 1e3,
+                    )))
+                else:
+                    still.append(r)
+            if still:
+                live[key] = still
+        if not live:
+            return done
+
+        done.extend(self._launch(bucket, live))
+        return done
+
+    def drain(self, max_steps: int = 100000) -> List[Response]:
+        """Step until the queue is empty; returns responses in completion
+        order."""
+        out: List[Response] = []
+        for _ in range(max_steps):
+            if not self._pending:
+                break
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------------
+    # launch machinery
+    # ------------------------------------------------------------------
+    def _launch(self, bucket, live) -> List[Response]:
+        """One kernel launch over the unique rows (with retry/backoff and
+        shard-failure failover), then scatter rows to every duplicate."""
+        op = bucket[0]
+        keys = list(live.keys())
+        retries = {"n": 0}
+
+        def on_retry(attempt, exc):
+            retries["n"] += 1
+            self.stats["retries"] += 1
+
+        c0 = self.clock.now()
+        t0 = self._timer() if self._timer is not None else None
+        try:
+            (result, info), _ = retry_call(
+                lambda: self._execute(op, [live[k][0] for k in keys]),
+                self.retry_policy, self.clock, self._rng,
+                on_retry=on_retry,
+            )
+        except InvalidQueryError:
+            # poison in the batch: isolate per unique row so one bad
+            # query cannot fail its batchmates
+            return self._launch_isolated(op, live, retries)
+        except Exception as exc:  # noqa: BLE001 - reported per request
+            return [
+                self._finish(r, Response(
+                    id=r.id, op=r.op, tenant=r.tenant, status=FAILED,
+                    retries=retries["n"], error=repr(exc),
+                    latency_ms=(self.clock.now() - r.submit_s) * 1e3,
+                ))
+                for reqs in live.values() for r in reqs
+            ]
+        dt_real = (
+            self._timer() - t0 if self._timer is not None else 0.0
+        )
+        if dt_real:
+            # charge measured kernel service time to the virtual timeline
+            self.clock.sleep(dt_real)
+        # virtual-clock runs: injected latency shows in the clock delta
+        # (the timer charge was just added); real-clock runs: the clock
+        # delta IS the measured elapsed time
+        service_s = max(self.clock.now() - c0, dt_real)
+        self.stats["launches"] += 1
+        self.predictor.observe(bucket, len(keys), service_s)
+
+        rows = self._slice_rows(op, result, len(keys))
+        out: List[Response] = []
+        for i, key in enumerate(keys):
+            row = rows[i]
+            if not info["degraded"]:
+                self._cache_put(key, row)
+            for r in live[key]:
+                out.append(self._finish(r, self._respond_ok(
+                    r, row, backend=info["backend"],
+                    degraded=info["degraded"], retries=retries["n"],
+                )))
+        return out
+
+    def _launch_isolated(self, op, live, retries) -> List[Response]:
+        out: List[Response] = []
+        for key, reqs in live.items():
+            try:
+                (result, info), _ = retry_call(
+                    lambda: self._execute(op, [reqs[0]]),
+                    self.retry_policy, self.clock, self._rng,
+                )
+            except Exception as exc:  # noqa: BLE001
+                status = (
+                    INVALID if isinstance(exc, InvalidQueryError)
+                    else FAILED
+                )
+                for r in reqs:
+                    out.append(self._finish(r, Response(
+                        id=r.id, op=r.op, tenant=r.tenant, status=status,
+                        error=repr(exc),
+                        latency_ms=(
+                            self.clock.now() - r.submit_s
+                        ) * 1e3,
+                    )))
+                continue
+            self.stats["launches"] += 1
+            row = self._slice_rows(op, result, 1)[0]
+            if not info["degraded"]:
+                self._cache_put(key, row)
+            for r in reqs:
+                out.append(self._finish(r, self._respond_ok(
+                    r, row, backend=info["backend"],
+                    degraded=info["degraded"], retries=retries["n"],
+                )))
+        return out
+
+    def _execute(self, op: str, reps: Sequence[Request]):
+        """One engine call over the representative requests' canonical
+        payloads (all share the batch bucket, so kwargs agree).
+
+        Launch shapes are normalized — batch rows pad to the next power
+        of two and query rows to the fixed ``_qwidth`` — so a stream of
+        arbitrary batch compositions compiles a bounded set of kernels.
+        Pad rows are distinct absent-item queries (ids ``-2-i``: live
+        negatives, never matched, never collapsed by downstream dedup),
+        so they cost one empty descent each and the first ``len(reps)``
+        output rows are untouched.
+        """
+        kw = reps[0].kwargs
+        n = len(reps)
+        npad = 1 << max(n - 1, 0).bit_length()
+        if op == "rule_search":
+            width = max(self._qwidth,
+                        max(len(r.canon[0]) for r in reps), 1)
+            q = np.full((n, width), -1, np.int32)
+            al = np.zeros((n,), np.int32)
+            for i, r in enumerate(reps):
+                row, a = r.canon
+                q[i, : len(row)] = row
+                al[i] = a
+            # batch pow2 padding happens inside rule_search_batch's
+            # whole-query dedup (ops.dedup_query_rows)
+            return self.engine.query("rule_search_batch", q, al)
+        if op == "top_k":
+            width = max(self._qwidth,
+                        max((len(r.canon) for r in reps), default=0), 1)
+            mat = np.full((npad, width), -1, np.int32)
+            for i, r in enumerate(reps):
+                mat[i, : len(r.canon)] = r.canon
+            # pad rows query an absent item -> empty [0, 0) range
+            mat[n:, 0] = -2
+            return self.engine.query(
+                "top_k_rules_batch", mat,
+                int(kw.get("k", 10)),
+                metric=kw.get("metric", "confidence"),
+                min_depth=int(kw.get("min_depth", 1)),
+            )
+        # distinct absent pad items keep the op's internal unique count
+        # at exactly npad (a pow2) instead of an arbitrary n+1
+        items = [r.canon for r in reps]
+        items += [-2 - i for i in range(npad - n)]
+        return self.engine.query(
+            "rules_with", items,
+            role=kw.get("role", "any"), k=int(kw.get("k", 10)),
+            metric=kw.get("metric", "confidence"),
+            min_depth=int(kw.get("min_depth", 1)),
+        )
+
+    @staticmethod
+    def _slice_rows(op: str, result: Dict, n: int) -> List[Dict]:
+        host = {k: np.asarray(v) for k, v in result.items()}
+        return [
+            {k: v[i] for k, v in host.items()} for i in range(n)
+        ]
+
+    # ------------------------------------------------------------------
+    # responses / cache / deadlines
+    # ------------------------------------------------------------------
+    def _respond_ok(
+        self, r: Request, row: Dict, backend: str,
+        degraded: bool = False, cache_hit: bool = False, retries: int = 0,
+    ) -> Response:
+        return Response(
+            id=r.id, op=r.op, tenant=r.tenant, status=OK, result=row,
+            degraded=degraded, backend=backend, cache_hit=cache_hit,
+            retries=retries,
+            latency_ms=(self.clock.now() - r.submit_s) * 1e3,
+        )
+
+    def _finish(self, r: Request, resp: Response) -> Response:
+        self.stats[resp.status] = self.stats.get(resp.status, 0) + 1
+        self.responses[r.id] = resp
+        return resp
+
+    def _expire(self, done: List[Response]) -> None:
+        now = self.clock.now()
+        keep: deque = deque()
+        while self._pending:
+            r = self._pending.popleft()
+            if now > r.expires_s():
+                done.append(self._finish(r, Response(
+                    id=r.id, op=r.op, tenant=r.tenant, status=TIMEOUT,
+                    error="deadline expired in queue",
+                    latency_ms=(now - r.submit_s) * 1e3,
+                )))
+            else:
+                keep.append(r)
+        self._pending = keep
+
+    def _cache_get(self, key):
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        return None
+
+    def _cache_put(self, key, row) -> None:
+        if self.cache_size <= 0:
+            return
+        self._cache[key] = row
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    @property
+    def cache_len(self) -> int:
+        return len(self._cache)

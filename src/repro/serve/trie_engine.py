@@ -44,6 +44,7 @@ class TrieQueryEngine:
         mesh=None,
         mode: str = "auto",
         shard_threshold_nodes: int = DEFAULT_SHARD_THRESHOLD,
+        plan=None,
     ):
         if mode not in ("auto", "replicated", "sharded"):
             raise ValueError(
@@ -55,6 +56,13 @@ class TrieQueryEngine:
         self._edges = None
         self._dfs_arrays = None
         self._item_arrays = None
+        if plan is not None:
+            # pre-built (possibly dead-shard-masked) ShardPlan injection:
+            # the resilience layer's degraded engines hand their masked
+            # plan straight in, skipping the (re)partitioning work
+            self.plan = plan
+            self.mesh = plan.mesh
+            return
         if mode != "replicated" and mesh is None and jax.device_count() > 1:
             from repro.launch.mesh import make_trie_mesh
 

@@ -2,6 +2,9 @@
 
 - ``StragglerDetector``: per-step wall-time EWMA + deviation score; flags
   sustained slowdowns (the signal a real fleet uses to evict a slow host).
+  The implementation now lives in ``distributed.health`` — the serve
+  loop's ``ShardHealth`` reuses the same detector for slow-shard
+  demotion — and is re-exported here for existing call sites.
 - ``remesh_state``: reshard a (params, opt_state) pytree onto a new mesh —
   the elastic-scaling primitive used after shrinking/growing the device
   pool.  Works from host-replicated arrays (restored checkpoints), so the
@@ -9,45 +12,13 @@
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
-
 import jax
 from jax.sharding import Mesh, NamedSharding
 
+from repro.distributed.health import StragglerDetector
 from repro.distributed.sharding import logical_to_spec
 
-
-@dataclasses.dataclass
-class StragglerDetector:
-    alpha: float = 0.1            # EWMA weight
-    threshold: float = 2.0        # flag when step > threshold × EWMA
-    patience: int = 3             # consecutive slow steps before firing
-    _ewma: Optional[float] = None
-    _var: float = 0.0
-    _slow_streak: int = 0
-    events: List[dict] = dataclasses.field(default_factory=list)
-
-    def observe(self, step: int, seconds: float) -> bool:
-        """Returns True when a sustained straggle is detected."""
-        if self._ewma is None:
-            self._ewma = seconds
-            return False
-        slow = seconds > self.threshold * self._ewma
-        if slow:
-            self._slow_streak += 1
-        else:
-            self._slow_streak = 0
-            self._ewma = (
-                (1 - self.alpha) * self._ewma + self.alpha * seconds
-            )
-        if self._slow_streak >= self.patience:
-            self.events.append(
-                {"step": step, "seconds": seconds, "ewma": self._ewma}
-            )
-            self._slow_streak = 0
-            return True
-        return False
+__all__ = ["StragglerDetector", "remesh_state"]
 
 
 def remesh_state(tree, axes_tree, new_mesh: Mesh):

@@ -293,6 +293,19 @@ def test_top_k_rules_batch_oracle_parity(frozen):
     _assert_same(out_k, out_o, ("values", "node", "dfs_pos"))
 
 
+def test_top_k_rules_batch_matrix_minus_one_is_padding(frozen):
+    """The top_k_rules_batch ENTRY POINT must preserve an already-padded
+    [Q, P] matrix end to end (the serve scheduler launches exactly this
+    shape) — a normalization layer that list()-ifies it turns the -1
+    padding into literal absent items and every padded row goes empty."""
+    fz = frozen(0.25)
+    it = int(fz.item_order[0])
+    mat = np.array([[it, -1, -1], [-1, -1, -1]], np.int32)
+    out_m = top_k_rules_batch(fz, mat, 5, "confidence")
+    out_r = top_k_rules_batch(fz, [(it,), ()], 5, "confidence")
+    _assert_same(out_m, out_r, ("values", "node", "dfs_pos"))
+
+
 def test_top_k_rules_batch_q0(frozen):
     fz = frozen(0.25)
     out = top_k_rules_batch(fz, [], 4, "confidence")
