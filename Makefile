@@ -3,7 +3,8 @@ export PYTHONPATH := src
 
 .PHONY: test test-fast test-slow test-multidevice lint bench-smoke \
 	bench-gate bench-baseline bench-search bench-topk bench-build \
-	bench-batched bench-traversal bench-sharded bench-serve bench
+	bench-batched bench-traversal bench-sharded bench-serve bench \
+	autotune autotune-smoke
 
 # 8 simulated CPU devices for the sharded-trie tier (tests + benches)
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -60,48 +61,12 @@ bench-smoke:
 		--json-out-batched '' \
 		--json-out-serve BENCH_serve_smoke.json
 
-# CI bench gates: fresh smoke runs vs the committed baselines
-# (benchmarks/baselines/, ratio-based: fail on >2x relative slowdown of
-# an in-run speedup — fused rule search, segmented top-k, array build)
+# CI bench gate: every lane in benchmarks/gates.json gets a fresh smoke
+# run and is gated against its committed baseline (ratio-based; per-lane
+# run spec, env, and slack all live in the manifest — including the
+# autotune sweep and the compiled-mode lane, which SKIPs on CPU hosts)
 bench-gate:
-	$(PY) -m benchmarks.run --only rule_search_kernels --smoke \
-		--json-out /tmp/bench_fresh_smoke.json --json-out-topk '' \
-		--json-out-build '' --json-out-batched ''
-	$(PY) benchmarks/check_regression.py \
-		--fresh /tmp/bench_fresh_smoke.json
-	$(PY) -m benchmarks.run --only topk --smoke \
-		--json-out '' --json-out-topk /tmp/bench_fresh_topk.json \
-		--json-out-build '' --json-out-batched ''
-	$(PY) benchmarks/check_regression.py \
-		--fresh /tmp/bench_fresh_topk.json
-	$(PY) -m benchmarks.run --only build_engines --smoke \
-		--json-out '' --json-out-topk '' \
-		--json-out-build /tmp/bench_fresh_build.json --json-out-batched ''
-	$(PY) benchmarks/check_regression.py \
-		--fresh /tmp/bench_fresh_build.json
-	$(PY) -m benchmarks.run --only batched_query --smoke \
-		--json-out '' --json-out-topk '' --json-out-build '' \
-		--json-out-batched /tmp/bench_fresh_batched.json
-	$(PY) benchmarks/check_regression.py \
-		--fresh /tmp/bench_fresh_batched.json
-	$(PY) -m benchmarks.run --only traversal --smoke \
-		--json-out '' --json-out-topk '' --json-out-build '' \
-		--json-out-batched '' \
-		--json-out-traversal /tmp/bench_fresh_traversal.json
-	$(PY) benchmarks/check_regression.py \
-		--fresh /tmp/bench_fresh_traversal.json
-	$(MULTIDEV) $(PY) -m benchmarks.run --only sharded_query --smoke \
-		--json-out '' --json-out-topk '' --json-out-build '' \
-		--json-out-batched '' \
-		--json-out-sharded /tmp/bench_fresh_sharded.json
-	$(PY) benchmarks/check_regression.py --max-ratio 3.0 \
-		--fresh /tmp/bench_fresh_sharded.json
-	$(PY) -m benchmarks.run --only serve_loop --smoke \
-		--json-out '' --json-out-topk '' --json-out-build '' \
-		--json-out-batched '' \
-		--json-out-serve /tmp/bench_fresh_serve.json
-	$(PY) benchmarks/check_regression.py \
-		--fresh /tmp/bench_fresh_serve.json
+	$(PY) benchmarks/check_regression.py --run-all
 
 # refresh the committed gate baselines (explicit — bench-smoke never
 # touches them)
@@ -131,6 +96,19 @@ bench-baseline:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-serve benchmarks/baselines/serve_smoke.json
+	$(PY) -m benchmarks.autotune --smoke --no-write-table \
+		--json-out benchmarks/baselines/autotune_smoke.json
+
+# full per-backend kernel autotune: sweeps every tuning knob over its
+# pow2 grid with bit-parity asserted against the jnp oracles at every
+# point, then commits the winner table to benchmarks/tuning/<backend>.json
+autotune:
+	$(PY) -m benchmarks.autotune --json-out BENCH_autotune.json
+
+# CI-sized sweep (tiny trie, reduced grids); never writes the table
+autotune-smoke:
+	$(PY) -m benchmarks.autotune --smoke --no-write-table \
+		--json-out BENCH_autotune_smoke.json
 
 # full rule-search kernel comparison (seed sweep vs CSR fused vs oracles)
 bench-search:

@@ -1,107 +1,63 @@
-"""CI bench gate: fail on kernel / construction-engine regressions.
+"""Manifest-driven CI bench gate: fail on kernel / engine regressions.
 
-Compares a fresh ``--smoke`` bench JSON against the committed baseline for
-the SAME bench kind.  Every gate is RATIO-based so it tolerates hardware
-differences between the baseline machine and the CI runner: what is
-compared is a speedup *measured within the same run*, never absolute
-microseconds.  A fresh speedup below ``baseline / max-ratio`` for any
-matching config fails the gate.
+Every gate lane lives in ``benchmarks/gates.json`` — one entry per lane
+naming its committed baseline, config-key fields, gated ratio metric(s),
+slack (``max_ratio``), and the command that produces a fresh ``--smoke``
+JSON.  Adding a lane (the autotune sweep, a compiled-mode lane) is a
+manifest edit, not new Python.
 
-Seven bench kinds are gated (auto-detected from the fresh JSON's
-``bench`` field):
+Every gate is RATIO-based so it tolerates hardware differences between
+the baseline machine and the CI runner: what is compared is a speedup
+*measured within the same run*, never absolute microseconds.  A fresh
+higher-is-better speedup below ``baseline / max_ratio`` fails; a
+lower-is-better metric (a lane's ``metrics`` list — the serve loop's
+p99/p50 tail ratio and shed rate) fails above
+``baseline * max_ratio + atol`` (the additive ``atol`` keeps zero-valued
+baselines from turning into impossible zero ceilings).
 
-========================  ==============================  =====================
-kind                      in-run quantity gated           config key
-========================  ==============================  =====================
-``rule_search_kernels``   fused kernel vs seed sweep      (n_edges, batch)
-``topk_rank``             segmented kernel vs full sort   (n_nodes, k, metric)
-``build_engines``         array engine vs pointer build   (dataset, n_sequences)
-``batched_query``         one-launch batch vs Q launches  (op, n_edges, batch)
-``traversal``             trie_reduce kernel vs flat walk (dataset, minsup)
-``sharded_query``         sharded engine vs single device (op, n_edges, n_shards)
-``serve``                 p99/p50 tail ratio + shed rate  (load,)
-========================  ==============================  =====================
+Comparison is over the key INTERSECTION of baseline and fresh results:
+the sharded lane's baseline may hold shard counts beyond the runner's
+visible devices and those keys simply don't gate.  An empty intersection
+is an error.  On failure the offending result records are printed as a
+field-by-field JSON diff (baseline vs fresh), not just the bare ratio.
 
-Most kinds gate one higher-is-better in-run speedup.  A kind may instead
-declare a ``metrics`` list of LOWER-is-better quantities (the serve
-loop's p99/p50 tail ratio and shed rate): each fails when the fresh
-value exceeds ``baseline * max-ratio + atol`` — the additive ``atol``
-keeps zero-valued baselines (no shedding at low load) from turning into
-impossible zero ceilings.
+Two modes:
 
-The sharded_query gate needs a multi-device host for its P sweep —
-``make bench-sharded`` / the CI recipes export
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``; keys for shard
-counts beyond the visible devices are absent from the fresh JSON and
-simply don't gate (the comparison is over the key intersection).
+``--run-all``
+    Run every manifest lane's bench subprocess (passing ``''`` for every
+    other JSON flag so committed ``BENCH_*.json`` artifacts are never
+    clobbered), gate each against its committed baseline, print a
+    per-lane pass/fail table — also appended as markdown to
+    ``$GITHUB_STEP_SUMMARY`` when set — and exit non-zero on any
+    failure.  A ``requires: compiled`` lane that produced no JSON (the
+    runner printed its skip marker on a CPU-only host and exited 0)
+    reports SKIP, not FAIL.
+
+``--fresh PATH [--baseline PATH] [--max-ratio R]``
+    Back-compat single-lane mode: gate one already-produced JSON.  The
+    lane is auto-detected from the payload's ``bench`` field.
 
 The committed baselines live under ``benchmarks/baselines/`` and are
 refreshed only by the explicit ``make bench-baseline`` target — routine
-``make bench-smoke`` runs write elsewhere and can never silently rebase a
-gate.
-
-Usage (see ``make bench-gate``)::
-
-    python -m benchmarks.run --only rule_search_kernels --smoke \
-        --json-out /tmp/bench_fresh_smoke.json --json-out-topk '' \
-        --json-out-build ''
-    python benchmarks/check_regression.py \
-        --fresh /tmp/bench_fresh_smoke.json
+``make bench-smoke`` runs write elsewhere and can never silently rebase
+a gate.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
+import tempfile
 
-GATES = {
-    "rule_search_kernels": {
-        "key": ("n_edges", "batch"),
-        "metric": "speedup_fused_vs_sweep",
-        "label": "fused_vs_sweep",
-        "baseline": "benchmarks/baselines/rule_search_smoke.json",
-    },
-    "topk_rank": {
-        "key": ("n_nodes", "k", "metric"),
-        "metric": "speedup_kernel_vs_fullsort",
-        "label": "kernel_vs_fullsort",
-        "baseline": "benchmarks/baselines/topk_smoke.json",
-    },
-    "build_engines": {
-        "key": ("dataset", "n_sequences"),
-        "metric": "speedup_arrays_vs_pointer",
-        "label": "arrays_vs_pointer",
-        "baseline": "benchmarks/baselines/build_smoke.json",
-    },
-    "batched_query": {
-        "key": ("op", "n_edges", "batch"),
-        "metric": "speedup_batched_vs_loop",
-        "label": "batched_vs_loop",
-        "baseline": "benchmarks/baselines/batched_query_smoke.json",
-    },
-    "traversal": {
-        "key": ("dataset", "minsup"),
-        "metric": "speedup_kernel_vs_flat",
-        "label": "kernel_vs_flat",
-        "baseline": "benchmarks/baselines/traversal_smoke.json",
-    },
-    "sharded_query": {
-        "key": ("op", "n_edges", "n_shards"),
-        "metric": "speedup_sharded_vs_single",
-        "label": "sharded_vs_single",
-        "baseline": "benchmarks/baselines/sharded_query_smoke.json",
-    },
-    "serve": {
-        "key": ("load",),
-        "metrics": [
-            {"metric": "p99_over_p50", "label": "p99/p50",
-             "atol": 1.0},
-            {"metric": "shed_rate", "label": "shed_rate",
-             "atol": 0.05},
-        ],
-        "baseline": "benchmarks/baselines/serve_smoke.json",
-    },
-}
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MANIFEST = os.path.join(REPO, "benchmarks", "gates.json")
+
+
+def load_manifest(path: str = MANIFEST) -> dict:
+    with open(path) as f:
+        return json.load(f)
 
 
 def load_payload(path: str):
@@ -120,19 +76,46 @@ def index_results(payload, key_fields):
     }
 
 
-def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
-    fresh_payload = load_payload(fresh_path)
-    kind = fresh_payload.get("bench")
-    gate = GATES.get(kind)
-    if gate is None:
-        print(
-            f"bench-gate: unknown bench kind {kind!r} in {fresh_path} "
-            f"(known: {sorted(GATES)})", file=sys.stderr,
+def record_diff(kind: str, cfg: str, base: dict, fresh: dict) -> str:
+    """Field-by-field JSON diff of the offending result records."""
+    lines = [f"bench-gate[{kind}] {cfg}: baseline vs fresh record diff:"]
+    for field in sorted(set(base) | set(fresh)):
+        b, f = base.get(field), fresh.get(field)
+        if b == f:
+            continue
+        lines.append(
+            f"  {field}: {json.dumps(b, default=str)} -> "
+            f"{json.dumps(f, default=str)}"
         )
-        return 2
+    return "\n".join(lines)
+
+
+def check_lane(
+    name: str,
+    lane: dict,
+    fresh_path: str,
+    baseline_path=None,
+    max_ratio=None,
+    default_max_ratio: float = 2.0,
+) -> int:
+    """Gate one lane's fresh JSON.  Returns 0 pass / 1 fail / 2 error."""
+    if max_ratio is None:
+        max_ratio = float(lane.get("max_ratio", default_max_ratio))
     if baseline_path is None:
-        baseline_path = gate["baseline"]
+        baseline_path = os.path.join(REPO, lane["baseline"])
+    if not os.path.exists(baseline_path):
+        if lane.get("allow_missing_baseline"):
+            print(
+                f"bench-gate[{name}]: no committed baseline at "
+                f"{lane['baseline']} for this backend — record-only pass"
+            )
+            return 0
+        print(f"bench-gate: missing baseline {baseline_path}",
+              file=sys.stderr)
+        return 2
+    fresh_payload = load_payload(fresh_path)
     baseline_payload = load_payload(baseline_path)
+    kind = fresh_payload.get("bench")
     if baseline_payload.get("bench") != kind:
         print(
             f"bench-gate: baseline {baseline_path} is "
@@ -140,35 +123,35 @@ def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
             file=sys.stderr,
         )
         return 2
-    baseline = index_results(baseline_payload, gate["key"])
-    fresh = index_results(fresh_payload, gate["key"])
+    key_fields = tuple(lane["key"])
+    baseline = index_results(baseline_payload, key_fields)
+    fresh = index_results(fresh_payload, key_fields)
     common = sorted(set(baseline) & set(fresh), key=str)
     if not common:
         print(
-            f"bench-gate[{kind}]: no overlapping configs between "
+            f"bench-gate[{name}]: no overlapping configs between "
             f"{baseline_path} and {fresh_path}", file=sys.stderr,
         )
         return 2
-    # higher-is-better single speedup (legacy) vs a declared list of
-    # lower-is-better metrics (the serve SLO gate)
-    lower_metrics = gate.get("metrics")
+    lower_metrics = lane.get("metrics")
     failures = 0
     checks = 0
     for key in common:
-        cfg = ",".join(f"{k}={v}" for k, v in zip(gate["key"], key))
+        cfg = ",".join(f"{k}={v}" for k, v in zip(key_fields, key))
         if lower_metrics is None:
-            base = float(baseline[key][gate["metric"]])
-            new = float(fresh[key][gate["metric"]])
+            base = float(baseline[key][lane["metric"]])
+            new = float(fresh[key][lane["metric"]])
             floor = base / max_ratio
             verdict = "OK" if new >= floor else "REGRESSION"
             print(
-                f"bench-gate[{kind}] {cfg}: {gate['label']} "
+                f"bench-gate[{name}] {cfg}: {lane['label']} "
                 f"baseline=x{base:.2f} fresh=x{new:.2f} "
                 f"floor=x{floor:.2f} -> {verdict}"
             )
             checks += 1
             if new < floor:
                 failures += 1
+                print(record_diff(name, cfg, baseline[key], fresh[key]))
             continue
         for m in lower_metrics:
             base = float(baseline[key][m["metric"]])
@@ -176,45 +159,167 @@ def check(baseline_path: str, fresh_path: str, max_ratio: float) -> int:
             ceil = base * max_ratio + float(m.get("atol", 0.0))
             verdict = "OK" if new <= ceil else "REGRESSION"
             print(
-                f"bench-gate[{kind}] {cfg}: {m['label']} "
+                f"bench-gate[{name}] {cfg}: {m['label']} "
                 f"baseline={base:.3f} fresh={new:.3f} "
                 f"ceiling={ceil:.3f} -> {verdict}"
             )
             checks += 1
             if new > ceil:
                 failures += 1
+                print(record_diff(name, cfg, baseline[key], fresh[key]))
     if failures:
         print(
-            f"bench-gate[{kind}]: {failures}/{checks} check(s) "
+            f"bench-gate[{name}]: {failures}/{checks} check(s) "
             f"regressed >{max_ratio:.1f}x vs {baseline_path}",
             file=sys.stderr,
         )
         return 1
-    print(
-        f"bench-gate[{kind}]: {checks} check(s) within "
-        f"{max_ratio:.1f}x"
-    )
+    print(f"bench-gate[{name}]: {checks} check(s) within {max_ratio:.1f}x")
     return 0
+
+
+def lane_command(lane: dict, manifest: dict, fresh: str):
+    """Build the subprocess argv that produces a lane's fresh JSON."""
+    run = lane["run"]
+    if "module" in run:
+        return [sys.executable, "-m", run["module"]] + [
+            a.replace("{fresh}", fresh) for a in run.get("args", [])
+        ]
+    cmd = [sys.executable, "-m", "benchmarks.run",
+           "--only", run["only"], "--smoke"]
+    cmd += run.get("extra_args", [])
+    for flag in manifest["json_flags"]:
+        cmd += [flag, fresh if flag == run["json_flag"] else ""]
+    return cmd
+
+
+def run_lane(name: str, lane: dict, manifest: dict, fresh_dir: str):
+    """Run one lane's bench subprocess.
+
+    Returns (fresh_path, status, log): status is "ran" | "skip" |
+    "error".
+    """
+    fresh = os.path.join(fresh_dir, f"{name}.json")
+    cmd = lane_command(lane, manifest, fresh)
+    env = dict(os.environ)
+    env.update(lane["run"].get("env", {}))
+    env.setdefault("PYTHONPATH", os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        cmd, cwd=REPO, env=env, capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        return fresh, "error", proc.stdout + proc.stderr
+    if not os.path.exists(fresh):
+        if lane.get("requires") == "compiled":
+            return fresh, "skip", proc.stdout
+        return fresh, "error", (
+            f"bench wrote no JSON at {fresh}\n{proc.stdout}{proc.stderr}"
+        )
+    return fresh, "ran", None
+
+
+def write_step_summary(rows) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write("## Bench gate\n\n| lane | status |\n|---|---|\n")
+        for name, status in rows:
+            icon = {"PASS": "✅", "SKIP": "⏭️"}.get(status, "❌")
+            f.write(f"| {name} | {icon} {status} |\n")
+        f.write("\n")
+
+
+def run_all(manifest: dict, only=None) -> int:
+    rows = []
+    failed = []
+    default_ratio = float(manifest.get("default_max_ratio", 2.0))
+    with tempfile.TemporaryDirectory(prefix="bench_gate_") as fresh_dir:
+        for name, lane in manifest["lanes"].items():
+            if only and only not in name:
+                continue
+            print(f"=== bench-gate lane: {name} ===", flush=True)
+            fresh, status, log = run_lane(name, lane, manifest, fresh_dir)
+            if status == "skip":
+                print(f"bench-gate[{name}]: SKIP "
+                      f"(requires {lane.get('requires')})")
+                rows.append((name, "SKIP"))
+                continue
+            if status == "error":
+                print(f"bench-gate[{name}]: bench run failed\n{log}")
+                rows.append((name, "FAIL"))
+                failed.append(name)
+                continue
+            rc = check_lane(name, lane, fresh,
+                            default_max_ratio=default_ratio)
+            rows.append((name, "PASS" if rc == 0 else "FAIL"))
+            if rc != 0:
+                failed.append(name)
+    write_step_summary(rows)
+    if failed:
+        print(f"bench-gate: FAILED lanes: {', '.join(failed)}",
+              file=sys.stderr)
+        return 1
+    print(f"bench-gate: all {len(rows)} lane(s) passed")
+    return 0
+
+
+def detect_lane(manifest: dict, fresh_path: str):
+    """Back-compat single-file mode: match the payload's bench kind to a
+    manifest lane (skipping gated-off ``requires`` lanes, whose bench
+    kind collides with their interpret-mode sibling)."""
+    kind = load_payload(fresh_path).get("bench")
+    for name, lane in manifest["lanes"].items():
+        if lane.get("requires"):
+            continue
+        base = os.path.join(REPO, lane["baseline"])
+        if os.path.exists(base) and \
+                load_payload(base).get("bench") == kind:
+            return name, lane
+    print(
+        f"bench-gate: no manifest lane matches bench kind {kind!r} "
+        f"in {fresh_path}", file=sys.stderr,
+    )
+    sys.exit(2)
 
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
+        "--run-all", action="store_true",
+        help="run every manifest lane's bench and gate it",
+    )
+    parser.add_argument(
+        "--only", default=None,
+        help="with --run-all: substring filter on lane names",
+    )
+    parser.add_argument(
+        "--fresh", default=None,
+        help="single-lane mode: freshly produced smoke JSON to gate",
+    )
+    parser.add_argument(
         "--baseline", default=None,
-        help="committed smoke baseline JSON (default: the kind's file "
-             "under benchmarks/baselines/)",
+        help="single-lane mode: baseline override (default: the lane's "
+             "file under benchmarks/baselines/)",
     )
     parser.add_argument(
-        "--fresh", required=True,
-        help="freshly produced smoke JSON to gate",
+        "--max-ratio", type=float, default=None,
+        help="single-lane mode: slack override (default: the lane's "
+             "manifest value)",
     )
-    parser.add_argument(
-        "--max-ratio", type=float, default=2.0,
-        help="maximum tolerated relative slowdown of the in-run speedup "
-             "(default 2.0)",
-    )
+    parser.add_argument("--manifest", default=MANIFEST)
     args = parser.parse_args()
-    sys.exit(check(args.baseline, args.fresh, args.max_ratio))
+    manifest = load_manifest(args.manifest)
+    if args.run_all:
+        sys.exit(run_all(manifest, only=args.only))
+    if not args.fresh:
+        parser.error("need --run-all or --fresh PATH")
+    name, lane = detect_lane(manifest, args.fresh)
+    sys.exit(check_lane(
+        name, lane, args.fresh,
+        baseline_path=args.baseline, max_ratio=args.max_ratio,
+        default_max_ratio=float(manifest.get("default_max_ratio", 2.0)),
+    ))
 
 
 if __name__ == "__main__":

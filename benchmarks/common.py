@@ -70,6 +70,32 @@ def paired_t_test(a: Sequence[float], b: Sequence[float]) -> Tuple[float, float]
     return t, p
 
 
+def bench_interpret() -> bool:
+    """Interpret-vs-compiled mode for every bench lane's kernel calls —
+    ONE decision (``repro.kernels.ops.interpret_mode``), honoring the
+    ``REPRO_FORCE_INTERPRET`` override ``run.py --compiled`` sets."""
+    from repro.kernels.ops import interpret_mode
+
+    return interpret_mode()
+
+
+def bench_mode_fields() -> dict:
+    """Provenance fields every bench JSON payload carries: execution mode
+    (interpret vs compiled), backend, and the active tuning knobs — so a
+    committed baseline is attributable to the configuration that made it."""
+    import dataclasses
+
+    import jax
+
+    from repro.kernels.tuning import get_kernel_config
+
+    return {
+        "mode": "interpret" if bench_interpret() else "compiled",
+        "backend": jax.default_backend(),
+        "tuning": dataclasses.asdict(get_kernel_config()),
+    }
+
+
 def block_until_ready(x):
     return jax_block(x)
 

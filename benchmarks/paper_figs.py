@@ -36,6 +36,8 @@ from repro.core.trie import TrieOfRules
 
 from .common import (
     Row,
+    bench_interpret,
+    bench_mode_fields,
     paired_t_test,
     time_each,
     time_per_call,
@@ -267,6 +269,10 @@ def bench_traversal() -> List[Row]:
             lambda: trie_reduce(dt)["support_sum"].block_until_ready(),
             n=20,
         )
+        # memory-bound column sweep: 3 f32/int32 columns of N nodes
+        from repro.launch.roofline import kernel_roofline
+
+        roofline = kernel_roofline(12.0 * len(res.trie), kr)
         # the three machine lanes agree with the pointer walk
         agg = trie_reduce(dt)
         arr = traverse_reduce(dt)
@@ -294,6 +300,7 @@ def bench_traversal() -> List[Row]:
             "speedup_kernel_vs_flat": speedup_flat,
             "speedup_kernel_vs_walk": speedup_walk,
             "speedup_array_vs_flat": f / a,
+            "roofline": roofline,
         })
         rows += [
             Row(f"traversal_{ds_name}_trie", t * 1e6,
@@ -308,8 +315,8 @@ def bench_traversal() -> List[Row]:
     if JSON_OUT_TRAVERSAL:
         payload = {
             "bench": "traversal",
-            "backend": jax.default_backend(),
-            "interpret": jax.default_backend() != "tpu",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
             "smoke": SMOKE,
             "unix_time": time.time(),
             "results": results,
@@ -401,7 +408,7 @@ def bench_rule_search_kernels() -> List[Row]:
         rule_search_pallas,
     )
 
-    interp = jax.default_backend() != "tpu"
+    interp = bench_interpret()
     width = 6
     sizes = SEARCH_KERNEL_SIZES_SMOKE if SMOKE else SEARCH_KERNEL_SIZES
     rows: List[Row] = []
@@ -465,6 +472,14 @@ def bench_rule_search_kernels() -> List[Row]:
                 us[name] = time_per_call_median(fn, n=n_reps, warmup=2) * 1e6
             speedup = us["sweep_kernel"] / us["csr_fused_kernel"]
             oracle_speedup = us["oracle_binsearch"] / us["oracle_csr"]
+            # fused-lane working set: the 6 edge columns (4 B each)
+            # re-streamed once per descent step, + the query matrix
+            from repro.launch.roofline import kernel_roofline
+
+            fused_bytes = float(width * 6 * 4 * n_edges + q * width * 4)
+            roofline = kernel_roofline(
+                fused_bytes, us["csr_fused_kernel"] / 1e6
+            )
             results.append({
                 "n_edges": n_edges,
                 "n_nodes": n_edges + 1,
@@ -474,6 +489,7 @@ def bench_rule_search_kernels() -> List[Row]:
                 "us_per_call": us,
                 "speedup_fused_vs_sweep": speedup,
                 "speedup_oracle_csr_vs_binsearch": oracle_speedup,
+                "roofline": roofline,
             })
             for name, val in us.items():
                 rows.append(Row(
@@ -484,8 +500,8 @@ def bench_rule_search_kernels() -> List[Row]:
     if JSON_OUT:
         payload = {
             "bench": "rule_search_kernels",
-            "backend": jax.default_backend(),
             "interpret": interp,
+            **bench_mode_fields(),
             "smoke": SMOKE,
             "unix_time": time.time(),
             "results": results,
@@ -523,7 +539,7 @@ def bench_topk_rank() -> List[Row]:
     from repro.kernels.rank import topk_rank_pallas
     from repro.kernels.ref import topk_rank_ref
 
-    interp = jax.default_backend() != "tpu"
+    interp = bench_interpret()
     sizes = TOPK_SIZES_SMOKE if SMOKE else TOPK_SIZES
     ks = TOPK_KS_SMOKE if SMOKE else TOPK_KS
     metrics = TOPK_METRICS_SMOKE if SMOKE else TOPK_METRICS
@@ -591,6 +607,12 @@ def bench_topk_rank() -> List[Row]:
                 p_speedup = (
                     us["full_sort_prefix"] / us["segmented_kernel_prefix"]
                 )
+                # whole-trie scan streams the 4 scoring columns once
+                from repro.launch.roofline import kernel_roofline
+
+                roofline = kernel_roofline(
+                    16.0 * n_nodes, us["segmented_kernel"] / 1e6
+                )
                 results.append({
                     "n_nodes": n_nodes,
                     "k": k,
@@ -600,6 +622,7 @@ def bench_topk_rank() -> List[Row]:
                     "speedup_kernel_vs_fullsort": speedup,
                     "speedup_kernel_vs_fullsort_prefix": p_speedup,
                     "kernel_oracle_bit_identical": True,
+                    "roofline": roofline,
                 })
                 for name, val in us.items():
                     rows.append(Row(
@@ -610,8 +633,8 @@ def bench_topk_rank() -> List[Row]:
     if JSON_OUT_TOPK:
         payload = {
             "bench": "topk_rank",
-            "backend": jax.default_backend(),
             "interpret": interp,
+            **bench_mode_fields(),
             "smoke": SMOKE,
             "unix_time": time.time(),
             "results": results,
@@ -766,8 +789,8 @@ def bench_batched_query() -> List[Row]:
     if JSON_OUT_BATCHED:
         payload = {
             "bench": "batched_query",
-            "backend": jax.default_backend(),
-            "interpret": jax.default_backend() != "tpu",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
             "smoke": SMOKE,
             "unix_time": time.time(),
             "results": results,
@@ -923,8 +946,8 @@ def bench_sharded_query() -> List[Row]:
     if JSON_OUT_SHARDED:
         payload = {
             "bench": "sharded_query",
-            "backend": jax.default_backend(),
-            "interpret": jax.default_backend() != "tpu",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
             "n_devices": jax.device_count(),
             "smoke": SMOKE,
             "unix_time": time.time(),
@@ -1031,7 +1054,7 @@ def bench_build() -> List[Row]:
     if JSON_OUT_BUILD:
         payload = {
             "bench": "build_engines",
-            "backend": jax.default_backend(),
+            **bench_mode_fields(),
             "smoke": SMOKE,
             "unix_time": time.time(),
             "results": results,
@@ -1270,8 +1293,8 @@ def bench_serve() -> List[Row]:
     if JSON_OUT_SERVE:
         payload = {
             "bench": "serve",
-            "backend": jax.default_backend(),
-            "interpret": jax.default_backend() != "tpu",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
             "n_devices": jax.device_count(),
             "smoke": SMOKE,
             "unix_time": time.time(),

@@ -17,6 +17,12 @@
 The shared Eq. 1-4 / interestingness math lives in ``metrics_inkernel`` —
 one implementation for every kernel AND its jnp oracle (``ref``).
 
+Static launch knobs (tile sizes, the posting-window crossover, the
+launch-pad floor) resolve at op-dispatch time from the per-backend
+``tuning.KernelConfig`` registry — committed tables under
+``benchmarks/tuning/`` (regenerate with ``make autotune``), historical
+constants when no table exists.
+
 The three batched ops are shard_map-aware: handed a
 ``repro.distributed.trie_sharding.ShardPlan`` instead of a trie, each
 runs distributed over the plan's ``("data",)`` mesh (per-device kernels
@@ -24,6 +30,13 @@ over local DFS ranges + bit-identical k-best / found-winner merges).
 """
 from .item_index import ROLES
 from .metrics_inkernel import RANK_METRICS
+from .tuning import (
+    KernelConfig,
+    get_kernel_config,
+    launch_pad,
+    set_kernel_config,
+    tuning_overrides,
+)
 from .ops import (
     InvalidQueryError,
     TransientBackendError,
@@ -32,6 +45,7 @@ from .ops import (
     dense_from_bitmaps,
     dfs_rank_arrays,
     edge_metric_arrays,
+    interpret_mode,
     is_retryable,
     item_rank_arrays,
     members_from_candidates,
@@ -49,10 +63,16 @@ __all__ = [
     "RANK_METRICS",
     "ROLES",
     "InvalidQueryError",
+    "KernelConfig",
     "TransientBackendError",
     "TrieQueryError",
     "dedup_query_rows",
+    "get_kernel_config",
+    "interpret_mode",
     "is_retryable",
+    "launch_pad",
+    "set_kernel_config",
+    "tuning_overrides",
     "dense_from_bitmaps",
     "dfs_rank_arrays",
     "edge_metric_arrays",

@@ -21,7 +21,8 @@ answerable without walking paths:
 
 ``rules_with_pallas`` runs Q item queries in ONE launch: grid
 ``(Q, n_tiles)``, each query scoring the DFS-ordered metric columns
-through VMEM in ``BN`` tiles, masking to its membership test
+through VMEM in ``block_n``-wide tiles (``KernelConfig.rank_bn`` by
+default), masking to its membership test
 (consequent / antecedent / any role), and maintaining a k-best buffer row
 via the same incremental-extraction + rank-merge machinery as the
 segmented rank kernel (``rank.kbest_update`` — ONE implementation, so tie
@@ -68,15 +69,17 @@ from jax.experimental import pallas as pl
 import numpy as np
 
 from .metrics_inkernel import rank_score
-from .rank import BN, LANE, _iota, kbest_update
+from .rank import LANE, _iota, kbest_update
+from .tuning import get_kernel_config
 
 ROLES = ("consequent", "antecedent", "any")
 
 _BIG = 2**30
 
-# Full-array posting residency above this edge count would crowd VMEM
-# (2 arrays x 4 B x E = 4 MB at this threshold), so the windowed layout
-# takes over.  Static, so the choice is part of the compiled kernel.
+# Default full-array posting residency ceiling: above this edge count the
+# 2 arrays x 4 B x E residency (4 MB at this threshold) would crowd VMEM,
+# so the windowed layout takes over.  Static, so the choice is part of the
+# compiled kernel.  Tunable: KernelConfig.posting_window_edges.
 POSTING_WINDOW_EDGES = 512 * 1024
 
 
@@ -87,7 +90,7 @@ def _n_bsearch_steps(max_postings: int) -> int:
 
 def _make_member_kernel(
     k: int, kpad: int, metric: str, min_depth: int, role: str,
-    n_steps: int, p_width: int, windowed: bool,
+    n_steps: int, p_width: int, windowed: bool, block_n: int,
 ):
     """Kernel body factory.  ``p_width`` is the posting operand's lane
     width: the padded full-array length, or ``Wpad`` when ``windowed``
@@ -114,7 +117,7 @@ def _make_member_kernel(
         lift = lift_ref[...][0]
         depth = depth_ref[...][0]
         nitem = nitem_ref[...][0]
-        pos = _iota(BN) + i * BN
+        pos = _iota(block_n) + i * block_n
         score = rank_score(metric, sup, conf, lift)
 
         def count_le(arr_ref, x):
@@ -122,8 +125,8 @@ def _make_member_kernel(
             by fixed-step binary search (arr ascending on the slice,
             ``_BIG`` beyond it in window mode)."""
             arr = arr_ref[...][0]
-            lo = jnp.full((BN,), plo, jnp.int32)
-            hi = jnp.full((BN,), phi, jnp.int32)
+            lo = jnp.full((block_n,), plo, jnp.int32)
+            hi = jnp.full((block_n,), phi, jnp.int32)
             for _ in range(n_steps):
                 mid = (lo + hi) // 2
                 midc = jnp.clip(mid, 0, p_width - 1)
@@ -152,13 +155,6 @@ def _make_member_kernel(
     return kernel
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "metric", "min_depth", "role", "max_postings", "window",
-        "interpret",
-    ),
-)
 def rules_with_pallas(
     support: jax.Array,     # f32 [N] DFS-ordered
     confidence: jax.Array,  # f32 [N] DFS-ordered
@@ -178,6 +174,7 @@ def rules_with_pallas(
     max_postings: int = 0,
     window: bool | None = None,
     interpret: bool = False,
+    block_n: int | None = None,
 ):
     """Top-k (scores, DFS positions) of the rules involving each queried
     item, for Q queries in ONE launch.
@@ -189,12 +186,41 @@ def rules_with_pallas(
     (``plos[q] == phis[q]``) plus an item id no node carries.
 
     ``window`` selects the posting layout (see module docstring);
-    ``None`` auto-picks: full-array residency while
-    ``E <= POSTING_WINDOW_EDGES``, per-query ``max_postings``-bounded
-    windows beyond.  Both layouts are bit-identical.
+    ``None`` auto-picks: full-array residency while the edge count stays
+    within the active ``KernelConfig.posting_window_edges`` crossover,
+    per-query ``max_postings``-bounded windows beyond.  ``block_n``
+    (metric-column tile) resolves from ``KernelConfig.rank_bn`` when
+    None.  Both layouts — and every legal knob value — are bit-identical.
     """
     if role not in ROLES:
         raise ValueError(f"role {role!r} not in {ROLES}")
+    cfg = get_kernel_config()
+    if block_n is None:
+        block_n = cfg.rank_bn
+    if window is None:
+        window = post_lo.shape[0] > cfg.posting_window_edges
+    return _rules_with_impl(
+        support, confidence, lift, depth, node_item,
+        post_lo, post_hi, plos, phis, items,
+        k=int(k), metric=metric, min_depth=int(min_depth), role=role,
+        max_postings=int(max_postings), window=bool(window),
+        interpret=interpret, block_n=int(block_n),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "metric", "min_depth", "role", "max_postings", "window",
+        "interpret", "block_n",
+    ),
+)
+def _rules_with_impl(
+    support, confidence, lift, depth, node_item,
+    post_lo, post_hi, plos, phis, items,
+    *, k, metric, min_depth, role, max_postings, window, interpret,
+    block_n,
+):
     n = support.shape[0]
     q = plos.shape[0]
     if n == 0 or k <= 0 or q == 0:
@@ -203,7 +229,7 @@ def rules_with_pallas(
             jnp.full((q, max(k, 0)), -1, jnp.int32),
         )
     kpad = k + (-k % LANE)
-    npad = -n % BN
+    npad = -n % block_n
 
     def pad_col(a, fill, dtype):
         return jnp.pad(
@@ -220,8 +246,6 @@ def rules_with_pallas(
     plos = jnp.asarray(plos, jnp.int32)
     phis = jnp.asarray(phis, jnp.int32)
     e = post_lo.shape[0]
-    if window is None:
-        window = e > POSTING_WINDOW_EDGES
 
     params = jnp.zeros((q, LANE), jnp.int32)
     if window:
@@ -263,13 +287,13 @@ def rules_with_pallas(
     params = params.at[:, 2].set(items.astype(jnp.int32))
 
     nn = sup.shape[1]
-    grid = (q, nn // BN)
-    col_spec = pl.BlockSpec((1, BN), lambda qi, i: (0, i))
+    grid = (q, nn // block_n)
+    col_spec = pl.BlockSpec((1, block_n), lambda qi, i: (0, i))
     out_spec = pl.BlockSpec((1, kpad), lambda qi, i: (qi, 0))
     vals, pos = pl.pallas_call(
         _make_member_kernel(
             k, kpad, metric, min_depth, role,
-            _n_bsearch_steps(max_postings), p_width, window,
+            _n_bsearch_steps(max_postings), p_width, window, block_n,
         ),
         grid=grid,
         in_specs=[

@@ -3,11 +3,14 @@
 Each op auto-selects ``interpret=True`` off-TPU (this container is CPU-only;
 interpret mode executes the kernel body in Python, which is how the kernels
 are validated here), and composes kernels into the paper-level semantics
-(e.g. compound-consequent lift = two descents, Eq. 1-4).
+(e.g. compound-consequent lift = two descents, Eq. 1-4).  The auto-selection
+is overridable via ``REPRO_FORCE_INTERPRET`` (see ``interpret_mode``), which
+is how the compiled-mode bench lane and local debugging force either path.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -28,10 +31,50 @@ from .ref import rules_with_ref, topk_rank_batch_ref, topk_rank_ref
 from .support_count import support_count_pallas
 from .rule_search import rule_search_fused_pallas, rule_search_pallas
 from .trie_reduce import trie_reduce_pallas
+from .tuning import launch_pad
+
+_TRUTHY = frozenset({"1", "true", "yes", "on", "interpret"})
+_FALSY = frozenset({"0", "false", "no", "off", "compiled"})
+_interpret_cache: dict = {}
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def interpret_mode() -> bool:
+    """Whether ops launch their Pallas kernels in interpret mode.
+
+    Default: interpret everywhere but TPU (interpret mode executes the
+    kernel body in Python — how the kernels run on CPU CI).  The
+    ``REPRO_FORCE_INTERPRET`` env var overrides the backend sniff in
+    either direction: truthy values (1/true/yes/on/interpret) force
+    interpret, falsy values (0/false/no/off/compiled) force compiled.
+    The decision is cached per (env value, backend), so flipping the env
+    var mid-process takes effect on the next op call.
+    """
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    backend = jax.default_backend()
+    key = (env, backend)
+    hit = _interpret_cache.get(key)
+    if hit is not None:
+        return hit
+    if env is not None and env.strip():
+        val = env.strip().lower()
+        if val in _TRUTHY:
+            mode = True
+        elif val in _FALSY:
+            mode = False
+        else:
+            raise ValueError(
+                f"REPRO_FORCE_INTERPRET={env!r} not understood; use one "
+                f"of {sorted(_TRUTHY)} or {sorted(_FALSY)}"
+            )
+    else:
+        mode = backend != "tpu"
+    _interpret_cache[key] = mode
+    return mode
+
+
+# Back-compat alias: distributed.trie_sharding (and older call sites)
+# import the pre-override name.
+_interpret = interpret_mode
 
 
 # ----------------------------------------------------------------------
@@ -237,9 +280,11 @@ def dedup_query_rows(queries, ant_len):
     duplicates Q times.  Returns ``(uq, ual, inv)`` where ``inv`` scatters
     unique-row results back to the original Q rows, or
     ``(queries, ant_len, None)`` when every row is already unique AND the
-    count is already a power of two (the original launch path, no extra
-    padding).  The unique count otherwise pads up to a power of two with
-    all-padding rows (item -1, ant_len 0 — found False by construction):
+    count already equals its launch pad (the original launch path, no
+    extra padding).  The unique count otherwise pads up to
+    ``tuning.launch_pad`` (next pow2, floored at the active config's
+    ``launch_pad_floor``) with all-padding rows (item -1, ant_len 0 —
+    found False by construction):
     a serving stream of arbitrary batch sizes then hits a BOUNDED set of
     compiled launch shapes instead of recompiling per distinct Q.
     """
@@ -253,7 +298,7 @@ def dedup_query_rows(queries, ant_len):
     uniq, inv = np.unique(key, axis=0, return_inverse=True)
     inv = np.asarray(inv).reshape(-1)
     u = uniq.shape[0]
-    upad = 1 << max(u - 1, 0).bit_length()
+    upad = launch_pad(u)
     if u == q.shape[0] and upad == u:
         return q, al, None
     uq = np.full((upad, q.shape[1]), -1, np.int32)
@@ -652,7 +697,7 @@ def _pad_pow2_rows(plos, phis, qitems, axis: int = 0) -> tuple:
     absent-item queries (empty slice [0, 0), item id -1) so kernel
     launch shapes stay bucketed (at most log2(Q) compiled variants)."""
     u = qitems.shape[0]
-    u_pad = 1 << max(u - 1, 0).bit_length()
+    u_pad = launch_pad(u)
     if u_pad == u:
         return plos, phis, qitems
     pad = u_pad - u

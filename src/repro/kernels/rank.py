@@ -42,8 +42,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .metrics_inkernel import rank_score
+from .tuning import get_kernel_config
 
-BN = 8192    # nodes per tile
+BN = 8192    # default nodes per tile (tunable: KernelConfig.rank_bn)
 LANE = 128   # lane width: k-buffer padding granularity
 _BIG = 2**30  # plain int: pallas kernels may not close over jnp constants
 
@@ -140,7 +141,8 @@ def kbest_update(vals_ref, pos_ref, score, pos, k: int, kpad: int):
         pos_ref[...] = np_[None, :]
 
 
-def _make_kernel(k: int, kpad: int, metric: str, min_depth: int):
+def _make_kernel(k: int, kpad: int, metric: str, min_depth: int,
+                 block_n: int):
     def kernel(
         params_ref, sup_ref, conf_ref, lift_ref, depth_ref,
         vals_ref, pos_ref,
@@ -160,7 +162,7 @@ def _make_kernel(k: int, kpad: int, metric: str, min_depth: int):
         conf = conf_ref[...][0]
         lift = lift_ref[...][0]
         depth = depth_ref[...][0]
-        pos = _iota(BN) + i * BN
+        pos = _iota(block_n) + i * block_n
         score = rank_score(metric, sup, conf, lift)
         valid = (pos >= lo) & (pos < hi) & (depth >= min_depth)
         score = jnp.where(valid, score, -jnp.inf)
@@ -169,9 +171,6 @@ def _make_kernel(k: int, kpad: int, metric: str, min_depth: int):
     return kernel
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "metric", "min_depth", "interpret")
-)
 def topk_rank_batch_pallas(
     support: jax.Array,     # f32 [N] DFS-ordered
     confidence: jax.Array,  # f32 [N] DFS-ordered
@@ -184,6 +183,7 @@ def topk_rank_batch_pallas(
     metric: str = "confidence",
     min_depth: int = 1,
     interpret: bool = False,
+    block_n: int | None = None,
 ):
     """Top-k of EVERY DFS range ``[los[q], his[q])`` in one launch.
 
@@ -192,7 +192,28 @@ def topk_rank_batch_pallas(
     Q prefix-scoped rankings cost one ``pallas_call`` instead of Q.
     Returns ``(values f32[Q, k], positions int32[Q, k])``, each row in
     ``jax.lax.top_k`` order with ``(-inf, -1)`` empty slots.
+
+    ``block_n`` (nodes per tile) resolves from the active per-backend
+    ``KernelConfig`` when None — resolution happens in this thin
+    un-jitted shim so a table change is never baked into a stale trace.
     """
+    if block_n is None:
+        block_n = get_kernel_config().rank_bn
+    return _topk_rank_batch_impl(
+        support, confidence, lift, depth, los, his,
+        k=k, metric=metric, min_depth=min_depth, interpret=interpret,
+        block_n=int(block_n),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "min_depth", "interpret", "block_n"),
+)
+def _topk_rank_batch_impl(
+    support, confidence, lift, depth, los, his,
+    *, k, metric, min_depth, interpret, block_n,
+):
     n = support.shape[0]
     q = los.shape[0]
     if n == 0 or k <= 0 or q == 0:
@@ -202,7 +223,7 @@ def topk_rank_batch_pallas(
             jnp.full((q, max(k, 0)), -1, jnp.int32),
         )
     kpad = k + (-k % LANE)
-    npad = -n % BN
+    npad = -n % block_n
 
     def pad(a, fill, dtype):
         return jnp.pad(
@@ -220,11 +241,11 @@ def topk_rank_batch_pallas(
     params = params.at[:, 0].set(los).at[:, 1].set(his)
 
     nn = sup.shape[1]
-    grid = (q, nn // BN)
-    col_spec = pl.BlockSpec((1, BN), lambda qi, i: (0, i))
+    grid = (q, nn // block_n)
+    col_spec = pl.BlockSpec((1, block_n), lambda qi, i: (0, i))
     out_spec = pl.BlockSpec((1, kpad), lambda qi, i: (qi, 0))
     vals, pos = pl.pallas_call(
-        _make_kernel(k, kpad, metric, min_depth),
+        _make_kernel(k, kpad, metric, min_depth, block_n),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, LANE), lambda qi, i: (qi, 0)),
@@ -240,9 +261,6 @@ def topk_rank_batch_pallas(
     return vals[:, :k], pos[:, :k]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "metric", "min_depth", "interpret")
-)
 def topk_rank_pallas(
     support: jax.Array,     # f32 [N] DFS-ordered
     confidence: jax.Array,  # f32 [N] DFS-ordered
@@ -255,6 +273,7 @@ def topk_rank_pallas(
     metric: str = "confidence",
     min_depth: int = 1,
     interpret: bool = False,
+    block_n: int | None = None,
 ):
     """Top-k (scores, DFS positions) of the rules in DFS range ``[lo, hi)``.
 
@@ -268,5 +287,6 @@ def topk_rank_pallas(
         jnp.asarray(lo, jnp.int32).reshape(1),
         jnp.asarray(hi, jnp.int32).reshape(1),
         k=k, metric=metric, min_depth=min_depth, interpret=interpret,
+        block_n=block_n,
     )
     return vals[0], pos[0]

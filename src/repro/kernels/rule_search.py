@@ -41,10 +41,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .metrics_inkernel import compound_lift
+from .tuning import get_kernel_config
 
 BQ = 128    # queries per tile
 BE = 2048   # edge-table chunk per compare sweep (full-sweep kernel)
-BF = 128    # fan-out tile: CSR bucket window granularity (fused kernel)
+BF = 128    # default fan-out tile: CSR bucket window granularity
+            # (fused kernel; tunable: KernelConfig.search_bf)
 
 
 def _make_kernel(width: int, n_chunks: int):
@@ -204,7 +206,8 @@ def rule_search_pallas(
 # ----------------------------------------------------------------------
 # fused CSR kernel: bucket descent + consequent walk + compound lift
 # ----------------------------------------------------------------------
-def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
+def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int,
+                       block_f: int):
     def kernel(
         q_ref, al_ref,
         co_ref, ei_ref, ec_ref, econf_ref, esup_ref, elift_ref,
@@ -221,8 +224,9 @@ def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
         elf = elift_ref[...][0]
 
         def bucket_scan(nodes, items):
-            """Child + edge metrics for (nodes, items) by scanning only each
-            node's CSR bucket, BF lanes at a time (chunked for hub nodes)."""
+            """Child + edge metrics for (nodes, items) by scanning only
+            each node's CSR bucket, ``block_f`` lanes at a time (chunked
+            for hub nodes)."""
             start = co[nodes]
             count = co[nodes + 1] - start
             child = jnp.full((bq,), -1, jnp.int32)
@@ -231,8 +235,8 @@ def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
             b_lift = jnp.zeros((bq,), jnp.float32)
             for f in range(n_fan_chunks):
                 offs = (
-                    jax.lax.broadcasted_iota(jnp.int32, (bq, BF), 1)
-                    + f * BF
+                    jax.lax.broadcasted_iota(jnp.int32, (bq, block_f), 1)
+                    + f * block_f
                 )
                 valid = offs < count[:, None]
                 idx = jnp.clip(start[:, None] + offs, 0, e_pad - 1)
@@ -307,9 +311,6 @@ def _make_fused_kernel(width: int, n_fan_chunks: int, e_pad: int):
     return kernel
 
 
-@functools.partial(
-    jax.jit, static_argnames=("max_fanout", "interpret")
-)
 def rule_search_fused_pallas(
     child_offsets: jax.Array,  # int32 [N+1] CSR buckets over the edge table
     edge_item: jax.Array,      # int32 [E] item-sorted within each bucket
@@ -321,9 +322,31 @@ def rule_search_fused_pallas(
     ant_len: jax.Array,        # int32 [Q]
     max_fanout: int = 0,       # static: widest bucket (sizes the window)
     interpret: bool = False,
+    block_f: int | None = None,
 ):
     """Single-launch rule search with full paper metrics (compound lift
-    included): CSR bucket descent + fused consequent-only walk."""
+    included): CSR bucket descent + fused consequent-only walk.
+
+    ``block_f`` (bucket-window lanes per fan-out chunk) resolves from
+    the active per-backend ``KernelConfig`` when None.
+    """
+    if block_f is None:
+        block_f = get_kernel_config().search_bf
+    return _rule_search_fused_impl(
+        child_offsets, edge_item, edge_child, edge_conf, edge_sup,
+        edge_lift, queries, ant_len,
+        max_fanout=int(max_fanout), interpret=interpret,
+        block_f=int(block_f),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_fanout", "interpret", "block_f")
+)
+def _rule_search_fused_impl(
+    child_offsets, edge_item, edge_child, edge_conf, edge_sup,
+    edge_lift, queries, ant_len, *, max_fanout, interpret, block_f,
+):
     q, width = queries.shape
     e = edge_item.shape[0]
     if e == 0 or width == 0:
@@ -332,7 +355,7 @@ def rule_search_fused_pallas(
         return out
 
     fan = max(int(max_fanout), 1)
-    n_fan_chunks = -(-fan // BF)
+    n_fan_chunks = -(-fan // block_f)
 
     qp = -q % BQ
     queries_p = jnp.pad(
@@ -340,9 +363,9 @@ def rule_search_fused_pallas(
     )
     al_p = jnp.pad(ant_len.astype(jnp.int32), (0, qp)).reshape(-1, 1)
 
-    e_pad = e + (-e % BF)
+    e_pad = e + (-e % block_f)
     co_len = child_offsets.shape[0]
-    co_pad = co_len + (-co_len % BF)
+    co_pad = co_len + (-co_len % block_f)
     co = jnp.pad(
         child_offsets.astype(jnp.int32), (0, co_pad - co_len),
         constant_values=e,
@@ -373,7 +396,7 @@ def rule_search_fused_pallas(
         jax.ShapeDtypeStruct((qq, 1), jnp.float32),
     ]
     node, okv, conf, sup, lift, csup = pl.pallas_call(
-        _make_fused_kernel(width, n_fan_chunks, e_pad),
+        _make_fused_kernel(width, n_fan_chunks, e_pad, block_f),
         grid=grid,
         in_specs=[
             pl.BlockSpec((BQ, width), lambda qi: (qi, 0)),

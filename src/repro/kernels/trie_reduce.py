@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BN = 8192   # nodes per tile
+from .tuning import get_kernel_config
+
+BN = 8192   # default nodes per tile (tunable: KernelConfig.reduce_bn)
 
 
 def _kernel(sup_ref, conf_ref, depth_ref, out_ref):
@@ -37,13 +39,26 @@ def _kernel(sup_ref, conf_ref, depth_ref, out_ref):
     out_ref[0, 3] += jnp.sum(jnp.where(mask, conf, 0.0))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def trie_reduce_pallas(
     support: jax.Array,      # f32 [N]
     confidence: jax.Array,   # f32 [N]
     depth: jax.Array,        # int32 [N]
     interpret: bool = False,
+    block_n: int | None = None,
 ):
+    """``block_n`` (nodes per tile) resolves from the active per-backend
+    ``KernelConfig`` when None.  Retiling reassociates the fp32 running
+    sums (count/max stay bitwise); the jnp oracle agrees to 1e-6."""
+    if block_n is None:
+        block_n = get_kernel_config().reduce_bn
+    return _trie_reduce_impl(
+        support, confidence, depth,
+        interpret=interpret, block_n=int(block_n),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def _trie_reduce_impl(support, confidence, depth, *, interpret, block_n):
     n = support.shape[0]
     if n == 0:
         # Empty trie: nothing to reduce.  Returning zeros here avoids
@@ -51,21 +66,21 @@ def trie_reduce_pallas(
         # and keeps the max-confidence slot at 0.0 instead of -inf.
         z = jnp.float32(0.0)
         return z, z, z, z
-    npad = -n % BN
+    npad = -n % block_n
     sup = jnp.pad(support.astype(jnp.float32), (0, npad)).reshape(1, -1)
     conf = jnp.pad(confidence.astype(jnp.float32), (0, npad)).reshape(1, -1)
     dep = jnp.pad(
         depth.astype(jnp.int32), (0, npad), constant_values=-1
     ).reshape(1, -1)
     nn = sup.shape[1]
-    grid = (nn // BN,)
+    grid = (nn // block_n,)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, BN), lambda i: (0, i)),
-            pl.BlockSpec((1, BN), lambda i: (0, i)),
-            pl.BlockSpec((1, BN), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((1, 4), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 4), jnp.float32),

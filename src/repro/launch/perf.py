@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: re-lower a dry-run cell under optimization
 variants and report the three roofline terms per variant.
 
@@ -14,6 +11,7 @@ are apples-to-apples on the same cost estimator.
 """
 import argparse
 import json
+import os
 from typing import Callable, Dict
 
 from repro.configs.base import ModelConfig
@@ -60,6 +58,12 @@ VARIANTS: Dict[str, Callable[[ModelConfig], ModelConfig]] = {
 
 
 def main():
+    # The 512-host-device mesh must be requested before jax initializes —
+    # set here (not at module import) so merely importing this module
+    # (tests, the bench harness) never mutates the process's device count.
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
     from repro.launch.dryrun import run_cell
     from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW
 

@@ -56,6 +56,7 @@ from repro.kernels.ops import (
     validate_prefixes,
     validate_rule_pairs,
 )
+from repro.kernels.tuning import launch_pad
 from repro.serve.resilience import (
     MonotonicClock,
     ResilientTrieEngine,
@@ -135,8 +136,7 @@ class LaunchPredictor:
 
     @staticmethod
     def _shape(bucket: Tuple, batch: int) -> Tuple:
-        pow2 = 1 << max(int(batch) - 1, 0).bit_length()
-        return (*bucket, pow2)
+        return (*bucket, launch_pad(batch))
 
     def predict_ms(self, bucket: Tuple, batch: int) -> float:
         return self._ewma_ms.get(self._shape(bucket, batch),
@@ -498,7 +498,7 @@ class TrieScheduler:
         """
         kw = reps[0].kwargs
         n = len(reps)
-        npad = 1 << max(n - 1, 0).bit_length()
+        npad = launch_pad(n)
         if op == "rule_search":
             width = max(self._qwidth,
                         max(len(r.canon[0]) for r in reps), 1)
