@@ -3,8 +3,8 @@ export PYTHONPATH := src
 
 .PHONY: test test-fast test-slow test-multidevice lint bench-smoke \
 	bench-gate bench-baseline bench-search bench-topk bench-build \
-	bench-batched bench-traversal bench-sharded bench-serve bench \
-	autotune autotune-smoke
+	bench-batched bench-traversal bench-sharded bench-serve \
+	bench-compress bench autotune autotune-smoke
 
 # 8 simulated CPU devices for the sharded-trie tier (tests + benches)
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -60,6 +60,10 @@ bench-smoke:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-serve BENCH_serve_smoke.json
+	$(PY) -m benchmarks.run --only compress_layout --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-compress BENCH_compress_smoke.json
 
 # CI bench gate: every lane in benchmarks/gates.json gets a fresh smoke
 # run and is gated against its committed baseline (ratio-based; per-lane
@@ -96,6 +100,10 @@ bench-baseline:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-serve benchmarks/baselines/serve_smoke.json
+	$(PY) -m benchmarks.run --only compress_layout --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-compress benchmarks/baselines/compress_smoke.json
 	$(PY) -m benchmarks.autotune --smoke --no-write-table \
 		--json-out benchmarks/baselines/autotune_smoke.json
 
@@ -140,6 +148,11 @@ bench-sharded:
 # (BENCH_serve.json)
 bench-serve:
 	$(PY) -m benchmarks.run --only serve_loop
+
+# path-compressed(+quantized) layout vs plain: operational-residency
+# bytes-per-edge + rule_search latency parity (BENCH_compress.json)
+bench-compress:
+	$(PY) -m benchmarks.run --only compress_layout
 
 # every paper figure + kernel benches.  The sharded lane needs the
 # 8-device env to produce its full P sweep, so the first pass (plain

@@ -37,12 +37,14 @@ GRIDS = {
     "rank_bn": (1024, 2048, 4096, 8192, 16384),
     "reduce_bn": (1024, 2048, 4096, 8192, 16384),
     "search_bf": (128, 256, 512, 1024),
+    "span_bf": (128, 256, 512, 1024),
     "launch_pad_floor": (1, 2, 4, 8, 16),
 }
 GRIDS_SMOKE = {
     "rank_bn": (4096, 8192),
     "reduce_bn": (4096, 8192),
     "search_bf": (128, 256),
+    "span_bf": (128, 256),
     "launch_pad_floor": (1, 4),
 }
 
@@ -180,6 +182,51 @@ def sweep_search_bf(arrs, q, grid, reps) -> dict:
             lambda: rule_search_fused_pallas(
                 co, ei, ec, ecf, esp, elf, qj, alj,
                 max_fanout=mf, interpret=True, block_f=bf,
+            )["lift"].block_until_ready(),
+            reps,
+        )
+    return candidates
+
+
+def sweep_span_bf(n_edges, q, grid, reps) -> dict:
+    """Span-descent edge window (compressed layout): parity vs the
+    full-table ``rule_search_span_ref`` oracle at every block_f, timed on
+    a chain-heavy fixture (the shape the compressed layout serves)."""
+    import jax.numpy as jnp
+
+    from repro.core.synthetic import (
+        device_trie_from_arrays, synthetic_chain_trie,
+        synthetic_search_queries,
+    )
+    from repro.kernels.ref import rule_search_span_ref
+    from repro.kernels.rule_search import rule_search_span_pallas
+
+    arrs = synthetic_chain_trie(n_edges, seed=5)
+    dt = device_trie_from_arrays(arrs, layout="compressed")
+    queries, ant_len = synthetic_search_queries(arrs, q, 8)
+    qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
+    ops_args = (
+        dt.child_offsets, dt.edge_item, dt.edge_child,
+        dt.edge_span, dt.edge_tail, dt.node_item,
+        dt.support, dt.confidence, dt.lift, qj, alj,
+    )
+    ref = rule_search_span_ref(
+        dt.edge_parent, dt.edge_item, dt.edge_child,
+        dt.edge_span, dt.edge_tail, dt.node_item,
+        dt.support, dt.confidence, dt.lift, qj, alj,
+    )
+    candidates = {}
+    for bf in grid:
+        out = rule_search_span_pallas(
+            *ops_args, max_fanout=dt.max_fanout, interpret=True,
+            block_f=bf,
+        )
+        for key in ("found", "pos", "support", "confidence", "lift"):
+            _assert_bitwise(out[key], ref[key], f"span_bf={bf} {key}")
+        candidates[bf] = _median_us(
+            lambda: rule_search_span_pallas(
+                *ops_args, max_fanout=dt.max_fanout, interpret=True,
+                block_f=bf,
             )["lift"].block_until_ready(),
             reps,
         )
@@ -349,6 +396,8 @@ def main() -> None:
          lambda: sweep_reduce_bn(arrs, grids["reduce_bn"], reps)),
         ("search_bf",
          lambda: sweep_search_bf(arrs, q, grids["search_bf"], reps)),
+        ("span_bf",
+         lambda: sweep_span_bf(n_edges, q, grids["span_bf"], reps)),
         ("launch_pad_floor",
          lambda: sweep_launch_pad_floor(
              arrs, grids["launch_pad_floor"], reps)),

@@ -56,6 +56,7 @@ JSON_OUT_BATCHED = "BENCH_batched_query.json"  # batched-vs-loop trajectory
 JSON_OUT_TRAVERSAL = "BENCH_traversal.json"    # traversal-lane trajectory
 JSON_OUT_SHARDED = "BENCH_sharded_query.json"  # multi-device trajectory
 JSON_OUT_SERVE = "BENCH_serve.json"      # serve-loop SLO trajectory
+JSON_OUT_COMPRESS = "BENCH_compress.json"  # compressed-layout trajectory
 
 # (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
 # with E, so the largest trie runs a single batch size.  Q=2048 is the
@@ -1305,5 +1306,154 @@ def bench_serve() -> List[Row]:
             "measured": measured,
         }
         with open(JSON_OUT_SERVE, "w") as fh:
+            json.dump(payload, fh, indent=2)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# PR 8: path-compressed layout — operational residency + latency parity
+# ----------------------------------------------------------------------
+COMPRESS_SIZES = (20_000, 60_000)
+COMPRESS_SIZES_SMOKE = (1_500,)
+COMPRESS_Q = 512
+COMPRESS_Q_SMOKE = 64
+COMPRESS_N_TX = 100_000   # int32 support-count denominator
+
+
+def _resident_bytes(*sources) -> int:
+    """Operational residency of a query configuration: total bytes of the
+    DISTINCT device buffers reachable from the trie pytree plus the
+    prepared ``*_arrays`` operand dicts, deduplicated by object identity.
+
+    Identity-dedup is what makes the comparison honest: the compressed
+    ``*_arrays`` preps return direct views of the trie's own columns
+    (``jnp.asarray`` of a jnp array is the SAME object), while the plain
+    preps gather fresh edge-/DFS-/posting-ordered fp32 duplicates — the
+    duplicates count once each, the views count zero extra.
+    """
+    import jax
+
+    seen = {}
+    for src in sources:
+        leaves = (
+            src.values() if isinstance(src, dict)
+            else jax.tree_util.tree_leaves(src)
+        )
+        for leaf in leaves:
+            if hasattr(leaf, "nbytes") and hasattr(leaf, "dtype"):
+                seen[id(leaf)] = int(leaf.nbytes)
+    return sum(seen.values())
+
+
+def bench_compress_layout() -> List[Row]:
+    """Plain vs path-compressed(+quantized) layout on a chain-heavy trie:
+    bytes-per-edge of everything a query config keeps resident, plus
+    median ``rule_search`` batch latency.  Asserts the PR-8 acceptance
+    gates in-run: >= 3x residency reduction (quantized compressed vs
+    plain) and latency no worse than 1.1x plain, with plain/compressed
+    bit-parity on the unquantized layout as the correctness floor."""
+    import jax.numpy as jnp
+
+    from repro.core.synthetic import synthetic_chain_trie
+    from repro.kernels.ops import (
+        dfs_rank_arrays,
+        edge_metric_arrays,
+        item_rank_arrays,
+        rule_search,
+    )
+
+    sizes = COMPRESS_SIZES_SMOKE if SMOKE else COMPRESS_SIZES
+    q = COMPRESS_Q_SMOKE if SMOKE else COMPRESS_Q
+    rows: List[Row] = []
+    results = []
+    for n_edges in sizes:
+        arrs = synthetic_chain_trie(n_edges, chain_fraction=0.75, seed=3)
+        queries, ant_len = _search_queries(arrs, q, 8)
+        qj, alj = jnp.asarray(queries), jnp.asarray(ant_len)
+
+        lanes = {}
+        for lane, kw in (
+            ("plain", dict(layout="plain")),
+            ("compressed", dict(layout="compressed")),
+            ("compressed_quant", dict(
+                layout="compressed", quantize=True,
+                n_transactions=COMPRESS_N_TX,
+            )),
+        ):
+            dt = device_trie_from_arrays(arrs, **kw)
+            edges = edge_metric_arrays(dt)
+            prep = (dt, edges, dfs_rank_arrays(dt), item_rank_arrays(dt))
+            rb = _resident_bytes(*prep)
+            sec = time_per_call_median(
+                lambda dt=dt, edges=edges: rule_search(
+                    dt, qj, alj, edges=edges
+                )["lift"].block_until_ready(),
+                n=5, warmup=2,
+            )
+            lanes[lane] = {
+                "resident_bytes": rb,
+                "bytes_per_edge": rb / n_edges,
+                "us_per_call": sec * 1e6,
+                "out": rule_search(dt, qj, alj, edges=edges),
+            }
+
+        # correctness floor: unquantized compressed == plain, bitwise
+        for key in ("found", "node", "support", "confidence", "lift"):
+            np.testing.assert_array_equal(
+                np.asarray(lanes["plain"]["out"][key]),
+                np.asarray(lanes["compressed"]["out"][key]),
+                err_msg=f"plain vs compressed rule_search {key}",
+            )
+
+        mem_ratio = (
+            lanes["plain"]["resident_bytes"]
+            / lanes["compressed_quant"]["resident_bytes"]
+        )
+        latency_ratio = (
+            lanes["compressed_quant"]["us_per_call"]
+            / lanes["plain"]["us_per_call"]
+        )
+        # PR-8 acceptance gates, enforced where the numbers are made
+        assert mem_ratio >= 3.0, (
+            f"compressed+quantized residency ratio x{mem_ratio:.2f} < 3x "
+            f"at E={n_edges}"
+        )
+        assert latency_ratio <= 1.1, (
+            f"compressed rule_search latency x{latency_ratio:.2f} "
+            f"plain at E={n_edges} (gate: <= 1.1x)"
+        )
+        results.append({
+            "n_edges": n_edges,
+            "batch": q,
+            "chain_fraction": 0.75,
+            "bytes_per_edge": {
+                lane: d["bytes_per_edge"] for lane, d in lanes.items()
+            },
+            "us_per_call": {
+                lane: d["us_per_call"] for lane, d in lanes.items()
+            },
+            "mem_ratio_quant_vs_plain": mem_ratio,
+            "latency_ratio_quant_vs_plain": latency_ratio,
+            "plain_compressed_bit_identical": True,
+        })
+        rows.append(Row(
+            f"compress_layout_E{n_edges}",
+            lanes["compressed_quant"]["us_per_call"],
+            f"plain_B_per_edge={lanes['plain']['bytes_per_edge']:.1f};"
+            f"quant_B_per_edge="
+            f"{lanes['compressed_quant']['bytes_per_edge']:.1f};"
+            f"mem_ratio=x{mem_ratio:.2f};"
+            f"latency_vs_plain=x{latency_ratio:.2f}",
+        ))
+    if JSON_OUT_COMPRESS:
+        payload = {
+            "bench": "compress_layout",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "results": results,
+        }
+        with open(JSON_OUT_COMPRESS, "w") as fh:
             json.dump(payload, fh, indent=2)
     return rows

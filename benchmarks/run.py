@@ -35,6 +35,7 @@ BENCHES = [
     ("batched_query_ops", paper_figs.bench_batched_query),
     ("sharded_query", paper_figs.bench_sharded_query),
     ("serve_loop", paper_figs.bench_serve),
+    ("compress_layout", paper_figs.bench_compress_layout),
 ]
 
 
@@ -81,6 +82,11 @@ def main() -> None:
              "('' disables writing)",
     )
     parser.add_argument(
+        "--json-out-compress", default="BENCH_compress.json",
+        help="path for the compressed-layout residency/latency "
+             "trajectory JSON ('' disables writing)",
+    )
+    parser.add_argument(
         "--compiled", action="store_true",
         help="run kernels compiled (TPU/GPU hosts); on a CPU-only host "
              "prints a skip marker and exits 0",
@@ -105,6 +111,7 @@ def main() -> None:
     paper_figs.JSON_OUT_TRAVERSAL = args.json_out_traversal
     paper_figs.JSON_OUT_SHARDED = args.json_out_sharded
     paper_figs.JSON_OUT_SERVE = args.json_out_serve
+    paper_figs.JSON_OUT_COMPRESS = args.json_out_compress
 
     print("name,us_per_call,derived")
     failed = []

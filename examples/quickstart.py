@@ -130,6 +130,26 @@ def main():
           f"canonicalized + searched in one fused launch, "
           f"{int(np.sum(np.asarray(served['found'])))} found")
 
+    # --- path-compressed layout: bytes-per-edge before/after ------------
+    # chain runs collapse into spans; metric columns optionally narrow
+    # (int32 support counts + bf16 confidence/lift, fp32 rebuilt in-kernel)
+    ct = fz.compress(quantize=True, n_transactions=db.n_transactions)
+    n_edges = max(fz.n_edges, 1)
+    plain_bpe = dt.nbytes() / n_edges
+    comp_bpe = ct.nbytes() / n_edges
+    print(f"\ncompressed layout: span_fraction={fz.span_fraction():.2f}, "
+          f"bytes/edge {plain_bpe:.1f} (plain) -> {comp_bpe:.1f} "
+          f"(compressed+quantized, x{plain_bpe / comp_bpe:.1f} smaller)")
+    print("(shallow grocery rules are chain-poor, so layout='auto' keeps "
+          "plain here; chain-heavy tries — see make bench-compress — "
+          "shrink >=3x)")
+    dtc = fz.device_arrays(layout="compressed")
+    out_c = batched_rule_search(dtc, q, al)
+    np.testing.assert_array_equal(
+        np.asarray(out_c["found"]), np.asarray(out["found"])
+    )
+    print("unquantized compressed search matches plain bit-for-bit")
+
     # --- sharded multi-device serving (degrades gracefully to 1 device) -
     # On a multi-device host (or CPU with
     # XLA_FLAGS=--xla_force_host_platform_device_count=8) the engine

@@ -170,6 +170,102 @@ def random_csr_trie(
     }
 
 
+def synthetic_chain_trie(
+    n_edges: int,
+    chain_fraction: float = 0.75,
+    chain_len: int = 16,
+    root_fanout: int = 0,
+    fanout: int = 4,
+    n_items: int = 0,
+    seed: int = 0,
+) -> Dict[str, np.ndarray]:
+    """Chain-heavy trie: the shape the path-compressed layout targets.
+
+    Mined rule tries are dominated by long single-child runs (most long
+    itemsets have exactly one frequent extension), hanging off a hub
+    root whose fanout is the number of frequent single items.  This
+    generator reproduces that: a ``root_fanout``-child hub, then each
+    frontier node grows EITHER a single-child chain of ~``chain_len``
+    interior steps (probability ``chain_fraction``) or a ``fanout``-way
+    branch.  ``chain_fraction`` therefore dials the span fraction the
+    compression detector will find — 0.0 degenerates to a branchy trie,
+    1.0 to an all-chain forest of ``root_fanout`` threads.
+    """
+    from collections import deque
+
+    rng = np.random.RandomState(seed)
+    if root_fanout <= 0:
+        root_fanout = min(128, max(8, n_edges // 64))
+    if n_items <= 0:
+        n_items = max(root_fanout, 2 * fanout)
+    parent_l = [-1]
+    item_l = [-1]
+    depth_l = [0]
+    nid = 1
+    frontier: deque = deque()
+    for i in range(min(root_fanout, n_edges, n_items)):
+        parent_l.append(0)
+        item_l.append(i)
+        depth_l.append(1)
+        frontier.append(nid)
+        nid += 1
+    while nid <= n_edges and frontier:
+        p = frontier.popleft()
+        if rng.rand() < chain_fraction:
+            run = 1 + rng.randint(max(chain_len // 2, 1), chain_len + 1)
+            for _ in range(run):
+                if nid > n_edges:
+                    break
+                parent_l.append(p)
+                item_l.append(int(rng.randint(n_items)))
+                depth_l.append(depth_l[p] + 1)
+                p = nid
+                nid += 1
+            frontier.append(p)   # the tail keeps growing later
+        else:
+            k = min(fanout, n_items)
+            for it in rng.choice(n_items, size=k, replace=False):
+                if nid > n_edges:
+                    break
+                parent_l.append(p)
+                item_l.append(int(it))
+                depth_l.append(depth_l[p] + 1)
+                frontier.append(nid)
+                nid += 1
+    n_nodes = nid
+    parent = np.asarray(parent_l, np.int32)
+    item = np.asarray(item_l, np.int32)
+    depth = np.asarray(depth_l, np.int32)
+    edge_parent = parent[1:]
+    edge_item = item[1:]
+    edge_child = np.arange(1, n_nodes, dtype=np.int32)
+    order = np.lexsort((edge_item, edge_parent))
+    edge_parent = edge_parent[order].copy()
+    edge_item = edge_item[order].copy()
+    edge_child = edge_child[order].copy()
+    conf = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
+    sup = rng.rand(n_nodes).astype(np.float32) * 0.9 + 0.05
+    lift = rng.rand(n_nodes).astype(np.float32) * 2
+    offsets, max_fanout = csr_offsets_from_edges(edge_parent, n_nodes)
+    dfs_order, subtree_size, dfs_to_node = dfs_layout(
+        parent, depth, edge_parent, edge_child, offsets
+    )
+    item_offsets, item_nodes, max_postings = item_index_arrays(
+        item, dfs_order, n_items
+    )
+    return {
+        "node_parent": parent, "node_item": item, "node_depth": depth,
+        "confidence": conf, "support": sup, "lift": lift,
+        "edge_parent": edge_parent, "edge_item": edge_item,
+        "edge_child": edge_child,
+        "child_offsets": offsets, "max_fanout": max_fanout,
+        "dfs_order": dfs_order, "subtree_size": subtree_size,
+        "dfs_to_node": dfs_to_node,
+        "item_offsets": item_offsets, "item_nodes": item_nodes,
+        "max_postings": max_postings,
+    }
+
+
 def mixed_queries(
     rng, arrs: Dict[str, np.ndarray], q: int, width: int
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -243,18 +339,33 @@ def frozen_from_arrays(arrs: Dict[str, np.ndarray]):
     )
 
 
-def device_trie_from_arrays(arrs: Dict[str, np.ndarray], csr: bool = True):
+def device_trie_from_arrays(
+    arrs: Dict[str, np.ndarray],
+    csr: bool = True,
+    layout: str = "plain",
+    quantize: bool = False,
+    n_transactions: int = 0,
+    columns: str = "bf16",
+):
     """``DeviceTrie`` over one of this module's arrays dicts.
 
     The ONE constructor shared by tests and benches (a new ``DeviceTrie``
     field threads through every consumer by editing only this function).
     ``csr=False`` drops the CSR offsets — the seed full-table search
     path.  DFS / item-index fields are included when the dict carries
-    them.
+    them.  ``layout``/``quantize``/``n_transactions``/``columns`` mirror
+    ``FrozenTrie.device_arrays`` — non-plain layouts route through the
+    frozen view's compression path.
     """
     import jax.numpy as jnp  # lazy: keep this module importable sans jax
 
     from .array_trie import DeviceTrie
+
+    if layout != "plain":
+        return frozen_from_arrays(arrs).device_arrays(
+            layout=layout, quantize=quantize,
+            n_transactions=n_transactions, columns=columns,
+        )
 
     def opt(key):
         return jnp.asarray(arrs[key]) if key in arrs else None

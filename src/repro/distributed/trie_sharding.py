@@ -67,8 +67,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.array_trie import (
+    AUTO_COMPRESS_SPAN_FRACTION,
     FrozenTrie,
     canonical_prefix_rows,
+    compress_pos_space,
     sanitize_query_items,
 )
 from repro.kernels.item_index import ROLES, rules_with_pallas
@@ -83,7 +85,10 @@ from repro.kernels.ops import (
     dedup_query_rows,
 )
 from repro.kernels.rank import LANE, rank_merge, topk_rank_batch_pallas
-from repro.kernels.rule_search import rule_search_fused_pallas
+from repro.kernels.rule_search import (
+    rule_search_fused_pallas,
+    rule_search_span_pallas,
+)
 
 _BIG = 2**30
 
@@ -232,6 +237,17 @@ class ShardedDeviceTrie:
     edge_sup: jax.Array       # f32 [P, E']
     edge_lift: jax.Array      # f32 [P, E']
     l2g: jax.Array            # int32 [P, NL] local node id -> global id
+    # compressed layout only: span edge columns + position-space node
+    # columns with the replicated-root slot at local position 0 (the span
+    # descent reads metrics off nodes, not edges).  [P, 1] dummies when
+    # the plan is plain (and vice versa for the edge metric columns).
+    edge_pos: jax.Array       # int32 [P, E'] child LOCAL DFS position
+    edge_span: jax.Array      # int32 [P, E'] interior steps after child
+    edge_tail: jax.Array      # int32 [P, E'] local compressed tail id
+    s_item: jax.Array         # int32 [P, NL] (pad -2)
+    s_support: jax.Array      # f32|int32|bf16 [P, NL]
+    s_confidence: jax.Array   # f32|bf16|int8 [P, NL]
+    s_lift: jax.Array         # f32|bf16|int8 [P, NL]
     # replicated back-map tables (global position/posting -> node id)
     g_dfs_to_node: jax.Array  # int32 [N]
     g_item_nodes: jax.Array   # int32 [E]
@@ -239,6 +255,10 @@ class ShardedDeviceTrie:
     n_shards: int = 1
     max_fanout: int = 0       # max local bucket width across shards
     max_postings: int = 0     # global longest posting list
+    layout: str = "plain"
+    n_transactions: int = 0   # compressed quantization statics
+    confidence_scale: float = 1.0
+    lift_scale: float = 1.0
 
     _LEAVES = (
         "support", "confidence", "lift", "depth", "node_item",
@@ -247,21 +267,35 @@ class ShardedDeviceTrie:
         "p_support", "p_confidence", "p_lift", "p_depth",
         "child_offsets", "edge_item", "edge_child",
         "edge_conf", "edge_sup", "edge_lift", "l2g",
+        "edge_pos", "edge_span", "edge_tail",
+        "s_item", "s_support", "s_confidence", "s_lift",
         "g_dfs_to_node", "g_item_nodes",
     )
 
     def tree_flatten(self):
         return (
             tuple(getattr(self, f) for f in self._LEAVES),
-            (self.n_shards, self.max_fanout, self.max_postings),
+            (
+                self.n_shards, self.max_fanout, self.max_postings,
+                self.layout, self.n_transactions,
+                self.confidence_scale, self.lift_scale,
+            ),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, fields):
         return cls(
             *fields, n_shards=aux[0], max_fanout=aux[1],
-            max_postings=aux[2],
+            max_postings=aux[2], layout=aux[3], n_transactions=aux[4],
+            confidence_scale=aux[5], lift_scale=aux[6],
         )
+
+    def _dequant(self) -> Dict:
+        return {
+            "n_transactions": self.n_transactions,
+            "confidence_scale": self.confidence_scale,
+            "lift_scale": self.lift_scale,
+        }
 
 
 @dataclass
@@ -288,14 +322,46 @@ class ShardPlan:
         return self.trie.n_shards
 
 
-def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
+def shard_device_trie(
+    frozen: FrozenTrie,
+    mesh: Mesh,
+    layout: str = "plain",
+    quantize: bool = False,
+    n_transactions: int = 0,
+    columns: str = "bf16",
+) -> ShardPlan:
     """Partition ``frozen`` over every device on ``mesh``'s ``data`` axis.
 
     Returns the host-side :class:`ShardPlan`; its ``.trie`` is the
     device-sharded :class:`ShardedDeviceTrie`.  The three batched query
     ops in ``kernels.ops`` accept the plan wherever they accept a
     ``DeviceTrie`` and produce bit-identical results.
+
+    ``layout``/``quantize``/``n_transactions``/``columns`` mirror
+    ``FrozenTrie.device_arrays``: with ``layout="compressed"`` every
+    shard carries a path-compressed span pool covering exactly its own
+    depth-1 subtrees (chains never cross a subtree boundary, so the
+    per-shard ``compress_pos_space`` run reproduces the global span set
+    restricted to the shard), and the metric columns may be quantized
+    with GLOBAL scales so per-shard dequantization is bit-identical to
+    the single-device compressed trie.
     """
+    if layout not in ("plain", "compressed", "auto"):
+        raise ValueError(f"unknown layout {layout!r}")
+    if layout == "auto":
+        layout = (
+            "compressed"
+            if frozen.span_fraction() >= AUTO_COMPRESS_SPAN_FRACTION
+            else "plain"
+        )
+    comp = (
+        frozen.compress(
+            quantize=quantize, n_transactions=n_transactions,
+            columns=columns,
+        )
+        if layout == "compressed"
+        else None
+    )
     n_shards = int(mesh.shape["data"])
     ranges = shard_dfs_ranges(frozen, n_shards)
     n = frozen.n_nodes
@@ -304,10 +370,22 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
     d2n = np.asarray(frozen.dfs_to_node, np.int64)
 
     # --- DFS-ordered column slices -----------------------------------
+    # (the compressed path reuses the possibly-quantized position-space
+    # columns so every shard slice carries the same stored values — and
+    # therefore the same dequantized values — as the global encoding)
     cols = {
-        "support": np.asarray(frozen.support, np.float32)[d2n],
-        "confidence": np.asarray(frozen.confidence, np.float32)[d2n],
-        "lift": np.asarray(frozen.lift, np.float32)[d2n],
+        "support": (
+            comp.support_pos if comp is not None
+            else np.asarray(frozen.support, np.float32)[d2n]
+        ),
+        "confidence": (
+            comp.confidence_pos if comp is not None
+            else np.asarray(frozen.confidence, np.float32)[d2n]
+        ),
+        "lift": (
+            comp.lift_pos if comp is not None
+            else np.asarray(frozen.lift, np.float32)[d2n]
+        ),
         "depth": np.asarray(frozen.node_depth, np.int32)[d2n],
         "node_item": np.asarray(frozen.node_item, np.int32)[d2n],
     }
@@ -352,13 +430,17 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
     np.cumsum(counts, axis=1, out=local_item_offsets[:, 1:])
     wpad = max(int(counts.sum(axis=1).max()) if n_items else 0, 1)
 
+    # the compressed layout has no posting-ordered metric columns (its
+    # consequent role runs through the membership kernel over the node
+    # columns — the rank-path memory win), so those shrink to dummies
+    ppad = 1 if comp is not None else wpad
     post = {
         "post_lo": np.full((n_shards, wpad), _BIG, np.int32),
         "post_hi": np.full((n_shards, wpad), _BIG, np.int32),
-        "p_support": np.zeros((n_shards, wpad), np.float32),
-        "p_confidence": np.zeros((n_shards, wpad), np.float32),
-        "p_lift": np.zeros((n_shards, wpad), np.float32),
-        "p_depth": np.full((n_shards, wpad), -1, np.int32),
+        "p_support": np.zeros((n_shards, ppad), np.float32),
+        "p_confidence": np.zeros((n_shards, ppad), np.float32),
+        "p_lift": np.zeros((n_shards, ppad), np.float32),
+        "p_depth": np.full((n_shards, ppad), -1, np.int32),
     }
     nsup = np.asarray(frozen.support, np.float32)
     nconf = np.asarray(frozen.confidence, np.float32)
@@ -377,10 +459,11 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
         order = np.argsort(seg * (n + 1) + sp_hi, kind="stable")
         post["post_lo"][d, :w] = sp_lo
         post["post_hi"][d, :w] = sp_hi[order]
-        post["p_support"][d, :w] = nsup[ln]
-        post["p_confidence"][d, :w] = nconf[ln]
-        post["p_lift"][d, :w] = nlift[ln]
-        post["p_depth"][d, :w] = ndep[ln]
+        if comp is None:
+            post["p_support"][d, :w] = nsup[ln]
+            post["p_confidence"][d, :w] = nconf[ln]
+            post["p_lift"][d, :w] = nlift[ln]
+            post["p_depth"][d, :w] = ndep[ln]
 
     # --- relabeled local subforests for the fused descent -------------
     edge_parent = np.asarray(frozen.edge_parent, np.int64)
@@ -389,6 +472,10 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
     child_dfs = dfs[edge_child] if edge_child.size else np.zeros(
         (0,), np.int64
     )
+    cc_pos = None
+    if comp is not None:
+        cc_all = np.diff(np.asarray(frozen.child_offsets, np.int64))
+        cc_pos = cc_all[d2n] if d2n.size else cc_all
     locals_: List[Dict[str, np.ndarray]] = []
     for d, (lo, hi) in enumerate(ranges):
         start_pos = max(lo, 1)
@@ -401,31 +488,75 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
         # subtrees
         lp = np.where(ep == 0, 0, dfs[ep] - start_pos + 1)
         lc = dfs[ec] - start_pos + 1
-        order = np.lexsort((ei, lp))
-        lp, ei, lc, ec = lp[order], ei[order], lc[order], ec[order]
-        cnt = np.bincount(lp, minlength=n_loc + 1)
-        offsets = np.zeros((n_loc + 2,), np.int64)
-        np.cumsum(cnt, out=offsets[1:])
-        locals_.append({
-            "co": offsets,
-            "ei": ei, "lc": lc,
-            "ecf": nconf[ec], "esp": nsup[ec], "elf": nlift[ec],
+        loc: Dict[str, np.ndarray] = {
             "l2g": np.concatenate(
                 [[0], d2n[start_pos:hi]]
             ).astype(np.int64),
-            "fan": int(cnt.max()) if cnt.size else 0,
-        })
+        }
+        if comp is not None:
+            # per-shard path compression in LOCAL position space.  The
+            # local slice preserves the global DFS order, and every
+            # non-root local node keeps its global child count, so
+            # chain_spans sees exactly the global span set restricted to
+            # this shard (chains never cross a depth-1 boundary: the
+            # last position of a subtree is one of its leaves).
+            cc_loc = np.concatenate([
+                [int(np.count_nonzero(lp == 0))],
+                cc_pos[start_pos:hi],
+            ])
+            c = compress_pos_space(cc_loc, lp, ei, lc)
+            loc.update({
+                "co": c["child_offsets"].astype(np.int64),
+                "ei": c["edge_item"].astype(np.int64),
+                "epos": c["edge_pos"].astype(np.int64),
+                "espan": c["edge_span"].astype(np.int64),
+                "etail": c["edge_tail"].astype(np.int64),
+                "fan": int(c["max_fanout"]),
+            })
+        else:
+            order = np.lexsort((ei, lp))
+            lp, ei, lc, ec = lp[order], ei[order], lc[order], ec[order]
+            cnt = np.bincount(lp, minlength=n_loc + 1)
+            offsets = np.zeros((n_loc + 2,), np.int64)
+            np.cumsum(cnt, out=offsets[1:])
+            loc.update({
+                "co": offsets,
+                "ei": ei, "lc": lc,
+                "ecf": nconf[ec], "esp": nsup[ec], "elf": nlift[ec],
+                "fan": int(cnt.max()) if cnt.size else 0,
+            })
+        locals_.append(loc)
     co_pad = max(loc["co"].shape[0] for loc in locals_)
     e_pad = max(max(loc["ei"].shape[0] for loc in locals_), 1)
     nl_pad = max(loc["l2g"].shape[0] for loc in locals_)
+    # plain and compressed subforests populate disjoint edge-column
+    # families; the other family stays a [P, 1] dummy leaf
+    pw = e_pad if comp is None else 1
+    cw = e_pad if comp is not None else 1
+    sw = nl_pad if comp is not None else 1
     edges = {
         "child_offsets": np.zeros((n_shards, co_pad), np.int32),
         "edge_item": np.full((n_shards, e_pad), -7, np.int32),
-        "edge_child": np.full((n_shards, e_pad), -1, np.int32),
-        "edge_conf": np.zeros((n_shards, e_pad), np.float32),
-        "edge_sup": np.zeros((n_shards, e_pad), np.float32),
-        "edge_lift": np.zeros((n_shards, e_pad), np.float32),
+        "edge_child": np.full((n_shards, pw), -1, np.int32),
+        "edge_conf": np.zeros((n_shards, pw), np.float32),
+        "edge_sup": np.zeros((n_shards, pw), np.float32),
+        "edge_lift": np.zeros((n_shards, pw), np.float32),
         "l2g": np.full((n_shards, nl_pad), -1, np.int32),
+        "edge_pos": np.full((n_shards, cw), -1, np.int32),
+        "edge_span": np.zeros((n_shards, cw), np.int32),
+        "edge_tail": np.zeros((n_shards, cw), np.int32),
+    }
+    # position-space node columns for the span descent: the replicated
+    # root at local position 0 followed by the shard's DFS slice
+    scols = {
+        "s_item": np.full((n_shards, sw), -2, np.int32),
+        "s_support": np.zeros(
+            (n_shards, sw), cols["support"].dtype
+        ),
+        "s_confidence": np.zeros(
+            (n_shards, sw), cols["confidence"].dtype
+        ),
+        "s_lift": np.zeros((n_shards, sw), cols["lift"].dtype),
     }
     for d, loc in enumerate(locals_):
         co = loc["co"]
@@ -433,10 +564,26 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
         edges["child_offsets"][d, co.shape[0]:] = co[-1]
         w = loc["ei"].shape[0]
         edges["edge_item"][d, :w] = loc["ei"]
-        edges["edge_child"][d, :w] = loc["lc"]
-        edges["edge_conf"][d, :w] = loc["ecf"]
-        edges["edge_sup"][d, :w] = loc["esp"]
-        edges["edge_lift"][d, :w] = loc["elf"]
+        if comp is not None:
+            edges["edge_pos"][d, :w] = loc["epos"]
+            edges["edge_span"][d, :w] = loc["espan"]
+            edges["edge_tail"][d, :w] = loc["etail"]
+            lo, hi = ranges[d]
+            start_pos = max(lo, 1)
+            nl = 1 + max(hi - start_pos, 0)
+            for name, src in (
+                ("s_item", cols["node_item"]),
+                ("s_support", cols["support"]),
+                ("s_confidence", cols["confidence"]),
+                ("s_lift", cols["lift"]),
+            ):
+                scols[name][d, 0] = src[0]
+                scols[name][d, 1:nl] = src[start_pos:hi]
+        else:
+            edges["edge_child"][d, :w] = loc["lc"]
+            edges["edge_conf"][d, :w] = loc["ecf"]
+            edges["edge_sup"][d, :w] = loc["esp"]
+            edges["edge_lift"][d, :w] = loc["elf"]
         edges["l2g"][d, : loc["l2g"].shape[0]] = loc["l2g"]
     max_fanout = max(max(loc["fan"] for loc in locals_), 1)
 
@@ -468,6 +615,13 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
         edge_sup=put(edges["edge_sup"]),
         edge_lift=put(edges["edge_lift"]),
         l2g=put(edges["l2g"]),
+        edge_pos=put(edges["edge_pos"]),
+        edge_span=put(edges["edge_span"]),
+        edge_tail=put(edges["edge_tail"]),
+        s_item=put(scols["s_item"]),
+        s_support=put(scols["s_support"]),
+        s_confidence=put(scols["s_confidence"]),
+        s_lift=put(scols["s_lift"]),
         g_dfs_to_node=jax.device_put(
             jnp.asarray(d2n, jnp.int32), repl
         ),
@@ -477,6 +631,12 @@ def shard_device_trie(frozen: FrozenTrie, mesh: Mesh) -> ShardPlan:
         n_shards=n_shards,
         max_fanout=max_fanout,
         max_postings=int(frozen.max_postings),
+        layout=layout,
+        n_transactions=comp.n_transactions if comp is not None else 0,
+        confidence_scale=(
+            comp.confidence_scale if comp is not None else 1.0
+        ),
+        lift_scale=comp.lift_scale if comp is not None else 1.0,
     )
     return ShardPlan(
         mesh=mesh,
@@ -503,6 +663,8 @@ _MASK_FILLS = {
     "p_support": 0.0, "p_confidence": 0.0, "p_lift": 0.0, "p_depth": -1,
     "child_offsets": 0, "edge_item": -7, "edge_child": -1,
     "edge_conf": 0.0, "edge_sup": 0.0, "edge_lift": 0.0, "l2g": -1,
+    "edge_pos": -1, "edge_span": 0, "edge_tail": 0,
+    "s_item": -2, "s_support": 0, "s_confidence": 0, "s_lift": 0,
 }
 
 
@@ -554,6 +716,10 @@ def mask_dead_shards(
         n_shards=st.n_shards,
         max_fanout=st.max_fanout,
         max_postings=st.max_postings,
+        layout=st.layout,
+        n_transactions=st.n_transactions,
+        confidence_scale=st.confidence_scale,
+        lift_scale=st.lift_scale,
     )
     local_item_offsets = plan.local_item_offsets.copy()
     local_item_offsets[dead_set] = 0
@@ -646,11 +812,15 @@ def host_prefix_ranges(
 # ----------------------------------------------------------------------
 @functools.partial(
     jax.jit,
-    static_argnames=("mesh", "k", "metric", "min_depth", "interpret"),
+    static_argnames=(
+        "mesh", "k", "metric", "min_depth", "interpret",
+        "n_transactions", "confidence_scale", "lift_scale",
+    ),
 )
 def _topk_ranges_sharded(
     st: ShardedDeviceTrie, los, his,
     *, mesh, k, metric, min_depth, interpret,
+    n_transactions=0, confidence_scale=1.0, lift_scale=1.0,
 ):
     n_shards = int(mesh.shape["data"])
 
@@ -662,6 +832,8 @@ def _topk_ranges_sharded(
         v, p = topk_rank_batch_pallas(
             sup[0], conf[0], lif[0], dep[0], ll, hh,
             k=k, metric=metric, min_depth=min_depth, interpret=interpret,
+            n_transactions=n_transactions,
+            confidence_scale=confidence_scale, lift_scale=lift_scale,
         )
         p = jnp.where(p >= 0, p + b, -1)
         if n_shards == 1:
@@ -712,6 +884,7 @@ def sharded_top_k_rules_batch(
         plan.trie, jnp.asarray(los), jnp.asarray(his),
         mesh=plan.mesh, k=int(k), metric=metric,
         min_depth=int(min_depth), interpret=_interpret(),
+        **plan.trie._dequant(),
     )
     node = _take_back(plan.trie.g_dfs_to_node, pos)
     return {"values": vals, "node": node, "dfs_pos": pos}
@@ -721,16 +894,22 @@ def sharded_top_k_rules_batch(
     jax.jit,
     static_argnames=(
         "mesh", "k", "metric", "min_depth", "role", "max_postings",
-        "interpret",
+        "interpret", "layout",
+        "n_transactions", "confidence_scale", "lift_scale",
     ),
 )
 def _rules_with_sharded(
     st: ShardedDeviceTrie, plos, phis, gdelta, qitems,
     *, mesh, k, metric, min_depth, role, max_postings, interpret,
+    layout="plain", n_transactions=0, confidence_scale=1.0,
+    lift_scale=1.0,
 ):
     ps, pr = P("data"), P()
     n_shards = int(mesh.shape["data"])
-    if role == "consequent":
+    # compressed plans carry no posting-ordered metric columns, so the
+    # consequent role runs through the membership kernel below (a pure
+    # node_item == qitem self-hit), mirroring the single-device dispatch
+    if role == "consequent" and layout != "compressed":
         def fn(psup, pconf, plif, pdep, plos, phis, gdelta):
             v, p = topk_rank_batch_pallas(
                 psup[0], pconf[0], plif[0], pdep[0], plos[0], phis[0],
@@ -760,6 +939,8 @@ def _rules_with_sharded(
             sp_lo[0], sp_hi[0], plos[0], phis[0], qi,
             k=k, metric=metric, min_depth=min_depth, role=role,
             max_postings=max_postings, interpret=interpret,
+            n_transactions=n_transactions,
+            confidence_scale=confidence_scale, lift_scale=lift_scale,
         )
         # local DFS position -> global DFS position before merging
         p = jnp.where(p >= 0, p + base[0], -1)
@@ -844,12 +1025,16 @@ def sharded_rules_with(
         mesh=plan.mesh, k=int(k), metric=metric,
         min_depth=int(min_depth), role=role,
         max_postings=plan.trie.max_postings, interpret=_interpret(),
+        layout=plan.trie.layout, **plan.trie._dequant(),
     )
     inv_j = jnp.asarray(inv, jnp.int32)
     vals = vals[inv_j]
     pos = pos[inv_j]
+    # compressed consequent answers come back as DFS positions (the
+    # membership kernel's coordinate), like every other role there
     back = (
-        plan.trie.g_item_nodes if role == "consequent"
+        plan.trie.g_item_nodes
+        if role == "consequent" and plan.trie.layout != "compressed"
         else plan.trie.g_dfs_to_node
     )
     return {"values": vals, "node": _take_back(back, pos), "pos": pos}
@@ -921,6 +1106,76 @@ def _rule_search_sharded(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "max_fanout", "interpret",
+        "n_transactions", "confidence_scale", "lift_scale",
+    ),
+)
+def _rule_search_sharded_span(
+    st: ShardedDeviceTrie, queries, ant_len,
+    *, mesh, max_fanout, interpret,
+    n_transactions=0, confidence_scale=1.0, lift_scale=1.0,
+):
+    """Compressed-layout twin of ``_rule_search_sharded``: every device
+    runs the span-aware descent kernel over its local span pool, then
+    the identical found-winner merge + global Eq. 1-4 re-assembly (local
+    DFS positions translate through the shard's ``l2g`` row, whose index
+    space coincides with local position space)."""
+    n_shards = int(mesh.shape["data"])
+
+    def fn(co, ei, epos, espan, etail, nit, sup, conf, lif, l2g,
+           queries, ant_len):
+        out = rule_search_span_pallas(
+            co[0], ei[0], epos[0], espan[0], etail[0],
+            nit[0], sup[0], conf[0], lif[0],
+            queries, ant_len, max_fanout=max_fanout,
+            n_transactions=n_transactions,
+            confidence_scale=confidence_scale, lift_scale=lift_scale,
+            interpret=interpret,
+        )
+        l2g1 = l2g[0]
+        node_g = jnp.where(
+            out["pos"] > 0,
+            l2g1[jnp.clip(out["pos"], 0, l2g1.shape[0] - 1)],
+            -1,
+        )
+        if n_shards == 1:
+            return (
+                out["found"], node_g, out["confidence"],
+                out["support"], out["lift"],
+            )
+        gather = functools.partial(jax.lax.all_gather, axis_name="data")
+        found_all = gather(out["found"])          # [P, Q]
+        win = jnp.argmax(found_all.astype(jnp.int32), axis=0)
+
+        def take(a):
+            return jnp.take_along_axis(gather(a), win[None, :], axis=0)[0]
+
+        found = jnp.any(found_all, axis=0)
+        node = take(node_g)
+        conf_o = take(out["confidence"])
+        sup_o = take(out["support"])
+        nlift = take(out["lift"])
+        csup = jnp.max(gather(out["con_support"]), axis=0)
+        seq_len = jnp.sum((queries >= 0).astype(jnp.int32), axis=1)
+        single = (seq_len - ant_len) == 1
+        lift = compound_lift(found, single, nlift, conf_o, csup)
+        return found, node, conf_o, sup_o, lift
+
+    ps, pr = P("data"), P()
+    return _shard_map(
+        fn, mesh, in_specs=(ps,) * 10 + (pr, pr),
+        out_specs=(pr,) * 5,
+    )(
+        st.child_offsets, st.edge_item, st.edge_pos, st.edge_span,
+        st.edge_tail, st.s_item, st.s_support, st.s_confidence,
+        st.s_lift, st.l2g,
+        queries, ant_len,
+    )
+
+
 def sharded_rule_search_batch(
     plan: ShardPlan, queries, ant_len=None,
 ) -> Dict[str, jax.Array]:
@@ -951,11 +1206,18 @@ def sharded_rule_search_batch(
     # whole-query dedup, same helper as the single-device op: skewed
     # serving traffic descends each unique canonical row once per shard
     queries, ant_len, inv = dedup_query_rows(queries, ant_len)
-    found, node, conf, sup, lift = _rule_search_sharded(
-        plan.trie, jnp.asarray(queries), jnp.asarray(ant_len),
-        mesh=plan.mesh, max_fanout=plan.trie.max_fanout,
-        interpret=_interpret(),
-    )
+    if plan.trie.layout == "compressed":
+        found, node, conf, sup, lift = _rule_search_sharded_span(
+            plan.trie, jnp.asarray(queries), jnp.asarray(ant_len),
+            mesh=plan.mesh, max_fanout=plan.trie.max_fanout,
+            interpret=_interpret(), **plan.trie._dequant(),
+        )
+    else:
+        found, node, conf, sup, lift = _rule_search_sharded(
+            plan.trie, jnp.asarray(queries), jnp.asarray(ant_len),
+            mesh=plan.mesh, max_fanout=plan.trie.max_fanout,
+            interpret=_interpret(),
+        )
     out = {
         "found": found, "node": node,
         "support": sup, "confidence": conf, "lift": lift,

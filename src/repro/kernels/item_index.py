@@ -68,7 +68,7 @@ from jax.experimental import pallas as pl
 
 import numpy as np
 
-from .metrics_inkernel import rank_score
+from .metrics_inkernel import dequantize_metrics, metric_pad_dtype, rank_score
 from .rank import LANE, _iota, kbest_update
 from .tuning import get_kernel_config
 
@@ -91,6 +91,7 @@ def _n_bsearch_steps(max_postings: int) -> int:
 def _make_member_kernel(
     k: int, kpad: int, metric: str, min_depth: int, role: str,
     n_steps: int, p_width: int, windowed: bool, block_n: int,
+    n_transactions: int, confidence_scale: float, lift_scale: float,
 ):
     """Kernel body factory.  ``p_width`` is the posting operand's lane
     width: the padded full-array length, or ``Wpad`` when ``windowed``
@@ -112,9 +113,12 @@ def _make_member_kernel(
         plo = jnp.int32(0) if windowed else params_ref[0, 0]
         phi = params_ref[0, 1]
         qitem = params_ref[0, 2]
-        sup = sup_ref[...][0]
-        conf = conf_ref[...][0]
-        lift = lift_ref[...][0]
+        # Quantized columns (compressed layout) ride their narrow storage
+        # dtype through HBM->VMEM and widen here, per tile.
+        sup, conf, lift = dequantize_metrics(
+            sup_ref[...][0], conf_ref[...][0], lift_ref[...][0],
+            n_transactions, confidence_scale, lift_scale,
+        )
         depth = depth_ref[...][0]
         nitem = nitem_ref[...][0]
         pos = _iota(block_n) + i * block_n
@@ -175,6 +179,9 @@ def rules_with_pallas(
     window: bool | None = None,
     interpret: bool = False,
     block_n: int | None = None,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
 ):
     """Top-k (scores, DFS positions) of the rules involving each queried
     item, for Q queries in ONE launch.
@@ -205,6 +212,9 @@ def rules_with_pallas(
         k=int(k), metric=metric, min_depth=int(min_depth), role=role,
         max_postings=int(max_postings), window=bool(window),
         interpret=interpret, block_n=int(block_n),
+        n_transactions=int(n_transactions),
+        confidence_scale=float(confidence_scale),
+        lift_scale=float(lift_scale),
     )
 
 
@@ -213,13 +223,14 @@ def rules_with_pallas(
     static_argnames=(
         "k", "metric", "min_depth", "role", "max_postings", "window",
         "interpret", "block_n",
+        "n_transactions", "confidence_scale", "lift_scale",
     ),
 )
 def _rules_with_impl(
     support, confidence, lift, depth, node_item,
     post_lo, post_hi, plos, phis, items,
     *, k, metric, min_depth, role, max_postings, window, interpret,
-    block_n,
+    block_n, n_transactions, confidence_scale, lift_scale,
 ):
     n = support.shape[0]
     q = plos.shape[0]
@@ -236,9 +247,9 @@ def _rules_with_impl(
             a.astype(dtype), (0, npad), constant_values=fill
         ).reshape(1, -1)
 
-    sup = pad_col(support, 0.0, jnp.float32)
-    conf = pad_col(confidence, 0.0, jnp.float32)
-    lif = pad_col(lift, 0.0, jnp.float32)
+    sup = pad_col(support, 0, metric_pad_dtype(support))
+    conf = pad_col(confidence, 0, metric_pad_dtype(confidence))
+    lif = pad_col(lift, 0, metric_pad_dtype(lift))
     dep = pad_col(depth, -1, jnp.int32)
     # -2 never equals a query item (absent queries are sanitized to -1)
     nit = pad_col(node_item, -2, jnp.int32)
@@ -294,6 +305,7 @@ def _rules_with_impl(
         _make_member_kernel(
             k, kpad, metric, min_depth, role,
             _n_bsearch_steps(max_postings), p_width, window, block_n,
+            n_transactions, confidence_scale, lift_scale,
         ),
         grid=grid,
         in_specs=[

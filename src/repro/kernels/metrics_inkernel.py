@@ -12,7 +12,17 @@ reference oracles are bit-identical by construction:
             = Conf / Support(C)   for compound consequents (consequent-path
                                    Support from a root-anchored walk)
 
-2. ``rank_score`` — the interestingness measures used to rank rules
+2. ``dequantize_metrics`` — the compressed layout's quantized-column
+   reconstruction (PR 8): support stored as exact int32 transaction counts
+   becomes the fp32 ratio ``count / n_transactions`` in-kernel; bf16
+   confidence/lift columns rescale to fp32; int8 columns (encoded via
+   ``distributed.compression.quantize_int8``) rescale by their per-column
+   fp32 scale.  Dtype dispatch happens at trace time (array dtypes are
+   static), so the unquantized fp32 path is a no-op and stays bit-identical
+   to the plain layout.  Kernels and oracles share THIS function, which is
+   what makes kernel == oracle bitwise even for quantized columns.
+
+3. ``rank_score`` — the interestingness measures used to rank rules
    (Slimani, arXiv:1312.4800 motivates ranking beyond confidence alone).
    Every node column triple (Support s, Confidence c, Lift l) determines:
 
@@ -36,6 +46,67 @@ import jax.numpy as jnp
 CONVICTION_CAP = 1e30
 
 RANK_METRICS = ("support", "confidence", "lift", "leverage", "conviction")
+
+
+def _dequantize_column(col, scale: float):
+    """One column of ``dequantize_metrics``: trace-time dtype dispatch."""
+    if col.dtype == jnp.float32:
+        return col
+    if col.dtype == jnp.int8:
+        # inverse of distributed.compression.quantize_int8 (q * scale)
+        return col.astype(jnp.float32) * jnp.float32(scale)
+    # bf16 (or any narrower float) rescales by plain cast
+    return col.astype(jnp.float32)
+
+
+def dequantize_metrics(
+    support, confidence, lift,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
+):
+    """fp32 reconstruction of (possibly quantized) metric columns.
+
+    * int32 ``support`` holds exact transaction counts; the ratio comes
+      back as ``count * (1 / n_transactions)`` with the reciprocal taken
+      on host as an f32 constant.  A multiply rounds identically under
+      every XLA compilation context (an f32 divide does NOT: the jitted
+      lowering uses a reciprocal-multiply that can differ from the eager
+      correctly-rounded divide by 1 ulp, which would break kernel==oracle
+      bit-parity).  Total reconstruction error vs the exact ratio is
+      <= 2 ulp relative — the documented bound for the int32 column.
+    * bf16 columns widen losslessly to f32 (the error was taken at
+      encode time: |x_bf16 - x| <= 2^-9 * |x| relative).
+    * int8 columns rescale by their per-column fp32 scale (the
+      ``distributed.compression.quantize_int8`` encoding:
+      ``x ~= q * scale``, |err| <= scale / 2).
+    * f32 columns pass through untouched — the unquantized compressed
+      layout stays bit-identical to plain through this function.
+    """
+    if support.dtype == jnp.int32:
+        # multiply by a host-side f32 reciprocal constant, NOT an on-device
+        # divide: see the docstring's determinism note
+        support = support.astype(jnp.float32) * jnp.float32(
+            1.0 / max(int(n_transactions), 1)
+        )
+    elif support.dtype != jnp.float32:
+        support = support.astype(jnp.float32)
+    return (
+        support,
+        _dequantize_column(confidence, confidence_scale),
+        _dequantize_column(lift, lift_scale),
+    )
+
+
+def metric_pad_dtype(a):
+    """Storage dtype a metric column keeps through tile padding: the
+    quantized dtypes (int32 counts / bf16 / int8) ride narrow through
+    HBM->VMEM; anything else normalizes to f32 as the kernels always
+    did.  Shared by every kernel wrapper that pads node metric columns,
+    so dequantization (above) always sees the encoder's dtype."""
+    if a.dtype in (jnp.int32, jnp.bfloat16, jnp.int8):
+        return a.dtype
+    return jnp.float32
 
 
 def rank_score(metric: str, support, confidence, lift):

@@ -21,6 +21,7 @@ from repro.core.array_trie import (
     DeviceTrie,
     canonical_prefix_rows,
     child_lookup,
+    compressed_step,
     sanitize_query_items,
 )
 
@@ -29,7 +30,11 @@ from .metrics_inkernel import RANK_METRICS, compound_lift, rank_score
 from .rank import topk_rank_batch_pallas, topk_rank_pallas
 from .ref import rules_with_ref, topk_rank_batch_ref, topk_rank_ref
 from .support_count import support_count_pallas
-from .rule_search import rule_search_fused_pallas, rule_search_pallas
+from .rule_search import (
+    rule_search_fused_pallas,
+    rule_search_pallas,
+    rule_search_span_pallas,
+)
 from .trie_reduce import trie_reduce_pallas
 from .tuning import launch_pad
 
@@ -424,6 +429,21 @@ def annotate_candidates(
 # ----------------------------------------------------------------------
 # trie search
 # ----------------------------------------------------------------------
+def _dequant_statics(src) -> Dict:
+    """The static dequantization params (``metrics_inkernel``) carried by
+    a compressed trie or one of the arrays dicts below; fp32 no-op
+    defaults otherwise.  Plumbed into every rank/membership/reduce launch
+    so quantized columns widen in-kernel."""
+    get = src.get if isinstance(src, dict) else (
+        lambda k, d: getattr(src, k, d)
+    )
+    return {
+        "n_transactions": int(get("n_transactions", 0)),
+        "confidence_scale": float(get("confidence_scale", 1.0)),
+        "lift_scale": float(get("lift_scale", 1.0)),
+    }
+
+
 def edge_metric_arrays(trie) -> Dict[str, jax.Array]:
     """Edge-annotated metrics: child-node metrics gathered onto edges once
     at freeze time, so the kernel needs no per-step metric gathers
@@ -432,7 +452,29 @@ def edge_metric_arrays(trie) -> Dict[str, jax.Array]:
     Also carries the CSR child-bucket index (``child_offsets`` +
     ``max_fanout``) when the trie has one; the fused single-launch kernel
     needs it, and the full-sweep kernel ignores it.
+
+    COMPRESSED tries return the span-table form instead (marked with
+    ``"layout": "compressed"``): the compressed CSR + span edge columns
+    and the POSITION-indexed (possibly quantized) node metric columns —
+    no edge metric gathers exist on this layout at all, which is a large
+    part of its memory win.
     """
+    if getattr(trie, "layout", "plain") == "compressed":
+        return {
+            "layout": "compressed",
+            "child_offsets": jnp.asarray(trie.child_offsets, jnp.int32),
+            "edge_item": jnp.asarray(trie.edge_item, jnp.int32),
+            "edge_pos": jnp.asarray(trie.edge_child, jnp.int32),
+            "edge_span": jnp.asarray(trie.edge_span, jnp.int32),
+            "edge_tail": jnp.asarray(trie.edge_tail, jnp.int32),
+            "node_item": jnp.asarray(trie.node_item, jnp.int32),
+            "support": jnp.asarray(trie.support),
+            "confidence": jnp.asarray(trie.confidence),
+            "lift": jnp.asarray(trie.lift),
+            "dfs_to_node": jnp.asarray(trie.dfs_to_node, jnp.int32),
+            "max_fanout": int(getattr(trie, "max_fanout", 0)),
+            **_dequant_statics(trie),
+        }
     child = jnp.asarray(trie.edge_child, jnp.int32)
     safe_child = jnp.maximum(child, 0)  # E == 0 → empty gather stays valid
     offsets = getattr(trie, "child_offsets", None)
@@ -448,6 +490,13 @@ def edge_metric_arrays(trie) -> Dict[str, jax.Array]:
         ),
         "max_fanout": int(getattr(trie, "max_fanout", 0)),
     }
+
+
+@jax.jit
+def _pos_to_node(found, pos, dfs_to_node):
+    """Span-kernel DFS position → original node id (-1 where not found),
+    jitted so the compressed path's post-map is one dispatch."""
+    return jnp.where(found, dfs_to_node[jnp.maximum(pos, 0)], -1)
 
 
 def rule_search(
@@ -475,6 +524,29 @@ def rule_search(
             "found": jnp.zeros((0,), bool),
             "node": jnp.zeros((0,), jnp.int32),
             "support": z, "confidence": z, "lift": z,
+        }
+
+    if edges.get("layout") == "compressed":
+        out = rule_search_span_pallas(
+            edges["child_offsets"], edges["edge_item"],
+            edges["edge_pos"], edges["edge_span"], edges["edge_tail"],
+            edges["node_item"], edges["support"], edges["confidence"],
+            edges["lift"], queries, ant_len,
+            max_fanout=edges["max_fanout"],
+            n_transactions=edges["n_transactions"],
+            confidence_scale=edges["confidence_scale"],
+            lift_scale=edges["lift_scale"],
+            interpret=interp,
+        )
+        # The span kernel reports DFS positions; the op-level contract is
+        # original node ids (same dict shape as the plain paths).
+        node = _pos_to_node(out["found"], out["pos"], edges["dfs_to_node"])
+        return {
+            "found": out["found"],
+            "node": node,
+            "support": out["support"],
+            "confidence": out["confidence"],
+            "lift": out["lift"],
         }
 
     if edges.get("child_offsets") is not None:
@@ -527,6 +599,12 @@ def dfs_rank_arrays(trie) -> Dict[str, jax.Array]:
     ``FrozenTrie.freeze`` / ``array_trie.dfs_layout``.  Pass the result
     back via ``top_k_rules(..., arrays=...)`` to amortize the gathers
     across repeated ranked queries on the same trie.
+
+    On the COMPRESSED layout the node axis already IS DFS pre-order, so
+    the columns are direct (possibly quantized) views with NO gathers —
+    no fp32 duplicate of the quantized storage ever materializes, which
+    is the rank-path half of the layout's memory win.  The dict carries
+    the dequant statics for the kernel launches.
     """
     d2n = getattr(trie, "dfs_to_node", None)
     if d2n is None:
@@ -535,6 +613,16 @@ def dfs_rank_arrays(trie) -> Dict[str, jax.Array]:
             "FrozenTrie.freeze or compute array_trie.dfs_layout first"
         )
     d2n = jnp.asarray(d2n, jnp.int32)
+    if getattr(trie, "layout", "plain") == "compressed":
+        return {
+            "support": jnp.asarray(trie.support),
+            "confidence": jnp.asarray(trie.confidence),
+            "lift": jnp.asarray(trie.lift),
+            "depth": jnp.asarray(trie.node_depth, jnp.int32),
+            "subtree_size": jnp.asarray(trie.subtree_size, jnp.int32),
+            "dfs_to_node": d2n,
+            **_dequant_statics(trie),
+        }
     return {
         "support": jnp.asarray(trie.support)[d2n],
         "confidence": jnp.asarray(trie.confidence)[d2n],
@@ -606,6 +694,7 @@ def top_k_rules(
         arrays["support"], arrays["confidence"], arrays["lift"],
         arrays["depth"], lo, hi,
         k=int(k), metric=metric, min_depth=int(min_depth),
+        **_dequant_statics(arrays),
     )
     node_ids = jnp.where(
         pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
@@ -641,6 +730,14 @@ def item_rank_arrays(trie) -> Dict[str, jax.Array]:
     binary-searchable), and posting-ordered metric columns for the
     consequent-role fast path.  Pass the result back via
     ``rules_with(..., arrays=...)`` to amortize across repeated queries.
+
+    The COMPRESSED layout stores the posting subtree bounds precomputed
+    (``CompressedTrie.device_arrays``) and its columns are already
+    DFS-ordered, so everything is a direct view; it has NO posting-node
+    array (``item_nodes``) and hence no posting-ordered column block —
+    ``rules_with`` routes the consequent role through the membership
+    kernel (pure ``node_item`` self-hit, no posting arrays touched)
+    instead of the posting-range fast path.
     """
     offsets = getattr(trie, "item_offsets", None)
     if offsets is None:
@@ -649,6 +746,20 @@ def item_rank_arrays(trie) -> Dict[str, jax.Array]:
             "freeze it with FrozenTrie / build_frozen_trie first"
         )
     offsets = np.asarray(offsets)
+    if getattr(trie, "layout", "plain") == "compressed":
+        return {
+            "support": jnp.asarray(trie.support),
+            "confidence": jnp.asarray(trie.confidence),
+            "lift": jnp.asarray(trie.lift),
+            "depth": jnp.asarray(trie.node_depth, jnp.int32),
+            "node_item": jnp.asarray(trie.node_item, jnp.int32),
+            "post_lo": jnp.asarray(trie.post_lo, jnp.int32),
+            "post_hi": jnp.asarray(trie.post_hi, jnp.int32),
+            "item_offsets": offsets,   # host: query slicing is scalar
+            "dfs_to_node": jnp.asarray(trie.dfs_to_node, jnp.int32),
+            "max_postings": int(getattr(trie, "max_postings", 0)),
+            **_dequant_statics(trie),
+        }
     item_nodes = np.asarray(trie.item_nodes)
     dfs_order = np.asarray(trie.dfs_order)
     subtree = np.asarray(trie.subtree_size)
@@ -805,7 +916,7 @@ def rules_with(
     )
     plos_j = jnp.asarray(plos)
     phis_j = jnp.asarray(phis)
-    if role == "consequent":
+    if role == "consequent" and "p_support" in arrays:
         rank_fn = (
             functools.partial(topk_rank_batch_pallas, interpret=_interpret())
             if use_kernel else topk_rank_batch_ref
@@ -818,6 +929,11 @@ def rules_with(
         )
         back = arrays["item_nodes"]
     else:
+        # The compressed layout has no posting-ordered column block, so
+        # its consequent role also runs here: the membership kernel's
+        # consequent test is a pure node_item self-hit (the posting
+        # arrays are operands but never read), and postings are
+        # DFS-sorted, so the node order matches the fast path's.
         member_fn = (
             functools.partial(rules_with_pallas, interpret=_interpret())
             if use_kernel else rules_with_ref
@@ -830,6 +946,7 @@ def rules_with(
             k=int(k), metric=metric, min_depth=int(min_depth), role=role,
             **({"max_postings": arrays["max_postings"]}
                if use_kernel else {}),
+            **_dequant_statics(arrays),
         )
         back = arrays["dfs_to_node"]
     inv_j = jnp.asarray(inv, jnp.int32)
@@ -876,6 +993,33 @@ def prefix_ranges(
         mat[i, : len(r)] = r
     if dt is None:
         dt = _cached_device_trie(trie)
+    if getattr(dt, "layout", "plain") == "compressed":
+        # Span-aware descent: positions ARE DFS indices on this layout,
+        # so the subtree range is [pos, pos + subtree_size[pos]) with no
+        # dfs_order gather at all.
+        n = dt.subtree_size.shape[0]
+        pos = jnp.zeros((q,), jnp.int32)
+        rem = jnp.zeros((q,), jnp.int32)
+        ctail = jnp.zeros((q,), jnp.int32)
+        okm = jnp.ones((q,), bool)
+        for c in range(width):
+            col = jnp.asarray(mat[:, c])
+            p2, r2, t2, hit = compressed_step(dt, pos, rem, ctail, col)
+            # only -1 is padding; other negatives are live (absent) items
+            live = col != -1
+            active = live & okm
+            okm = jnp.where(active, hit, okm)
+            adv = active & hit
+            pos = jnp.where(adv, p2, pos)
+            rem = jnp.where(adv, r2, rem)
+            ctail = jnp.where(adv, t2, ctail)
+        los = jnp.where(okm, pos, 0).astype(jnp.int32)
+        his = jnp.where(
+            okm, pos + dt.subtree_size[pos], 0
+        ).astype(jnp.int32)
+        his = jnp.minimum(his, n)
+        nodes = jnp.where(okm, dt.dfs_to_node[pos], -1)
+        return los, his, nodes
     n = dt.dfs_order.shape[0]
     nodes = jnp.zeros((q,), jnp.int32)
     for c in range(width):
@@ -964,6 +1108,7 @@ def top_k_rules_batch(
         arrays["support"], arrays["confidence"], arrays["lift"],
         arrays["depth"], los, his,
         k=int(k), metric=metric, min_depth=int(min_depth),
+        **_dequant_statics(arrays),
     )
     node_ids = jnp.where(
         pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
@@ -1047,11 +1192,14 @@ def rule_search_batch(
 # traversal reduction
 # ----------------------------------------------------------------------
 def trie_reduce(trie) -> Dict[str, jax.Array]:
+    dq = _dequant_statics(trie)
     n, sup_sum, conf_max, conf_sum = trie_reduce_pallas(
         jnp.asarray(trie.support),
         jnp.asarray(trie.confidence),
         jnp.asarray(trie.node_depth),
         interpret=_interpret(),
+        n_transactions=dq["n_transactions"],
+        confidence_scale=dq["confidence_scale"],
     )
     return {
         "n_rules": n,

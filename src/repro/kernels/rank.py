@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .metrics_inkernel import rank_score
+from .metrics_inkernel import dequantize_metrics, metric_pad_dtype, rank_score
 from .tuning import get_kernel_config
 
 BN = 8192    # default nodes per tile (tunable: KernelConfig.rank_bn)
@@ -142,7 +142,8 @@ def kbest_update(vals_ref, pos_ref, score, pos, k: int, kpad: int):
 
 
 def _make_kernel(k: int, kpad: int, metric: str, min_depth: int,
-                 block_n: int):
+                 block_n: int, n_transactions: int,
+                 confidence_scale: float, lift_scale: float):
     def kernel(
         params_ref, sup_ref, conf_ref, lift_ref, depth_ref,
         vals_ref, pos_ref,
@@ -158,9 +159,12 @@ def _make_kernel(k: int, kpad: int, metric: str, min_depth: int,
 
         lo = params_ref[0, 0]
         hi = params_ref[0, 1]
-        sup = sup_ref[...][0]
-        conf = conf_ref[...][0]
-        lift = lift_ref[...][0]
+        # Quantized columns (compressed layout) ride their narrow storage
+        # dtype through HBM->VMEM and widen here, per tile.
+        sup, conf, lift = dequantize_metrics(
+            sup_ref[...][0], conf_ref[...][0], lift_ref[...][0],
+            n_transactions, confidence_scale, lift_scale,
+        )
         depth = depth_ref[...][0]
         pos = _iota(block_n) + i * block_n
         score = rank_score(metric, sup, conf, lift)
@@ -184,6 +188,9 @@ def topk_rank_batch_pallas(
     min_depth: int = 1,
     interpret: bool = False,
     block_n: int | None = None,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
 ):
     """Top-k of EVERY DFS range ``[los[q], his[q])`` in one launch.
 
@@ -192,6 +199,11 @@ def topk_rank_batch_pallas(
     Q prefix-scoped rankings cost one ``pallas_call`` instead of Q.
     Returns ``(values f32[Q, k], positions int32[Q, k])``, each row in
     ``jax.lax.top_k`` order with ``(-inf, -1)`` empty slots.
+
+    Quantized metric columns (compressed layout: int32 support counts,
+    bf16/int8 confidence/lift) stay narrow through VMEM and widen
+    in-kernel via the static dequant params, which default to the fp32
+    no-op.
 
     ``block_n`` (nodes per tile) resolves from the active per-backend
     ``KernelConfig`` when None — resolution happens in this thin
@@ -203,16 +215,23 @@ def topk_rank_batch_pallas(
         support, confidence, lift, depth, los, his,
         k=k, metric=metric, min_depth=min_depth, interpret=interpret,
         block_n=int(block_n),
+        n_transactions=int(n_transactions),
+        confidence_scale=float(confidence_scale),
+        lift_scale=float(lift_scale),
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "metric", "min_depth", "interpret", "block_n"),
+    static_argnames=(
+        "k", "metric", "min_depth", "interpret", "block_n",
+        "n_transactions", "confidence_scale", "lift_scale",
+    ),
 )
 def _topk_rank_batch_impl(
     support, confidence, lift, depth, los, his,
     *, k, metric, min_depth, interpret, block_n,
+    n_transactions, confidence_scale, lift_scale,
 ):
     n = support.shape[0]
     q = los.shape[0]
@@ -230,9 +249,9 @@ def _topk_rank_batch_impl(
             a.astype(dtype), (0, npad), constant_values=fill
         ).reshape(1, -1)
 
-    sup = pad(support, 0.0, jnp.float32)
-    conf = pad(confidence, 0.0, jnp.float32)
-    lif = pad(lift, 0.0, jnp.float32)
+    sup = pad(support, 0, metric_pad_dtype(support))
+    conf = pad(confidence, 0, metric_pad_dtype(confidence))
+    lif = pad(lift, 0, metric_pad_dtype(lift))
     dep = pad(depth, -1, jnp.int32)
     # Clamping hi to N keeps every padding lane outside [lo, hi).
     los = jnp.maximum(jnp.asarray(los, jnp.int32), 0)
@@ -245,7 +264,10 @@ def _topk_rank_batch_impl(
     col_spec = pl.BlockSpec((1, block_n), lambda qi, i: (0, i))
     out_spec = pl.BlockSpec((1, kpad), lambda qi, i: (qi, 0))
     vals, pos = pl.pallas_call(
-        _make_kernel(k, kpad, metric, min_depth, block_n),
+        _make_kernel(
+            k, kpad, metric, min_depth, block_n,
+            n_transactions, confidence_scale, lift_scale,
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, LANE), lambda qi, i: (qi, 0)),
@@ -274,6 +296,9 @@ def topk_rank_pallas(
     min_depth: int = 1,
     interpret: bool = False,
     block_n: int | None = None,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
 ):
     """Top-k (scores, DFS positions) of the rules in DFS range ``[lo, hi)``.
 
@@ -287,6 +312,7 @@ def topk_rank_pallas(
         jnp.asarray(lo, jnp.int32).reshape(1),
         jnp.asarray(hi, jnp.int32).reshape(1),
         k=k, metric=metric, min_depth=min_depth, interpret=interpret,
-        block_n=block_n,
+        block_n=block_n, n_transactions=n_transactions,
+        confidence_scale=confidence_scale, lift_scale=lift_scale,
     )
     return vals[0], pos[0]

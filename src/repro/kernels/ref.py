@@ -12,7 +12,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .metrics_inkernel import compound_lift, rank_score
+from .metrics_inkernel import compound_lift, dequantize_metrics, rank_score
 
 
 # ----------------------------------------------------------------------
@@ -136,23 +136,138 @@ def rule_search_fused_ref(
     }
 
 
+def rule_search_span_ref(
+    edge_parent: jax.Array,   # int32 [Ec] COMPRESSED parent ids
+    edge_item: jax.Array,     # int32 [Ec]
+    edge_pos: jax.Array,      # int32 [Ec] child DFS position (run head)
+    edge_span: jax.Array,     # int32 [Ec] interior steps to the run tail
+    edge_tail: jax.Array,     # int32 [Ec] run tail's compressed id
+    node_item: jax.Array,     # int32 [N]  item per DFS position
+    support: jax.Array,       # f32|int32 [N] position-indexed
+    confidence: jax.Array,    # f32|bf16|int8 [N]
+    lift: jax.Array,          # f32|bf16|int8 [N]
+    queries: jax.Array,       # int32 [Q, L]  (-1 padded)
+    ant_len: jax.Array,       # int32 [Q]
+    *,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
+) -> Dict[str, jax.Array]:
+    """Ground truth for the COMPRESSED-layout span kernel: the same
+    ``(pos, rem, ctail)`` state machine, but CSR-node steps match against
+    the FULL compressed edge table (broadcast compare on the compressed
+    parent-id column) instead of a bucket-windowed scan — independent
+    logic for the part the kernel optimizes.  Metric columns dequantize
+    through the same shared ``dequantize_metrics``, so fp32 inputs keep
+    the oracle bit-identical to the span kernel AND to the plain fused
+    pair."""
+    q, width = queries.shape
+    n = node_item.shape[0]
+    if edge_parent.shape[0] == 0 or width == 0:
+        z = jnp.zeros((q,), jnp.float32)
+        return {
+            "found": jnp.zeros((q,), bool),
+            "pos": jnp.full((q,), -1, jnp.int32),
+            "support": z, "confidence": z, "lift": z, "con_support": z,
+        }
+    sup_col, conf_col, lift_col = dequantize_metrics(
+        support, confidence, lift,
+        n_transactions, confidence_scale, lift_scale,
+    )
+
+    def walk(qs, al, track_conf):
+        pos = jnp.zeros((q,), jnp.int32)
+        rem = jnp.zeros((q,), jnp.int32)
+        ctail = jnp.zeros((q,), jnp.int32)
+        ok = jnp.ones((q,), bool)
+        conf = jnp.ones((q,), jnp.float32)
+        for s in range(width):
+            item = qs[:, s]
+            active = (item >= 0) & ok
+            in_span = rem > 0
+            nxt = jnp.minimum(pos + 1, n - 1)
+            span_hit = in_span & (node_item[nxt] == item)
+            qp = jnp.where(active & ~in_span, ctail, -9)
+            match = (edge_parent[None, :] == qp[:, None]) & (
+                edge_item[None, :] == item[:, None]
+            )  # [Q, Ec]
+            sel_pos = jnp.max(
+                jnp.where(match, edge_pos[None, :], -1), axis=1
+            )
+            sel_span = jnp.max(
+                jnp.where(match, edge_span[None, :], 0), axis=1
+            )
+            sel_tail = jnp.max(
+                jnp.where(match, edge_tail[None, :], 0), axis=1
+            )
+            edge_hit = (~in_span) & (sel_pos >= 0)
+            hit = span_hit | edge_hit
+            pos2 = jnp.where(
+                span_hit, pos + 1, jnp.where(edge_hit, sel_pos, pos)
+            )
+            rem2 = jnp.where(
+                span_hit, rem - 1, jnp.where(edge_hit, sel_span, rem)
+            )
+            ok = jnp.where(active, hit, ok)
+            adv = active & hit
+            if track_conf:
+                conf = jnp.where(
+                    adv & (s >= al), conf * conf_col[pos2], conf
+                )
+            pos = jnp.where(adv, pos2, pos)
+            rem = jnp.where(adv, rem2, rem)
+            ctail = jnp.where(adv & edge_hit, sel_tail, ctail)
+        return pos, conf, ok
+
+    pos, conf, ok = walk(queries, ant_len, True)
+    cols = jnp.arange(width, dtype=jnp.int32)[None, :]
+    cons_q = jnp.where(cols >= ant_len[:, None], queries, -1)
+    cpos, _, cok = walk(cons_q, jnp.zeros_like(ant_len), False)
+    con_sup = jnp.where(cok & (cpos > 0), sup_col[cpos], 0.0)
+
+    found = ok & (pos > 0)
+    conf = jnp.where(found, conf, 0.0)
+    seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
+    single = (seq_len - ant_len) == 1
+    return {
+        "found": found,
+        "pos": jnp.where(found, pos, -1),
+        "support": jnp.where(found, sup_col[pos], 0.0),
+        "confidence": conf,
+        "lift": compound_lift(
+            found, single, jnp.where(found, lift_col[pos], 0.0),
+            conf, con_sup,
+        ),
+        "con_support": con_sup,
+    }
+
+
 # ----------------------------------------------------------------------
 # trie_reduce — full-ruleset traversal reductions (the 8× traversal op)
 # ----------------------------------------------------------------------
 def trie_reduce_ref(
-    support: jax.Array,       # f32 [N]
-    confidence: jax.Array,    # f32 [N]
+    support: jax.Array,       # f32|int32 [N]
+    confidence: jax.Array,    # f32|bf16|int8 [N]
     depth: jax.Array,         # int32 [N]  (root=0 and padding<0 masked out)
+    *,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """(n_rules, Σ support, max confidence, Σ confidence) over real nodes.
 
     Degenerate tries (N == 0 or all-padding) reduce to all-zeros — the max
     slot is 0.0, not -inf, so downstream consumers never see a poisoned
-    sentinel (mirrors the kernel's empty-trie guard).
+    sentinel (mirrors the kernel's empty-trie guard).  Quantized columns
+    (compressed layout) widen through the shared ``dequantize_metrics``.
     """
     if support.shape[0] == 0:
         z = jnp.float32(0.0)
         return z, z, z, z
+    # lift is unused by this reduction: pass confidence as a stand-in.
+    support, confidence, _ = dequantize_metrics(
+        support, confidence, confidence,
+        n_transactions, confidence_scale, confidence_scale,
+    )
     mask = depth > 0
     n = jnp.sum(mask).astype(jnp.float32)
     sup_sum = jnp.sum(jnp.where(mask, support, 0.0))
@@ -177,6 +292,9 @@ def topk_rank_ref(
     k: int,
     metric: str = "confidence",
     min_depth: int = 1,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Ground truth for the segmented top-k kernel: ``jax.lax.top_k`` over
     the masked score vector (scores from the SAME ``rank_score`` the kernel
@@ -192,9 +310,10 @@ def topk_rank_ref(
         )
     score = rank_score(
         metric,
-        support.astype(jnp.float32),
-        confidence.astype(jnp.float32),
-        lift.astype(jnp.float32),
+        *dequantize_metrics(
+            support, confidence, lift,
+            n_transactions, confidence_scale, lift_scale,
+        ),
     )
     pos = jnp.arange(n, dtype=jnp.int32)
     lo = jnp.maximum(jnp.asarray(lo, jnp.int32), 0)
@@ -219,6 +338,9 @@ def topk_rank_batch_ref(
     k: int,
     metric: str = "confidence",
     min_depth: int = 1,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Ground truth for the BATCHED segmented top-k: ``lax.top_k`` over a
     ``[Q, N]`` masked score matrix (each row its own ``[lo, hi)`` range).
@@ -232,9 +354,10 @@ def topk_rank_batch_ref(
         )
     score = rank_score(
         metric,
-        support.astype(jnp.float32),
-        confidence.astype(jnp.float32),
-        lift.astype(jnp.float32),
+        *dequantize_metrics(
+            support, confidence, lift,
+            n_transactions, confidence_scale, lift_scale,
+        ),
     )
     pos = jnp.arange(n, dtype=jnp.int32)
     los = jnp.maximum(jnp.asarray(los, jnp.int32), 0)[:, None]
@@ -272,6 +395,9 @@ def rules_with_ref(
     metric: str = "confidence",
     min_depth: int = 1,
     role: str = "any",
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
+    lift_scale: float = 1.0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Ground truth for the membership kernel: the same laminar
     range-count (``searchsorted`` on the posting slice) as a dense [Q, N]
@@ -286,9 +412,10 @@ def rules_with_ref(
         )
     score = rank_score(
         metric,
-        support.astype(jnp.float32),
-        confidence.astype(jnp.float32),
-        lift.astype(jnp.float32),
+        *dequantize_metrics(
+            support, confidence, lift,
+            n_transactions, confidence_scale, lift_scale,
+        ),
     )
     pos = jnp.arange(n, dtype=jnp.int32)
     self_hit = node_item[None, :] == jnp.asarray(items, jnp.int32)[:, None]

@@ -14,51 +14,71 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .metrics_inkernel import dequantize_metrics, metric_pad_dtype
 from .tuning import get_kernel_config
 
 BN = 8192   # default nodes per tile (tunable: KernelConfig.reduce_bn)
 
 
-def _kernel(sup_ref, conf_ref, depth_ref, out_ref):
-    i = pl.program_id(0)
+def _make_kernel(n_transactions: int, confidence_scale: float):
+    def kernel(sup_ref, conf_ref, depth_ref, out_ref):
+        i = pl.program_id(0)
 
-    @pl.when(i == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-        out_ref[0, 2] = -jnp.inf
+        @pl.when(i == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+            out_ref[0, 2] = -jnp.inf
 
-    sup = sup_ref[...][0]
-    conf = conf_ref[...][0]
-    depth = depth_ref[...][0]
-    mask = depth > 0
-    out_ref[0, 0] += jnp.sum(mask.astype(jnp.float32))
-    out_ref[0, 1] += jnp.sum(jnp.where(mask, sup, 0.0))
-    out_ref[0, 2] = jnp.maximum(
-        out_ref[0, 2], jnp.max(jnp.where(mask, conf, -jnp.inf))
-    )
-    out_ref[0, 3] += jnp.sum(jnp.where(mask, conf, 0.0))
+        # Quantized columns (compressed layout) widen per tile; lift is
+        # unused by this reduction so confidence stands in for it.
+        sup, conf, _ = dequantize_metrics(
+            sup_ref[...][0], conf_ref[...][0], conf_ref[...][0],
+            n_transactions, confidence_scale, confidence_scale,
+        )
+        depth = depth_ref[...][0]
+        mask = depth > 0
+        out_ref[0, 0] += jnp.sum(mask.astype(jnp.float32))
+        out_ref[0, 1] += jnp.sum(jnp.where(mask, sup, 0.0))
+        out_ref[0, 2] = jnp.maximum(
+            out_ref[0, 2], jnp.max(jnp.where(mask, conf, -jnp.inf))
+        )
+        out_ref[0, 3] += jnp.sum(jnp.where(mask, conf, 0.0))
+
+    return kernel
 
 
 def trie_reduce_pallas(
-    support: jax.Array,      # f32 [N]
-    confidence: jax.Array,   # f32 [N]
+    support: jax.Array,      # f32|int32 [N]
+    confidence: jax.Array,   # f32|bf16|int8 [N]
     depth: jax.Array,        # int32 [N]
     interpret: bool = False,
     block_n: int | None = None,
+    n_transactions: int = 0,
+    confidence_scale: float = 1.0,
 ):
     """``block_n`` (nodes per tile) resolves from the active per-backend
     ``KernelConfig`` when None.  Retiling reassociates the fp32 running
-    sums (count/max stay bitwise); the jnp oracle agrees to 1e-6."""
+    sums (count/max stay bitwise); the jnp oracle agrees to 1e-6.
+    Quantized columns (compressed layout) stay narrow through VMEM and
+    widen in-kernel via the static dequant params."""
     if block_n is None:
         block_n = get_kernel_config().reduce_bn
     return _trie_reduce_impl(
         support, confidence, depth,
         interpret=interpret, block_n=int(block_n),
+        n_transactions=int(n_transactions),
+        confidence_scale=float(confidence_scale),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
-def _trie_reduce_impl(support, confidence, depth, *, interpret, block_n):
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "interpret", "block_n", "n_transactions", "confidence_scale",
+    ),
+)
+def _trie_reduce_impl(support, confidence, depth, *, interpret, block_n,
+                      n_transactions, confidence_scale):
     n = support.shape[0]
     if n == 0:
         # Empty trie: nothing to reduce.  Returning zeros here avoids
@@ -67,15 +87,19 @@ def _trie_reduce_impl(support, confidence, depth, *, interpret, block_n):
         z = jnp.float32(0.0)
         return z, z, z, z
     npad = -n % block_n
-    sup = jnp.pad(support.astype(jnp.float32), (0, npad)).reshape(1, -1)
-    conf = jnp.pad(confidence.astype(jnp.float32), (0, npad)).reshape(1, -1)
+    sup = jnp.pad(
+        support.astype(metric_pad_dtype(support)), (0, npad)
+    ).reshape(1, -1)
+    conf = jnp.pad(
+        confidence.astype(metric_pad_dtype(confidence)), (0, npad)
+    ).reshape(1, -1)
     dep = jnp.pad(
         depth.astype(jnp.int32), (0, npad), constant_values=-1
     ).reshape(1, -1)
     nn = sup.shape[1]
     grid = (nn // block_n,)
     out = pl.pallas_call(
-        _kernel,
+        _make_kernel(n_transactions, confidence_scale),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_n), lambda i: (0, i)),

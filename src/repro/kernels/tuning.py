@@ -30,6 +30,12 @@ Knobs
 ``search_bf``
     CSR bucket-window lanes per fan-out chunk in the fused rule-search
     descent (``rule_search.rule_search_fused_pallas``).
+``span_bf``
+    Same role for the compressed (path-compressed span) layout's
+    descent (``rule_search.rule_search_span_pallas``): bucket-window
+    lanes per chunk of the compressed CSR scan.  Tuned separately
+    because compressed buckets are sparser (span interiors keep no
+    bucket) so the optimal window can differ from ``search_bf``.
 ``posting_window_edges``
     Posting-array edge count above which ``rules_with`` switches from
     full-array VMEM residency to per-query gathered windows.
@@ -55,11 +61,12 @@ class KernelConfig:
     rank_bn: int = 8192
     reduce_bn: int = 8192
     search_bf: int = 128
+    span_bf: int = 128
     posting_window_edges: int = 512 * 1024
     launch_pad_floor: int = 1
 
     def validate(self) -> "KernelConfig":
-        for name in ("rank_bn", "reduce_bn", "search_bf"):
+        for name in ("rank_bn", "reduce_bn", "search_bf", "span_bf"):
             v = getattr(self, name)
             if not isinstance(v, int) or v <= 0 or v % LANE:
                 raise ValueError(

@@ -26,6 +26,7 @@ from repro.core.synthetic import (
     device_trie_from_arrays,
     mixed_queries,
     random_csr_trie,
+    synthetic_chain_trie,
 )
 from repro.core.trie import TrieOfRules
 
@@ -102,6 +103,24 @@ def query_mix():
     """``query_mix(rng, arrs, q, width)`` → (queries, ant_len): 1/3 real
     paths, 1/3 junk, 1/3 all-padding rows."""
     return mixed_queries
+
+
+@pytest.fixture(scope="session")
+def chain_trie():
+    """Memoized ``synthetic_chain_trie`` factory — the chain-heavy shape
+    the path-compressed layout targets (``chain_fraction`` dials the span
+    fraction the detector finds)."""
+    cache = {}
+
+    def get(n_edges=2000, chain_fraction=0.75, seed=0, **kw):
+        key = (n_edges, chain_fraction, seed, tuple(sorted(kw.items())))
+        if key not in cache:
+            cache[key] = synthetic_chain_trie(
+                n_edges, chain_fraction=chain_fraction, seed=seed, **kw
+            )
+        return cache[key]
+
+    return get
 
 
 @pytest.fixture(scope="session")
