@@ -4,7 +4,7 @@ export PYTHONPATH := src
 .PHONY: test test-fast test-slow test-multidevice lint bench-smoke \
 	bench-gate bench-baseline bench-search bench-topk bench-build \
 	bench-batched bench-traversal bench-sharded bench-serve \
-	bench-compress bench autotune autotune-smoke
+	bench-compress bench-streaming bench autotune autotune-smoke
 
 # 8 simulated CPU devices for the sharded-trie tier (tests + benches)
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -26,7 +26,7 @@ test-slow:
 # execute; on plain hosts the same tests cover P=1)
 test-multidevice:
 	$(MULTIDEV) $(PY) -m pytest -x -q tests/test_sharded.py \
-		tests/test_serve_loop.py
+		tests/test_serve_loop.py tests/test_streaming.py
 
 # static checks (ruff config lives in pyproject.toml)
 lint:
@@ -64,6 +64,10 @@ bench-smoke:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-compress BENCH_compress_smoke.json
+	$(PY) -m benchmarks.run --only streaming --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-streaming BENCH_streaming_smoke.json
 
 # CI bench gate: every lane in benchmarks/gates.json gets a fresh smoke
 # run and is gated against its committed baseline (ratio-based; per-lane
@@ -104,6 +108,10 @@ bench-baseline:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-compress benchmarks/baselines/compress_smoke.json
+	$(PY) -m benchmarks.run --only streaming --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-streaming benchmarks/baselines/streaming_smoke.json
 	$(PY) -m benchmarks.autotune --smoke --no-write-table \
 		--json-out benchmarks/baselines/autotune_smoke.json
 
@@ -153,6 +161,12 @@ bench-serve:
 # bytes-per-edge + rule_search latency parity (BENCH_compress.json)
 bench-compress:
 	$(PY) -m benchmarks.run --only compress_layout
+
+# streaming-insert delta overlay: insert throughput, frozen+delta query
+# latency vs from-scratch rebuild (bit-parity asserted in-run), and the
+# concurrent insert/query scheduler replay (BENCH_streaming.json)
+bench-streaming:
+	$(PY) -m benchmarks.run --only streaming
 
 # every paper figure + kernel benches.  The sharded lane needs the
 # 8-device env to produce its full P sweep, so the first pass (plain

@@ -57,6 +57,7 @@ JSON_OUT_TRAVERSAL = "BENCH_traversal.json"    # traversal-lane trajectory
 JSON_OUT_SHARDED = "BENCH_sharded_query.json"  # multi-device trajectory
 JSON_OUT_SERVE = "BENCH_serve.json"      # serve-loop SLO trajectory
 JSON_OUT_COMPRESS = "BENCH_compress.json"  # compressed-layout trajectory
+JSON_OUT_STREAMING = "BENCH_streaming.json"  # delta-overlay trajectory
 
 # (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
 # with E, so the largest trie runs a single batch size.  Q=2048 is the
@@ -1258,6 +1259,35 @@ def bench_serve() -> List[Row]:
     # shed_rate to tight ceilings across arbitrary CI hosts
     results = run_lane(lambda: _FixedServiceTimer(0.01), "gate_")
 
+    # deterministic predictor replay (gate lane): the launch predictor
+    # must seed an unseen batch shape from the nearest OBSERVED pow2
+    # bucket of the same op signature — only a fully cold signature may
+    # fall back to default_ms.  Pure host arithmetic, so the replay is
+    # bit-reproducible on any CI runner and asserted on every gate run.
+    from repro.serve.scheduler import LaunchPredictor
+
+    pred = LaunchPredictor(default_ms=5.0)
+    pred.observe(("top_k",), 8, 0.010)      # pad 8  -> 10 ms
+    pred.observe(("top_k",), 128, 0.080)    # pad 128 -> 80 ms
+    predictor_replay = {
+        "cold_signature_uses_default":
+            pred.predict_ms(("rules_with",), 8) == 5.0,
+        "exact_bucket": pred.predict_ms(("top_k",), 8) == 10.0,
+        "seeds_up_from_8": pred.predict_ms(("top_k",), 16) == 10.0,
+        "rounds_to_observed_128":
+            pred.predict_ms(("top_k",), 100) == 80.0,
+        # pad 32: log2-distance 2 to both 8 and 128 — tie prefers the
+        # smaller observed size
+        "tie_prefers_smaller": pred.predict_ms(("top_k",), 32) == 10.0,
+    }
+    assert all(predictor_replay.values()), (
+        f"launch-predictor replay regressed: {predictor_replay}"
+    )
+    rows.append(Row(
+        "serve_predictor_replay", 0.0,
+        ";".join(f"{k}={v}" for k, v in predictor_replay.items()),
+    ))
+
     # fault replay: kill a shard mid-run; every in-flight request must
     # complete (failover to the replicated backend, bit-correct by the
     # engine parity contract — asserted in tests/test_serve_loop.py)
@@ -1300,6 +1330,7 @@ def bench_serve() -> List[Row]:
             "smoke": SMOKE,
             "unix_time": time.time(),
             "fault_replay": fault,
+            "predictor_replay": predictor_replay,
             # gated lane: deterministic fixed-service replay (stable
             # across hosts); measured lane: honest wall-clock numbers
             "results": results,
@@ -1455,5 +1486,249 @@ def bench_compress_layout() -> List[Row]:
             "results": results,
         }
         with open(JSON_OUT_COMPRESS, "w") as fh:
+            json.dump(payload, fh, indent=2)
+    return rows
+
+
+# ----------------------------------------------------------------------
+# PR 9: streaming inserts — delta-overlay throughput, query latency
+# under concurrent inserts, and frozen-vs-delta+frozen parity
+# ----------------------------------------------------------------------
+STREAM_DB = dict(n_items=32, n_tx=400, max_size=8)
+STREAM_DB_SMOKE = dict(n_items=16, n_tx=80, max_size=6)
+STREAM_SEQS = 800
+STREAM_SEQS_SMOKE = 160
+STREAM_Q = 64
+STREAM_Q_SMOKE = 24
+STREAM_CHUNK = 64
+
+
+def _stream_fixture(smoke: bool):
+    """(db, full, base, novel): ``full`` is the from-scratch build of
+    base ∪ novel — the parity oracle for every streaming lane."""
+    from repro.arm.transactions import TransactionDB
+    from repro.core.build_arrays import build_frozen_trie
+
+    cfg = STREAM_DB_SMOKE if smoke else STREAM_DB
+    n_seq = STREAM_SEQS_SMOKE if smoke else STREAM_SEQS
+    rng = np.random.RandomState(9)
+    txs = [
+        set(rng.randint(0, cfg["n_items"],
+                        size=rng.randint(1, cfg["max_size"] + 1)))
+        for _ in range(cfg["n_tx"])
+    ]
+    db = TransactionDB(txs, n_items=cfg["n_items"])
+    seqs = sample_rule_sequences(db, n_seq, seed=1)
+    full, _, _ = build_frozen_trie(db, seqs)
+    base, _, _ = build_frozen_trie(db, seqs[: len(seqs) // 2])
+
+    def paths(fz):
+        return {
+            tuple(int(x) for x in fz.path_items(n)): (
+                float(fz.support[n]),
+                float(fz.confidence[n]),
+                float(fz.lift[n]),
+            )
+            for n in range(1, fz.n_nodes)
+        }
+
+    fp, bp = paths(full), paths(base)
+    novel = {p: m for p, m in fp.items() if p not in bp}
+    return db, full, base, novel
+
+
+def _mismatch_count(a: dict, b: dict) -> int:
+    """Element count where two op outputs differ (NaN == NaN)."""
+    n = 0
+    for key in sorted(set(a) | set(b)):
+        x = np.asarray(a[key], dtype=np.float64)
+        y = np.asarray(b[key], dtype=np.float64)
+        n += int(np.sum(~np.isclose(x, y, rtol=0.0, atol=0.0,
+                                    equal_nan=True)))
+    return n
+
+
+def bench_streaming() -> List[Row]:
+    """Delta-overlay streaming lane: bulk-insert throughput into
+    ``StreamingTrie``, per-op latency of frozen+delta merged queries vs
+    the same queries on a from-scratch rebuild (``overlay_overhead``,
+    gated in-run), bitwise parity between the two (``parity_mismatch``,
+    gated at exactly 0), a staggered-refreeze timing, and a
+    deterministic scheduler replay of queries racing inserts.  Writes
+    ``BENCH_streaming.json``."""
+    import time as _time
+
+    import jax
+
+    from repro.core.delta_trie import StreamingTrie
+    from repro.kernels import ops as trie_ops
+    from repro.serve import TrieQueryEngine, TrieScheduler, VirtualClock
+
+    smoke = SMOKE
+    nq = STREAM_Q_SMOKE if smoke else STREAM_Q
+    db, full, base, novel = _stream_fixture(smoke)
+    order = sorted(novel, key=len)           # shortest-first: prefix-closed
+    rows: List[Row] = []
+
+    # --- insert throughput: chunked bulk inserts into the overlay -----
+    st = StreamingTrie(base)
+    t0 = _time.perf_counter()
+    for i in range(0, len(order), STREAM_CHUNK):
+        chunk = order[i: i + STREAM_CHUNK]
+        st.insert(
+            chunk,
+            [novel[p][0] for p in chunk],
+            [novel[p][1] for p in chunk],
+            [novel[p][2] for p in chunk],
+        )
+    insert_s = _time.perf_counter() - t0
+    inserts_per_s = len(order) / max(insert_s, 1e-9)
+    throughput = {
+        "n_inserted": len(order),
+        "chunk": STREAM_CHUNK,
+        "inserts_per_s": inserts_per_s,
+        "n_base_nodes": int(base.n_nodes),
+        "n_full_nodes": int(full.n_nodes),
+    }
+    rows.append(Row(
+        "streaming_insert_throughput",
+        insert_s * 1e6 / max(len(order), 1),
+        f"inserts_per_s={inserts_per_s:.0f};n={len(order)}",
+    ))
+
+    # --- per-op parity + latency: frozen+delta vs from-scratch rebuild
+    rng = np.random.RandomState(0)
+    fp = sorted(
+        tuple(int(x) for x in full.path_items(n))
+        for n in range(1, full.n_nodes)
+    )
+    pick = [fp[i] for i in
+            rng.choice(len(fp), size=min(nq, len(fp)), replace=False)]
+    prefixes = [[]] + [list(p[: rng.randint(1, len(p) + 1)])
+                       for p in pick[: nq - 1]]
+    items = [int(x) for x in
+             rng.randint(0, db.n_items, size=nq)]
+    pairs = [(p[: max(1, len(p) // 2)], p[max(1, len(p) // 2):])
+             for p in pick if len(p) >= 2][:nq]
+
+    lanes = {
+        "top_k_rules": lambda trie: trie_ops.top_k_rules_batch(
+            trie, prefixes, 8, metric="confidence"
+        ),
+        "rules_with": lambda trie: trie_ops.rules_with(
+            trie, items, role="any", k=8, metric="lift"
+        ),
+        "rule_search": lambda trie: trie_ops.rule_search_batch(
+            trie, pairs
+        ),
+    }
+    results = []
+    for op, fn in lanes.items():
+        out_stream = fn(st)
+        out_rebuilt = fn(full)
+        mismatch = _mismatch_count(out_stream, out_rebuilt)
+        assert mismatch == 0, (
+            f"streaming {op}: {mismatch} element(s) differ from the "
+            f"from-scratch rebuild"
+        )
+        s_us = time_per_call_median(
+            lambda: jax.block_until_ready(fn(st)), n=5, warmup=2
+        ) * 1e6
+        r_us = time_per_call_median(
+            lambda: jax.block_until_ready(fn(full)), n=5, warmup=2
+        ) * 1e6
+        overhead = s_us / max(r_us, 1e-9)
+        results.append({
+            "op": op,
+            "batch": nq,
+            "n_delta": len(order),
+            "us_per_call": {"stream": s_us, "rebuilt": r_us},
+            "parity_mismatch": float(mismatch),
+            "overlay_overhead": overhead,
+        })
+        rows.append(Row(
+            f"streaming_{op}_D{len(order)}", s_us,
+            f"rebuilt_us={r_us:.0f};overlay_overhead=x{overhead:.2f};"
+            f"parity_mismatch={mismatch}",
+        ))
+
+    # --- staggered refreeze: fold the whole delta back, one depth-1
+    # group at a time, and land exactly on the from-scratch layout -----
+    t0 = _time.perf_counter()
+    folds = 0
+    while st.n_delta:
+        group = min(st.delta_by_group())
+        st.refreeze(first_items=[group])
+        folds += 1
+    refreeze_ms = (_time.perf_counter() - t0) * 1e3
+    assert st.frozen.n_nodes == full.n_nodes, "refreeze lost nodes"
+    throughput["refreeze_ms"] = refreeze_ms
+    throughput["refreeze_folds"] = folds
+    rows.append(Row(
+        "streaming_refreeze", refreeze_ms * 1e3,
+        f"folds={folds};n_nodes={int(st.frozen.n_nodes)}",
+    ))
+
+    # --- queries racing inserts through the scheduler (deterministic:
+    # virtual clock + fixed service time, thresholds force mid-replay
+    # refreezes) — the final answer must match the rebuilt oracle ------
+    st2 = StreamingTrie(base, refreeze_max_delta=STREAM_CHUNK // 2,
+                        refreeze_max_age=4)
+    eng = TrieQueryEngine(st2, mode="replicated")
+    clock = VirtualClock()
+    sched = TrieScheduler(
+        eng, clock=clock, timer=_FixedServiceTimer(0.01),
+        max_pending=4 * STREAM_CHUNK,
+    )
+    probe = ([], {"k": 8, "metric": "support"})
+    lat = []
+    for i in range(0, len(order), 8):
+        for p in order[i: i + 8]:
+            sched.submit("insert", (p, *novel[p]))
+        q = sched.submit("top_k", probe[0], kwargs=probe[1])
+        for r in sched.drain():
+            if r.id == q.id and r.status == "ok":
+                lat.append(r.latency_ms)
+    req = sched.submit("top_k", probe[0], kwargs=probe[1])
+    resp = {r.id: r for r in sched.drain()}[req.id]
+    ref_eng = TrieQueryEngine(full, mode="replicated")
+    ref_sched = TrieScheduler(
+        ref_eng, clock=VirtualClock(), timer=_FixedServiceTimer(0.01)
+    )
+    ref_req = ref_sched.submit("top_k", probe[0], kwargs=probe[1])
+    ref = {r.id: r for r in ref_sched.drain()}[ref_req.id]
+    serve_mismatch = _mismatch_count(resp.result, ref.result)
+    assert serve_mismatch == 0, (
+        "post-insert serve answer diverged from the rebuilt oracle"
+    )
+    lat_arr = np.sort(np.asarray(lat)) if lat else np.zeros(1)
+    serve = {
+        "n_query_probes": len(lat),
+        "q_p50_ms": float(np.percentile(lat_arr, 50)),
+        "q_p99_ms": float(np.percentile(lat_arr, 99)),
+        "inserted": sched.stats.get("inserted", 0),
+        "refreezes": sched.stats.get("refreezes", 0),
+        "parity_mismatch": float(serve_mismatch),
+    }
+    assert serve["refreezes"] >= 1, "replay never exercised a refreeze"
+    rows.append(Row(
+        "streaming_serve_concurrent", serve["q_p50_ms"] * 1e3,
+        f"p99_ms={serve['q_p99_ms']:.1f};refreezes={serve['refreezes']};"
+        f"parity_mismatch={serve_mismatch}",
+    ))
+
+    if JSON_OUT_STREAMING:
+        payload = {
+            "bench": "streaming",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
+            "n_devices": jax.device_count(),
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "throughput": throughput,
+            "serve_concurrent": serve,
+            "results": results,
+        }
+        with open(JSON_OUT_STREAMING, "w") as fh:
             json.dump(payload, fh, indent=2)
     return rows

@@ -36,6 +36,7 @@ BENCHES = [
     ("sharded_query", paper_figs.bench_sharded_query),
     ("serve_loop", paper_figs.bench_serve),
     ("compress_layout", paper_figs.bench_compress_layout),
+    ("streaming_inserts", paper_figs.bench_streaming),
 ]
 
 
@@ -87,6 +88,11 @@ def main() -> None:
              "trajectory JSON ('' disables writing)",
     )
     parser.add_argument(
+        "--json-out-streaming", default="BENCH_streaming.json",
+        help="path for the streaming-insert delta-overlay trajectory "
+             "JSON ('' disables writing)",
+    )
+    parser.add_argument(
         "--compiled", action="store_true",
         help="run kernels compiled (TPU/GPU hosts); on a CPU-only host "
              "prints a skip marker and exits 0",
@@ -112,6 +118,7 @@ def main() -> None:
     paper_figs.JSON_OUT_SHARDED = args.json_out_sharded
     paper_figs.JSON_OUT_SERVE = args.json_out_serve
     paper_figs.JSON_OUT_COMPRESS = args.json_out_compress
+    paper_figs.JSON_OUT_STREAMING = args.json_out_streaming
 
     print("name,us_per_call,derived")
     failed = []

@@ -26,6 +26,7 @@ from .build_arrays import (
     trie_arrays,
 )
 from .builder import BuildResult, build_flat_table, build_trie_of_rules
+from .delta_trie import DeltaOverlay, StreamingTrie
 
 __all__ = [
     "build_frozen_trie",
@@ -51,4 +52,6 @@ __all__ = [
     "BuildResult",
     "build_trie_of_rules",
     "build_flat_table",
+    "DeltaOverlay",
+    "StreamingTrie",
 ]

@@ -9,6 +9,7 @@ from .sharding import (
 from .trie_sharding import (
     ShardedDeviceTrie,
     ShardPlan,
+    hub_child_buckets,
     shard_device_trie,
     shard_dfs_ranges,
 )
@@ -20,6 +21,7 @@ __all__ = [
     "constrain",
     "ShardedDeviceTrie",
     "ShardPlan",
+    "hub_child_buckets",
     "shard_device_trie",
     "shard_dfs_ranges",
 ]

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -133,21 +133,7 @@ def _shard_map(fn, mesh: Mesh, in_specs, out_specs):
 # ----------------------------------------------------------------------
 # partitioning: greedy contiguous bin-packing over depth-1 subtree sizes
 # ----------------------------------------------------------------------
-def plan_shard_bounds(
-    sizes: Sequence[int], n_shards: int
-) -> List[Tuple[int, int]]:
-    """Greedy contiguous partition of depth-1 subtrees into ``n_shards``
-    bins.
-
-    ``sizes`` are the subtree sizes in DFS order; bin ``b`` receives the
-    contiguous run ``sizes[a_b:a_{b+1}]``.  Each bin fills toward the
-    running ideal ``remaining / bins_left`` and closes at the cut nearest
-    that target: the next subtree is still taken when overshooting by it
-    beats stopping short (and always when the bin is empty — a single
-    giant subtree must land somewhere).  Trailing bins may come out empty
-    when there are fewer subtrees than shards; leftovers (a final
-    oversized run) fold into the last bin.
-    """
+def _greedy_bounds(sizes: Sequence[int], n_shards: int) -> List[Tuple[int, int]]:
     m = len(sizes)
     bounds: List[Tuple[int, int]] = []
     i = 0
@@ -181,14 +167,130 @@ def plan_shard_bounds(
     return bounds
 
 
+def _bin_loads(sizes: Sequence[int], bounds: Sequence[Tuple[int, int]]):
+    return [int(np.sum(sizes[a:b])) if b > a else 0 for a, b in bounds]
+
+
+def plan_shard_bounds(
+    sizes: Sequence[int],
+    n_shards: int,
+    hub_buckets=None,
+    c: Optional[float] = None,
+    prev_bounds: Optional[Sequence[Tuple[int, int]]] = None,
+    drift: Optional[float] = None,
+) -> List[Tuple[int, int]]:
+    """Greedy contiguous partition of depth-1 subtrees into ``n_shards``
+    bins.
+
+    ``sizes`` are the subtree sizes in DFS order; bin ``b`` receives the
+    contiguous run ``sizes[a_b:a_{b+1}]``.  Each bin fills toward the
+    running ideal ``remaining / bins_left`` and closes at the cut nearest
+    that target: the next subtree is still taken when overshooting by it
+    beats stopping short (and always when the bin is empty — a single
+    giant subtree must land somewhere).  Trailing bins may come out empty
+    when there are fewer subtrees than shards; leftovers (a final
+    oversized run) fold into the last bin.
+
+    ``prev_bounds`` + ``drift`` gate REBALANCING on load drift: when a
+    previous partition of the same subtree list is still within
+    ``(1 + drift)`` of the fresh plan's max load, it is returned
+    unchanged — streaming folds then keep their resident shard layout
+    (no re-upload churn) until the delta actually skews the load.
+
+    ``hub_buckets`` + ``c`` trigger HUB REFINEMENT: when the plan's max
+    load exceeds ``c * ideal`` because one bin is a single hub subtree,
+    the planner recurses ONE level into that hub's child buckets
+    (``hub_buckets`` maps subtree index -> its depth-2 bucket sizes) and
+    re-plans over the refined unit list.  The return then becomes
+    ``(bounds, units)`` where ``units[u] = (subtree, bucket)`` (bucket
+    ``-1`` = the hub node itself, whole subtrees keep bucket ``-1``) and
+    ``bounds`` indexes ``units`` — cuts may land INSIDE a refined hub.
+    ``shard_device_trie`` cannot realize interior cuts yet (its local
+    relabeling and posting co-partition assume whole depth-1 subtrees;
+    spine replication is the recorded follow-on), so refined plans feed
+    load accounting, insert routing, and the streaming bench — not the
+    device layout.
+    """
+    bounds = _greedy_bounds(sizes, n_shards)
+    if prev_bounds is not None and drift is not None:
+        prev = [tuple(map(int, b)) for b in prev_bounds]
+        valid = (
+            len(prev) == n_shards
+            and prev[0][0] == 0
+            and all(b[1] == nb[0] for b, nb in zip(prev, prev[1:]))
+            and (prev[-1][1] == len(sizes))
+        )
+        if valid:
+            prev_max = max(_bin_loads(sizes, prev), default=0)
+            new_max = max(_bin_loads(sizes, bounds), default=0)
+            if prev_max <= (1.0 + float(drift)) * new_max:
+                return prev
+    if hub_buckets is None or c is None:
+        return bounds
+    total = int(np.sum(sizes)) if len(sizes) else 0
+    ideal = total / max(n_shards, 1)
+    loads = _bin_loads(sizes, bounds)
+    units: List[Tuple[int, int]] = [(t, -1) for t in range(len(sizes))]
+    refined: List[int] = []
+    if loads and max(loads) > c * ideal:
+        b = int(np.argmax(loads))
+        a, e = bounds[b]
+        if e - a == 1 and len(hub_buckets.get(a, ())) > 0:
+            refined.append(a)
+    if not refined:
+        return bounds
+    r_sizes: List[int] = []
+    r_units: List[Tuple[int, int]] = []
+    for t, sz in enumerate(sizes):
+        if t in refined:
+            buckets = list(hub_buckets[t])
+            r_sizes.append(1)             # the hub node itself
+            r_units.append((t, -1))
+            for bi, bsz in enumerate(buckets):
+                r_sizes.append(int(bsz))
+                r_units.append((t, bi))
+        else:
+            r_sizes.append(int(sz))
+            r_units.append((t, -1))
+    return _greedy_bounds(r_sizes, n_shards), r_units
+
+
 def shard_dfs_ranges(
-    frozen: FrozenTrie, n_shards: int
+    frozen: FrozenTrie,
+    n_shards: int,
+    prev_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+    drift: Optional[float] = None,
 ) -> List[Tuple[int, int]]:
     """P contiguous DFS ranges tiling ``[0, N)``, cut at depth-1 subtree
-    boundaries (shard 0 additionally absorbs the root at position 0)."""
+    boundaries (shard 0 additionally absorbs the root at position 0).
+
+    ``prev_ranges`` + ``drift`` pass through to ``plan_shard_bounds``'s
+    drift gate (ranges convert to subtree bounds when they still align
+    with the current trie's depth-1 boundaries): a staggered streaming
+    re-freeze that barely moved the load keeps its previous cuts.
+    """
     _kids, _los, sizes = frozen.depth1_subtrees()
-    bounds = plan_shard_bounds(sizes, n_shards)
     cum = np.concatenate([[0], np.cumsum(sizes, dtype=np.int64)])
+    prev_bounds = None
+    if prev_ranges is not None and drift is not None:
+        pb: List[Tuple[int, int]] = []
+        edges = [0] + [int(hi) for _, hi in prev_ranges]
+        ok = len(prev_ranges) == n_shards
+        for lo_e, hi_e in zip(edges, edges[1:]):
+            a = int(np.searchsorted(1 + cum, max(lo_e, 1)))
+            b = int(np.searchsorted(1 + cum, max(hi_e, 1)))
+            if (
+                a >= len(cum) or 1 + int(cum[a]) != max(lo_e, 1)
+                or b >= len(cum) or 1 + int(cum[b]) != max(hi_e, 1)
+            ):
+                ok = False       # old cut no longer on a subtree boundary
+                break
+            pb.append((a, b))
+        if ok:
+            prev_bounds = pb
+    bounds = plan_shard_bounds(
+        sizes, n_shards, prev_bounds=prev_bounds, drift=drift
+    )
     ranges: List[Tuple[int, int]] = []
     for d, (a, b) in enumerate(bounds):
         lo = 1 + int(cum[a])
@@ -197,6 +299,22 @@ def shard_dfs_ranges(
             lo = 0
         ranges.append((lo, hi))
     return ranges
+
+
+def hub_child_buckets(frozen: FrozenTrie) -> Dict[int, List[int]]:
+    """Depth-2 bucket sizes per depth-1 subtree (subtree index in DFS
+    order -> its children's subtree sizes) — the one-level recursion
+    input for ``plan_shard_bounds`` hub refinement."""
+    kids, _los, _sizes = frozen.depth1_subtrees()
+    co = np.asarray(frozen.child_offsets)
+    ec = np.asarray(frozen.edge_child)
+    sub = np.asarray(frozen.subtree_size)
+    out: Dict[int, List[int]] = {}
+    for t, v in enumerate(kids):
+        lo, hi = int(co[v]), int(co[v + 1])
+        if hi > lo:
+            out[t] = [int(sub[ec[j]]) for j in range(lo, hi)]
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -329,6 +447,8 @@ def shard_device_trie(
     quantize: bool = False,
     n_transactions: int = 0,
     columns: str = "bf16",
+    prev_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+    drift: Optional[float] = None,
 ) -> ShardPlan:
     """Partition ``frozen`` over every device on ``mesh``'s ``data`` axis.
 
@@ -345,6 +465,10 @@ def shard_device_trie(
     restricted to the shard), and the metric columns may be quantized
     with GLOBAL scales so per-shard dequantization is bit-identical to
     the single-device compressed trie.
+
+    ``prev_ranges`` + ``drift`` rebalance only on load drift (see
+    ``plan_shard_bounds``): a streaming re-freeze that barely moved the
+    depth-1 load keeps the previous cut points.
     """
     if layout not in ("plain", "compressed", "auto"):
         raise ValueError(f"unknown layout {layout!r}")
@@ -363,7 +487,9 @@ def shard_device_trie(
         else None
     )
     n_shards = int(mesh.shape["data"])
-    ranges = shard_dfs_ranges(frozen, n_shards)
+    ranges = shard_dfs_ranges(
+        frozen, n_shards, prev_ranges=prev_ranges, drift=drift
+    )
     n = frozen.n_nodes
     dfs = np.asarray(frozen.dfs_order, np.int64)
     sub = np.asarray(frozen.subtree_size, np.int64)

@@ -322,6 +322,15 @@ def _as_shard_plan(trie):
     return trie if isinstance(trie, ShardPlan) else None
 
 
+def _as_streaming(trie):
+    """The StreamingTrie when ``trie`` is one, else None (same lazy
+    isinstance dispatch as ``_as_shard_plan``; the streaming merge
+    helpers live in ``kernels.streaming``)."""
+    from repro.core.delta_trie import StreamingTrie
+
+    return trie if isinstance(trie, StreamingTrie) else None
+
+
 # ----------------------------------------------------------------------
 # support counting
 # ----------------------------------------------------------------------
@@ -510,7 +519,23 @@ def rule_search(
     With a CSR child-bucket index this is ONE fused kernel launch (bucket
     descent + consequent walk + Eq. 1-4 lift in-kernel).  Without one
     (seed layout) it falls back to two full-sweep launches.
+
+    ``trie`` may also be a ``core.delta_trie.StreamingTrie`` — the
+    frozen kernel then answers over the base and rows touching a
+    modified rule recompute from the union, bit-identical to a
+    from-scratch rebuild (``kernels.streaming``).
     """
+    stream = _as_streaming(trie)
+    if stream is not None:
+        if edges is not None:
+            raise ValueError(
+                "streaming rule_search ignores precomputed edges= — the "
+                "stream owns its (epoch-versioned) base residency; drop "
+                "the argument"
+            )
+        from .streaming import streaming_rule_search_batch
+
+        return streaming_rule_search_batch(stream, queries, ant_len)
     if edges is None:
         edges = edge_metric_arrays(trie)
     queries = jnp.asarray(queries, jnp.int32)
@@ -672,6 +697,19 @@ def top_k_rules(
         validate_prefixes(
             [prefix], "top_k_rules",
             item_rank=getattr(trie, "item_rank", None),
+        )
+    stream = _as_streaming(trie)
+    if stream is not None:
+        if arrays is not None or not use_kernel:
+            raise ValueError(
+                "streaming top_k_rules supports neither arrays= (the "
+                "stream owns its epoch-versioned residency) nor "
+                "use_kernel=False (the jnp oracle takes no delta)"
+            )
+        from .streaming import streaming_top_k_rules
+
+        return streaming_top_k_rules(
+            stream, k, metric=metric, prefix=prefix, min_depth=min_depth
         )
     if arrays is None:
         arrays = dfs_rank_arrays(trie)
@@ -872,6 +910,20 @@ def rules_with(
     if metric not in RANK_METRICS:
         raise InvalidQueryError(f"metric {metric!r} not in {RANK_METRICS}")
     _validate_k(k, "rules_with")
+    stream = _as_streaming(trie)
+    if stream is not None:
+        if arrays is not None or not use_kernel:
+            raise ValueError(
+                "streaming rules_with supports neither arrays= (the "
+                "stream owns its epoch-versioned residency) nor "
+                "use_kernel=False (the jnp oracle takes no delta)"
+            )
+        from .streaming import streaming_rules_with
+
+        return streaming_rules_with(
+            stream, items, role=role, k=k, metric=metric,
+            min_depth=min_depth, strict=strict,
+        )
     plan = _as_shard_plan(trie)
     if plan is not None:
         if arrays is not None or not use_kernel:
@@ -1075,6 +1127,19 @@ def top_k_rules_batch(
     validate_prefixes(
         prefixes, "top_k_rules_batch", item_rank=item_rank, strict=strict,
     )
+    stream = _as_streaming(trie)
+    if stream is not None:
+        if arrays is not None or not use_kernel:
+            raise ValueError(
+                "streaming top_k_rules_batch supports neither arrays= "
+                "(the stream owns its epoch-versioned residency) nor "
+                "use_kernel=False (the jnp oracle takes no delta)"
+            )
+        from .streaming import streaming_top_k_rules_batch
+
+        return streaming_top_k_rules_batch(
+            stream, prefixes, k, metric=metric, min_depth=min_depth
+        )
     if plan is not None:
         if arrays is not None or not use_kernel:
             raise ValueError(
@@ -1139,7 +1204,24 @@ def rule_search_batch(
     batch then descends shard_map-distributed (each device's fused kernel
     over its local subforest, found-winner merge + global compound-lift
     re-assembly), bit-identical to this single-device form.
+
+    Or a ``core.delta_trie.StreamingTrie`` — frozen kernel + host
+    recompute of rows touching modified rules (``kernels.streaming``),
+    bit-identical to a from-scratch rebuild of frozen+delta.
     """
+    stream = _as_streaming(trie)
+    if stream is not None:
+        if edges is not None:
+            raise ValueError(
+                "streaming rule_search_batch ignores precomputed edges= "
+                "— the stream owns its (epoch-versioned) base residency; "
+                "drop the argument"
+            )
+        from .streaming import streaming_rule_search_batch
+
+        return streaming_rule_search_batch(
+            stream, queries, ant_len, strict=strict
+        )
     plan = _as_shard_plan(trie)
     if ant_len is None and not isinstance(queries, np.ndarray):
         queries = list(queries)

@@ -174,6 +174,22 @@ class FaultyEngine:
         return self.engine.plan
 
     @property
+    def stream(self):
+        return getattr(self.engine, "stream", None)
+
+    @property
+    def epoch(self) -> int:
+        return int(getattr(self.engine, "epoch", 0))
+
+    # streaming mutations bypass fault injection: they are host-side
+    # bookkeeping, not launches
+    def insert(self, sequences, support, confidence, lift) -> int:
+        return self.engine.insert(sequences, support, confidence, lift)
+
+    def maybe_refreeze(self):
+        return self.engine.maybe_refreeze()
+
+    @property
     def backend(self) -> str:
         return self.engine.backend
 

@@ -225,7 +225,7 @@ class ResilientTrieEngine:
         self.allow_replicated_fallback = bool(allow_replicated_fallback)
         self._replicated = None
         self._degraded = None
-        self._degraded_for: Tuple[int, ...] = ()
+        self._degraded_for: Tuple = ()
         self.failovers = 0
 
     # -- backend selection --------------------------------------------
@@ -233,22 +233,32 @@ class ResilientTrieEngine:
         if self._replicated is None:
             from repro.serve.trie_engine import TrieQueryEngine
 
+            # a streaming primary falls back over the STREAM, not its
+            # frozen base — the replicated engine keeps merging the
+            # delta, so failover answers stay bit-identical
+            trie = getattr(self.primary, "stream", None)
             self._replicated = TrieQueryEngine(
-                self.primary.frozen, mode="replicated"
+                trie if trie is not None else self.primary.frozen,
+                mode="replicated",
             )
         return self._replicated
 
     def _degraded_engine(self):
         dead = self.health.dead_shards()
-        if self._degraded is None or self._degraded_for != dead:
+        # epoch in the cache key: a refreeze swaps the frozen base, so
+        # the masked plan must be rebuilt from the NEW plan — serving a
+        # pre-fold masked plan would answer over a stale trie
+        key = (dead, self.epoch)
+        if self._degraded is None or self._degraded_for != key:
             from repro.distributed.trie_sharding import mask_dead_shards
             from repro.serve.trie_engine import TrieQueryEngine
 
+            stream = getattr(self.primary, "stream", None)
             self._degraded = TrieQueryEngine(
-                self.primary.frozen,
+                stream if stream is not None else self.primary.frozen,
                 plan=mask_dead_shards(self.primary.plan, dead),
             )
-            self._degraded_for = dead
+            self._degraded_for = key
         return self._degraded
 
     def _active(self):
@@ -271,6 +281,28 @@ class ResilientTrieEngine:
     @property
     def n_shards(self) -> int:
         return self.primary.n_shards
+
+    @property
+    def epoch(self) -> int:
+        """Trie-version epoch of the underlying (streaming) engine; 0
+        for a plain frozen engine."""
+        return int(getattr(self.primary, "epoch", 0))
+
+    @property
+    def version(self) -> Tuple[int, int]:
+        """``(failovers, epoch)`` — changes whenever cached results could
+        go stale: a failover reroutes queries, an insert/refreeze changes
+        the trie contents.  The scheduler folds this into its LRU cache
+        key, so a version bump orphans every older entry."""
+        return (self.failovers, self.epoch)
+
+    # -- streaming passthroughs ---------------------------------------
+    def insert(self, sequences, support, confidence, lift) -> int:
+        """Absorb inserted/updated rules (streaming primary only)."""
+        return self.primary.insert(sequences, support, confidence, lift)
+
+    def maybe_refreeze(self):
+        return self.primary.maybe_refreeze()
 
     # -- the resilient call -------------------------------------------
     def query(self, op: str, *args, **kwargs) -> Tuple[Dict, Dict]:

@@ -24,7 +24,17 @@ Every request is ONE query row (a rule pair, a ranked prefix, or an
 item), so canonical-key hashing gives whole-query dedup for free: the
 key that addresses the LRU result cache is the same key that collapses
 duplicates inside a batch, lifting the per-item dedup ``rules_with``
-already does to whole queries of every op.
+already does to whole queries of every op.  Cache addresses are
+versioned with the engine's ``(failovers, epoch)`` — a streaming insert
+or refreeze (or a shard failover) orphans every older entry, so a
+post-insert query can never be answered by a pre-insert row.
+
+A fourth op, ``insert``, feeds a ``StreamingTrie``-backed engine: all
+pending inserts apply host-side at the top of ``step()`` in arrival
+order (writes never ride a query batch, are never deduped, never
+cached), followed by at most one staggered refreeze fold — the
+single-threaded step loop makes the frozen-base swap atomic w.r.t.
+in-flight queries.
 
 Deadlines are enforced at three points: queued requests past their
 ``deadline_ms`` expire to ``Timeout`` (never a hang), the batch shaper
@@ -64,7 +74,7 @@ from repro.serve.resilience import (
     retry_call,
 )
 
-OPS = ("rule_search", "top_k", "rules_with")
+OPS = ("rule_search", "top_k", "rules_with", "insert")
 
 # Response.status values
 OK = "ok"
@@ -125,9 +135,16 @@ class Response:
 
 class LaunchPredictor:
     """EWMA of measured service seconds per (bucket, pow2 batch size) —
-    the batch shaper's deadline oracle.  Unseen shapes predict
-    ``default_ms`` (0 by default: never preemptively time out before the
-    first observation)."""
+    the batch shaper's deadline oracle.
+
+    An unseen shape seeds from the NEAREST observed pow2 batch size of
+    the same bucket (nearest in log2 — a 64-row launch is a far better
+    prior for 128 rows than ``default_ms``; service time grows roughly
+    linearly in padded rows, so the adjacent bucket is within ~2x while
+    the cold default is unboundedly wrong).  Only a bucket with no
+    observations at ANY batch size predicts ``default_ms`` (0 by
+    default: never preemptively time out before the first observation).
+    """
 
     def __init__(self, alpha: float = 0.3, default_ms: float = 0.0):
         self.alpha = float(alpha)
@@ -139,8 +156,24 @@ class LaunchPredictor:
         return (*bucket, launch_pad(batch))
 
     def predict_ms(self, bucket: Tuple, batch: int) -> float:
-        return self._ewma_ms.get(self._shape(bucket, batch),
-                                 self.default_ms)
+        key = self._shape(bucket, batch)
+        got = self._ewma_ms.get(key)
+        if got is not None:
+            return got
+        # nearest observed pow2 size for this bucket; ties prefer the
+        # smaller size (under-prediction only delays a timeout until the
+        # first real observation corrects it)
+        pad = key[-1]
+        sizes = [
+            k[-1] for k in self._ewma_ms if k[:-1] == key[:-1]
+        ]
+        if not sizes:
+            return self.default_ms
+        near = min(
+            sizes,
+            key=lambda s: (abs(math.log2(s) - math.log2(pad)), s),
+        )
+        return self._ewma_ms[(*key[:-1], near)]
 
     def observe(self, bucket: Tuple, batch: int, seconds: float) -> None:
         key = self._shape(bucket, batch)
@@ -176,7 +209,6 @@ class TrieScheduler:
         if not isinstance(engine, ResilientTrieEngine):
             engine = ResilientTrieEngine(engine)
         self.engine = engine
-        self.frozen = engine.frozen
         # fixed query-matrix width: canonical rows are root paths, so the
         # trie's max depth bounds them; padding every launch to this pow2
         # width (and batches to pow2 rows) keeps the set of compiled
@@ -211,6 +243,13 @@ class TrieScheduler:
             "failed": 0, "invalid": 0, "cache_hits": 0,
             "dedup_collapsed": 0, "retries": 0, "launches": 0,
         }
+
+    @property
+    def frozen(self):
+        """The engine's CURRENT frozen base — a property because a
+        streaming refreeze swaps it mid-stream (item tables, which all
+        canonicalization reads, are fixed for the vocab either way)."""
+        return self.engine.frozen
 
     # ------------------------------------------------------------------
     # admission
@@ -259,6 +298,22 @@ class TrieScheduler:
                 int(kwargs.get("min_depth", 1)),
             )
             return ("rules_with", it, sig), ("rules_with", sig), it
+        if op == "insert":
+            seq, sup, conf, lift = payload
+            if not len(seq):
+                raise InvalidQueryError(
+                    "insert: rule path must be non-empty"
+                )
+            validate_prefixes(
+                [seq], "insert", item_rank=rank, strict=strict,
+            )
+            canon = (
+                tuple(int(x) for x in seq),
+                float(sup), float(conf), float(lift),
+            )
+            # keyed by admission id: inserts are WRITES — two identical
+            # inserts must both apply (never deduped, never cached)
+            return ("insert", self._next_id), ("insert",), canon
         raise InvalidQueryError(f"op {op!r} not in {OPS}")
 
     def submit(
@@ -317,6 +372,7 @@ class TrieScheduler:
         Returns the responses completed by this step (possibly empty)."""
         done: List[Response] = []
         self._expire(done)
+        self._drain_inserts(done)
         if not self._pending:
             return done
 
@@ -379,6 +435,43 @@ class TrieScheduler:
 
         done.extend(self._launch(bucket, live))
         return done
+
+    def _drain_inserts(self, done: List[Response]) -> None:
+        """Apply every pending insert, in arrival order, before any
+        query batch is shaped.  Writes never ride a query batch: each
+        one lands host-side immediately (bumping the engine epoch, which
+        orphans every cached pre-insert row), and at most ONE staggered
+        refreeze fold runs per step — the single-threaded step loop is
+        what makes the frozen-base swap atomic w.r.t. in-flight queries.
+        """
+        if not any(r.op == "insert" for r in self._pending):
+            return
+        keep: deque = deque()
+        inserts: List[Request] = []
+        while self._pending:
+            r = self._pending.popleft()
+            (inserts if r.op == "insert" else keep).append(r)
+        self._pending = keep
+        for r in inserts:
+            seq, sup, conf, lift = r.canon
+            try:
+                self.engine.insert([seq], [sup], [conf], [lift])
+            except (TypeError, ValueError) as exc:
+                # non-streaming engine (TypeError) or a rejected rule
+                # (out-of-vocab / prefix-closure): isolated per request
+                done.append(self._finish(r, Response(
+                    id=r.id, op=r.op, tenant=r.tenant, status=INVALID,
+                    error=repr(exc),
+                    latency_ms=(self.clock.now() - r.submit_s) * 1e3,
+                )))
+                continue
+            self.stats["inserted"] = self.stats.get("inserted", 0) + 1
+            done.append(self._finish(r, self._respond_ok(
+                r, {"epoch": self.engine.epoch}, backend="insert",
+            )))
+        folded = self.engine.maybe_refreeze()
+        if folded is not None:
+            self.stats["refreezes"] = self.stats.get("refreezes", 0) + 1
 
     def drain(self, max_steps: int = 100000) -> List[Response]:
         """Step until the queue is empty; returns responses in completion
@@ -577,17 +670,30 @@ class TrieScheduler:
                 keep.append(r)
         self._pending = keep
 
+    def _vkey(self, key) -> Tuple:
+        """Cache address = engine version + canonical query key.
+
+        The canonical key alone is NOT a stable address: it names the
+        question, not the trie that answers it.  After an insert or a
+        refreeze (epoch bump) or a shard failover, the same question has
+        a different answer — versioning the key orphans every stale
+        entry instead of serving a pre-insert row to a post-insert
+        query.  Orphans age out of the LRU normally."""
+        return (getattr(self.engine, "version", (0, 0)), key)
+
     def _cache_get(self, key):
-        if key in self._cache:
-            self._cache.move_to_end(key)
-            return self._cache[key]
+        vkey = self._vkey(key)
+        if vkey in self._cache:
+            self._cache.move_to_end(vkey)
+            return self._cache[vkey]
         return None
 
     def _cache_put(self, key, row) -> None:
         if self.cache_size <= 0:
             return
-        self._cache[key] = row
-        self._cache.move_to_end(key)
+        vkey = self._vkey(key)
+        self._cache[vkey] = row
+        self._cache.move_to_end(vkey)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
 

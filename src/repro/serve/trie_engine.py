@@ -22,14 +22,27 @@ to shard over AND the trie clears ``shard_threshold_nodes`` (default
 and the all-gather merge would dominate).  Both backends answer through
 the SAME ``kernels.ops`` entry points and are bit-identical (tie order
 included), so routing is purely a performance decision.
+
+The engine also fronts a ``core.delta_trie.StreamingTrie`` — a frozen
+base plus a mutable delta overlay.  Queries then run through
+``kernels.streaming`` (frozen+delta k-best merges, bit-identical to a
+from-scratch rebuild), ``insert`` absorbs new/updated rules, and
+``maybe_refreeze`` runs the staggered fold.  ``epoch`` exposes the
+stream's trie-version counter (bumps on every insert and refreeze) so
+callers — the scheduler's result cache above all — can tell whether a
+cached answer predates the current trie contents.  ``frozen`` and
+``plan`` are properties for this reason: a refreeze swaps the frozen
+base, and the engine must never serve a query half over the old trie
+and half over the new one.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 
 from repro.core.array_trie import FrozenTrie
+from repro.core.delta_trie import StreamingTrie
 from repro.kernels import ops as trie_ops
 
 DEFAULT_SHARD_THRESHOLD = 1 << 16   # nodes
@@ -40,7 +53,7 @@ class TrieQueryEngine:
 
     def __init__(
         self,
-        frozen: FrozenTrie,
+        frozen,                 # FrozenTrie | StreamingTrie
         mesh=None,
         mode: str = "auto",
         shard_threshold_nodes: int = DEFAULT_SHARD_THRESHOLD,
@@ -50,8 +63,13 @@ class TrieQueryEngine:
             raise ValueError(
                 f"mode {mode!r} not in ('auto', 'replicated', 'sharded')"
             )
-        self.frozen = frozen
-        self.plan = None
+        self.stream = None
+        if isinstance(frozen, StreamingTrie):
+            self.stream = frozen
+            frozen = None
+        self._frozen = frozen
+        self._plan = None
+        self._stream_sharded = False
         self._dt = None
         self._edges = None
         self._dfs_arrays = None
@@ -59,8 +77,10 @@ class TrieQueryEngine:
         if plan is not None:
             # pre-built (possibly dead-shard-masked) ShardPlan injection:
             # the resilience layer's degraded engines hand their masked
-            # plan straight in, skipping the (re)partitioning work
-            self.plan = plan
+            # plan straight in, skipping the (re)partitioning work.  With
+            # a stream the injected plan overrides the stream's own —
+            # delta merges keep running over the masked residency.
+            self._plan = plan
             self.mesh = plan.mesh
             return
         if mode != "replicated" and mesh is None and jax.device_count() > 1:
@@ -71,8 +91,23 @@ class TrieQueryEngine:
         sharded = mode == "sharded" or (
             mode == "auto"
             and n_dev > 1
-            and frozen.n_nodes >= shard_threshold_nodes
+            and self.frozen.n_nodes >= shard_threshold_nodes
         )
+        if self.stream is not None:
+            if sharded:
+                if self.stream.mesh is not None:
+                    mesh = self.stream.mesh
+                else:
+                    if mesh is None:
+                        from repro.launch.mesh import make_trie_mesh
+
+                        mesh = make_trie_mesh()
+                    # the engine owns residency: hand the stream its mesh
+                    # before any plan is cached
+                    self.stream.mesh = mesh
+                self._stream_sharded = True
+            self.mesh = mesh
+            return
         if sharded:
             if mesh is None:
                 from repro.launch.mesh import make_trie_mesh
@@ -80,10 +115,33 @@ class TrieQueryEngine:
                 mesh = make_trie_mesh()
             from repro.distributed.trie_sharding import shard_device_trie
 
-            self.plan = shard_device_trie(frozen, mesh)
+            self._plan = shard_device_trie(frozen, mesh)
         self.mesh = mesh
 
     # ------------------------------------------------------------------
+    @property
+    def frozen(self) -> FrozenTrie:
+        """The current frozen base — re-read per call because a refreeze
+        swaps it (the stream's epoch says which version answered)."""
+        if self.stream is not None:
+            return self.stream.frozen
+        return self._frozen
+
+    @property
+    def plan(self):
+        if self.stream is not None and self._plan is None:
+            return (
+                self.stream.shard_plan() if self._stream_sharded else None
+            )
+        return self._plan
+
+    @property
+    def epoch(self) -> int:
+        """Trie-version counter (0 for a plain frozen engine): bumps on
+        every insert and refreeze, so any result cache keyed on it can
+        never return a pre-insert row for a post-insert trie."""
+        return self.stream.epoch if self.stream is not None else 0
+
     @property
     def backend(self) -> str:
         return "sharded" if self.plan is not None else "replicated"
@@ -97,10 +155,55 @@ class TrieQueryEngine:
             self._dt = self.frozen.device_arrays()
         return self._dt
 
+    def _stream_base(self):
+        """Residency override handed to ``kernels.streaming``: an
+        injected (dead-shard-masked) plan wins; a replicated engine over
+        a mesh-bearing stream pins the frozen base instead of the
+        stream's plan; ``None`` lets the stream route itself (queries
+        then go through the validating ``kernels.ops`` dispatch)."""
+        if self._plan is not None:
+            return self._plan
+        if self.stream.mesh is not None and not self._stream_sharded:
+            return self.stream.frozen
+        return None
+
+    # ------------------------------------------------------------------
+    # streaming mutation surface
+    # ------------------------------------------------------------------
+    def insert(self, sequences, support, confidence, lift) -> int:
+        """Absorb inserted/updated rules into the delta overlay (bumps
+        ``epoch``).  Requires a ``StreamingTrie``-backed engine."""
+        if self.stream is None:
+            raise TypeError(
+                "insert requires a StreamingTrie-backed engine; build "
+                "one with TrieQueryEngine(StreamingTrie(frozen), ...)"
+            )
+        return self.stream.insert(sequences, support, confidence, lift)
+
+    def maybe_refreeze(self) -> Optional[int]:
+        """Run one staggered fold step if the delta is over threshold;
+        returns the folded depth-1 item (None when nothing folded).  The
+        serve loop calls this between launches, so the frozen-base swap
+        is atomic w.r.t. in-flight queries."""
+        if self.stream is None:
+            return None
+        return self.stream.maybe_refreeze()
+
     # ------------------------------------------------------------------
     # the three batched ops (thin routing over kernels.ops)
     # ------------------------------------------------------------------
     def rule_search_batch(self, queries, ant_len=None) -> Dict:
+        if self.stream is not None:
+            base = self._stream_base()
+            if base is None:
+                return trie_ops.rule_search_batch(
+                    self.stream, queries, ant_len
+                )
+            from repro.kernels.streaming import streaming_rule_search_batch
+
+            return streaming_rule_search_batch(
+                self.stream, queries, ant_len, base=base
+            )
         if self.plan is not None:
             return trie_ops.rule_search_batch(self.plan, queries, ant_len)
         if self._edges is None:
@@ -114,6 +217,19 @@ class TrieQueryEngine:
         self, prefixes, k: int, metric: str = "confidence",
         min_depth: int = 1,
     ) -> Dict:
+        if self.stream is not None:
+            base = self._stream_base()
+            if base is None:
+                return trie_ops.top_k_rules_batch(
+                    self.stream, prefixes, k, metric=metric,
+                    min_depth=min_depth,
+                )
+            from repro.kernels.streaming import streaming_top_k_rules_batch
+
+            return streaming_top_k_rules_batch(
+                self.stream, prefixes, k, metric=metric,
+                min_depth=min_depth, base=base,
+            )
         if self.plan is not None:
             return trie_ops.top_k_rules_batch(
                 self.plan, prefixes, k, metric=metric, min_depth=min_depth
@@ -130,6 +246,19 @@ class TrieQueryEngine:
         self, items: Sequence[int], role: str = "any", k: int = 10,
         metric: str = "confidence", min_depth: int = 1,
     ) -> Dict:
+        if self.stream is not None:
+            base = self._stream_base()
+            if base is None:
+                return trie_ops.rules_with(
+                    self.stream, items, role=role, k=k, metric=metric,
+                    min_depth=min_depth,
+                )
+            from repro.kernels.streaming import streaming_rules_with
+
+            return streaming_rules_with(
+                self.stream, items, role=role, k=k, metric=metric,
+                min_depth=min_depth, base=base,
+            )
         if self.plan is not None:
             return trie_ops.rules_with(
                 self.plan, items, role=role, k=k, metric=metric,
@@ -146,12 +275,13 @@ class TrieQueryEngine:
 
 
 def make_trie_engine(
-    frozen: FrozenTrie,
+    frozen,
     mesh=None,
     mode: str = "auto",
     shard_threshold_nodes: int = DEFAULT_SHARD_THRESHOLD,
 ) -> TrieQueryEngine:
-    """Factory alias (mirrors the ``make_*_step`` serving constructors)."""
+    """Factory alias (mirrors the ``make_*_step`` serving constructors).
+    ``frozen`` may be a ``FrozenTrie`` or a ``StreamingTrie``."""
     return TrieQueryEngine(
         frozen, mesh=mesh, mode=mode,
         shard_threshold_nodes=shard_threshold_nodes,

@@ -565,6 +565,216 @@ class TestShardedCompressed:
         assert gf.sum() <= bf.sum()
         assert not np.any(gf & ~bf)
 
+    # -- dead-shard masking x compressed spans -------------------------
+    # The span pool is the layout's danger zone for masking: a dead
+    # shard's interior (path-compressed) nodes live ONLY in its s_*
+    # position-space columns, and a descent can land mid-span.  These
+    # cases pin the whole masked surface: masked-plain and
+    # masked-compressed must stay bitwise twins for every op, dead-routed
+    # descents must return the not-found contract, and live-shard rows
+    # must be untouched.
+
+    def _span_paths(self, fz):
+        """Rule paths ending mid-span: interior nodes of single-child
+        runs (parent fan-out 1 AND own fan-out 1, depth >= 2)."""
+        co = np.asarray(fz.child_offsets)
+        fan = co[1:] - co[:-1]
+        parent = np.asarray(fz.node_parent)
+        depth = np.asarray(fz.node_depth)
+        mid = np.nonzero(
+            (depth >= 2) & (fan == 1) & (fan[parent] == 1)
+        )[0]
+        item = np.asarray(fz.node_item)
+
+        def path(n):
+            out = []
+            while n != 0:
+                out.append(int(item[n]))
+                n = int(parent[n])
+            return out[::-1]
+
+        return [path(n) for n in mid[:48]]
+
+    def _routes(self, fz, ranges, heads):
+        """Owning shard per depth-1 head item (-1 when absent)."""
+        co = np.asarray(fz.child_offsets)
+        ei = np.asarray(fz.edge_item)
+        ec = np.asarray(fz.edge_child)
+        dfs = np.asarray(fz.dfs_order)
+        lo, hi = int(co[0]), int(co[1])
+        out = []
+        for it in heads:
+            j = int(np.searchsorted(ei[lo:hi], it))
+            node = (
+                int(ec[lo + j])
+                if j < hi - lo and int(ei[lo + j]) == it else -1
+            )
+            pos = int(dfs[node]) if node > 0 else -1
+            s = -1
+            for si, (rlo, rhi) in enumerate(ranges):
+                if pos >= 0 and rlo <= pos < rhi:
+                    s = si
+            out.append(s)
+        return np.asarray(out)
+
+    def test_masked_plain_compressed_bitwise(self, chain_trie, p):
+        """Every batched op over a dead-shard-masked plan: plain and
+        compressed layouts answer bit-identically (tie order included),
+        including descents landing mid-span inside the DEAD shard."""
+        if p < 2:
+            pytest.skip("masking needs >= 2 shards")
+        from repro.distributed.trie_sharding import (
+            mask_dead_shards, shard_device_trie,
+            sharded_rule_search_batch, sharded_rules_with,
+            sharded_top_k_rules_batch,
+        )
+        from repro.launch.mesh import make_trie_mesh
+
+        arrs, fz = self._fixture(chain_trie)
+        mesh = make_trie_mesh(p)
+        pp = shard_device_trie(fz, mesh, layout="plain")
+        pc = shard_device_trie(fz, mesh, layout="compressed")
+        paths = self._span_paths(fz)
+        pairs = [
+            (s[: max(1, len(s) // 2)], s[max(1, len(s) // 2):])
+            for s in paths if len(s) >= 2
+        ]
+        q, al = fz.canonicalize_queries(
+            [a for a, _ in pairs], [c for _, c in pairs]
+        )
+        q, al = np.asarray(q), np.asarray(al)
+        first = int(arrs["edge_item"][0])
+        prefixes = [[], [first], [9999]]
+        items = [0, 1, 2, first, 9999]
+        for dead in ([0], [p - 1], [0, p - 1]):
+            if len(dead) >= p:
+                continue
+            dp = mask_dead_shards(pp, dead)
+            dc = mask_dead_shards(pc, dead)
+            rp = sharded_rule_search_batch(dp, q, al)
+            rc = sharded_rule_search_batch(dc, q, al)
+            for k in rp:
+                np.testing.assert_array_equal(
+                    np.asarray(rp[k]), np.asarray(rc[k]),
+                    err_msg=f"dead={dead} rule_search {k}",
+                )
+            for metric in METRICS:
+                tp = sharded_top_k_rules_batch(dp, prefixes, 6,
+                                               metric=metric)
+                tc = sharded_top_k_rules_batch(dc, prefixes, 6,
+                                               metric=metric)
+                for k in ("values", "node"):
+                    np.testing.assert_array_equal(
+                        np.asarray(tp[k]), np.asarray(tc[k]),
+                        err_msg=f"dead={dead} top_k {metric} {k}",
+                    )
+            for role in ROLES:
+                wp = sharded_rules_with(dp, items, role=role, k=5)
+                wc = sharded_rules_with(dc, items, role=role, k=5)
+                for k in ("values", "node"):
+                    np.testing.assert_array_equal(
+                        np.asarray(wp[k]), np.asarray(wc[k]),
+                        err_msg=f"dead={dead} rules_with {role} {k}",
+                    )
+
+    def test_masked_midspan_dead_vs_live_rows(self, chain_trie, p):
+        """Mid-span landings split by routing: a descent into the dead
+        shard returns the not-found contract (False / -1 / 0.0); a row
+        whose antecedent AND consequent both route to live shards is
+        bit-identical to the unmasked plan."""
+        if p < 2:
+            pytest.skip("masking needs >= 2 shards")
+        from repro.distributed.trie_sharding import (
+            mask_dead_shards, shard_device_trie,
+            sharded_rule_search_batch,
+        )
+        from repro.launch.mesh import make_trie_mesh
+
+        arrs, fz = self._fixture(chain_trie)
+        plan = shard_device_trie(
+            fz, make_trie_mesh(p), layout="compressed"
+        )
+        paths = self._span_paths(fz)
+        pairs = [
+            (s[: max(1, len(s) // 2)], s[max(1, len(s) // 2):])
+            for s in paths if len(s) >= 2
+        ]
+        q, al = fz.canonicalize_queries(
+            [a for a, _ in pairs], [c for _, c in pairs]
+        )
+        q, al = np.asarray(q), np.asarray(al)
+        ant_route = self._routes(fz, plan.ranges, q[:, 0])
+        con_head = q[np.arange(len(q)), al]
+        con_route = self._routes(fz, plan.ranges, con_head)
+        # kill the shard most mid-span landings route to, so the dead
+        # set is guaranteed to receive descents
+        hit, counts = np.unique(
+            ant_route[ant_route >= 0], return_counts=True
+        )
+        dead = [int(hit[np.argmax(counts)])]
+        deg = mask_dead_shards(plan, dead)
+        full = sharded_rule_search_batch(plan, q, al)
+        got = sharded_rule_search_batch(deg, q, al)
+        dead_rows = np.isin(ant_route, dead)
+        live_rows = ~dead_rows & ~np.isin(con_route, dead)
+        assert dead_rows.any(), "fixture routed nothing to the dead shard"
+        assert live_rows.any(), "fixture routed nothing to live shards"
+        gf = np.asarray(got["found"])
+        assert not gf[dead_rows].any()
+        np.testing.assert_array_equal(
+            np.asarray(got["node"])[dead_rows], -1
+        )
+        for k in ("support", "confidence", "lift"):
+            np.testing.assert_array_equal(
+                np.asarray(got[k])[dead_rows], 0.0, err_msg=f"dead {k}"
+            )
+        for k in full:
+            np.testing.assert_array_equal(
+                np.asarray(got[k])[live_rows],
+                np.asarray(full[k])[live_rows], err_msg=f"live {k}",
+            )
+
+    def test_masked_quantized_compressed(self, chain_trie, p):
+        """Masking composes with the quantized span pool: dead-shard
+        rows still blank to the not-found contract and the masked plan
+        matches the masked UNQUANTIZED plan's found/node columns."""
+        if p < 2:
+            pytest.skip("masking needs >= 2 shards")
+        from repro.distributed.trie_sharding import (
+            mask_dead_shards, shard_device_trie,
+            sharded_rule_search_batch,
+        )
+        from repro.launch.mesh import make_trie_mesh
+
+        arrs, fz = self._fixture(chain_trie)
+        mesh = make_trie_mesh(p)
+        pc = shard_device_trie(fz, mesh, layout="compressed")
+        pq = shard_device_trie(
+            fz, mesh, layout="compressed",
+            quantize=True, n_transactions=4000,
+        )
+        paths = self._span_paths(fz)
+        pairs = [
+            (s[: max(1, len(s) // 2)], s[max(1, len(s) // 2):])
+            for s in paths if len(s) >= 2
+        ]
+        q, al = fz.canonicalize_queries(
+            [a for a, _ in pairs], [c for _, c in pairs]
+        )
+        q, al = np.asarray(q), np.asarray(al)
+        dead = [p - 1]
+        gc = sharded_rule_search_batch(mask_dead_shards(pc, dead), q, al)
+        gq = sharded_rule_search_batch(mask_dead_shards(pq, dead), q, al)
+        for k in ("found", "node"):
+            np.testing.assert_array_equal(
+                np.asarray(gc[k]), np.asarray(gq[k]), err_msg=k
+            )
+        nf = ~np.asarray(gq["found"])
+        for k in ("support", "confidence", "lift"):
+            np.testing.assert_array_equal(
+                np.asarray(gq[k])[nf], 0.0, err_msg=k
+            )
+
 
 # ----------------------------------------------------------------------
 # the int8 gradient-compression helpers, wired into the encoder

@@ -1,0 +1,435 @@
+"""Streaming inserts: the log-structured delta overlay over a frozen
+Trie of Rules.
+
+The invariant under test everywhere: queries over frozen+delta are
+BIT-IDENTICAL (tie order included) to the same queries over a
+from-scratch rebuild of the union — single-device and sharded at
+P in {1, 2, 8} — and a refreeze IS that rebuild, field for field.
+
+The serve-layer cases pin the staleness bugfixes that ride along: the
+scheduler's LRU cache is keyed by the engine's ``(failovers, epoch)``
+version, so a post-insert query can never be answered by a pre-insert
+cached row, and the launch predictor seeds unseen batch shapes from the
+nearest observed pow2 bucket instead of the cold default.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.arm.rulegen import sample_rule_sequences
+from repro.arm.transactions import TransactionDB
+from repro.core.array_trie import FrozenTrie
+from repro.core.build_arrays import build_frozen_trie
+from repro.core.delta_trie import StreamingTrie
+from repro.kernels import ops
+
+METRICS = ("support", "confidence", "lift", "leverage", "conviction")
+ROLES = ("any", "antecedent", "consequent")
+
+FROZEN_FIELDS = (
+    "node_item", "node_parent", "node_depth",
+    "edge_parent", "edge_item", "edge_child", "child_offsets",
+    "dfs_order", "subtree_size", "dfs_to_node",
+    "item_order", "item_rank",
+)
+METRIC_FIELDS = ("support", "confidence", "lift")
+
+
+def random_db(seed, n_items=12, n_tx=40, max_size=6):
+    rng = np.random.RandomState(seed)
+    txs = [
+        set(rng.randint(0, n_items, size=rng.randint(1, max_size + 1)))
+        for _ in range(n_tx)
+    ]
+    return TransactionDB(txs, n_items=n_items)
+
+
+def all_paths(fz):
+    """path -> (support, confidence, lift) for every rule node."""
+    return {
+        tuple(int(x) for x in fz.path_items(n)): (
+            float(fz.support[n]),
+            float(fz.confidence[n]),
+            float(fz.lift[n]),
+        )
+        for n in range(1, fz.n_nodes)
+    }
+
+
+def check(tag, a, b):
+    assert set(a) == set(b), tag
+    for k in a:
+        np.testing.assert_array_equal(
+            np.asarray(a[k]), np.asarray(b[k]), err_msg=f"{tag}:{k}"
+        )
+
+
+def assert_frozen_equal(expected, actual):
+    for fld in FROZEN_FIELDS + METRIC_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(expected, fld), getattr(actual, fld), err_msg=fld
+        )
+    assert expected.max_fanout == actual.max_fanout
+
+
+@pytest.fixture(scope="module")
+def split():
+    """(db, full, base, novel): full = base + the novel half's paths."""
+    db = random_db(3)
+    seqs = sample_rule_sequences(db, 60, seed=1)
+    full, _, _ = build_frozen_trie(db, seqs)
+    base, _, _ = build_frozen_trie(db, seqs[: len(seqs) // 2])
+    fp, bp = all_paths(full), all_paths(base)
+    novel = {p: m for p, m in fp.items() if p not in bp}
+    assert novel, "fixture needs novel paths"
+    return db, full, base, novel
+
+
+def insert_all(st, novel):
+    paths = sorted(novel, key=len)   # shortest-first: prefix-closed
+    st.insert(
+        paths,
+        [novel[p][0] for p in paths],
+        [novel[p][1] for p in paths],
+        [novel[p][2] for p in paths],
+    )
+    return paths
+
+
+def query_fixture(fz):
+    prefixes = [[], [0], [1, 2], [3], [0, 1], [99], [5, 1]]
+    items = [0, 1, 2, 3, 4, 0, 11, -3]
+    rng = np.random.RandomState(0)
+    pairs = []
+    for p in all_paths(fz):
+        if len(p) >= 2:
+            a = rng.randint(1, len(p))
+            pairs.append((p[:a], p[a:]))
+    pairs = pairs[:40] + [((0,), (99,)), ((1, 2), (3, 4))]
+    return prefixes, items, pairs
+
+
+def assert_all_ops_match(ref_trie, trie, prefixes, items, pairs):
+    """Every batched op, reference vs streaming, bitwise."""
+    for metric in METRICS:
+        check(
+            f"topk:{metric}",
+            ops.top_k_rules_batch(ref_trie, prefixes, 6, metric=metric),
+            ops.top_k_rules_batch(trie, prefixes, 6, metric=metric),
+        )
+        for role in ROLES:
+            check(
+                f"rw:{metric}:{role}",
+                ops.rules_with(ref_trie, items, role=role, k=5,
+                               metric=metric),
+                ops.rules_with(trie, items, role=role, k=5,
+                               metric=metric),
+            )
+    check(
+        "rule_search",
+        ops.rule_search_batch(ref_trie, pairs),
+        ops.rule_search_batch(trie, pairs),
+    )
+
+
+# ----------------------------------------------------------------------
+# edge cases: empty delta, delta-only, duplicate re-insert, racing folds
+# ----------------------------------------------------------------------
+class TestEdgeCases:
+    def test_empty_delta_is_identity(self, split):
+        _, _, base, _ = split
+        st = StreamingTrie(base)
+        assert st.is_identity and st.n_delta == 0 and st.epoch == 0
+        prefixes, items, pairs = query_fixture(base)
+        assert_all_ops_match(base, st, prefixes, items, pairs)
+        # refreeze on an empty delta is a no-op on the frozen base
+        assert st.refreeze() == 0
+        assert st.frozen is base
+
+    def test_delta_only_trie(self, split):
+        """Frozen base built from ZERO sequences: every rule lives in
+        the delta, and queries still match the from-scratch build."""
+        db, full, _, _ = split
+        empty, _, _ = build_frozen_trie(db, [])
+        assert empty.n_nodes == 1
+        st = StreamingTrie(empty)
+        insert_all(st, all_paths(full))
+        prefixes, items, pairs = query_fixture(full)
+        assert_all_ops_match(full, st, prefixes, items, pairs)
+        st.refreeze()
+        assert_frozen_equal(full, st.frozen)
+
+    def test_duplicate_reinsert_updates_not_appends(self, split):
+        _, _, base, _ = split
+        bp = all_paths(base)
+        path = sorted(bp)[len(bp) // 2]
+        st = StreamingTrie(base)
+        st.insert([path], [0.9], [0.8], [0.7])
+        assert st.n_delta == 1
+        st.insert([path], [0.5], [0.25], [2.0])
+        assert st.n_delta == 1, "re-insert must update, never append"
+        assert st.lookup(path) == (0.5, 0.25, 2.0)
+        # reference: the base arrays with that one node's metrics patched
+        node = st._frozen_node(path)
+        sup = np.asarray(base.support).copy()
+        conf = np.asarray(base.confidence).copy()
+        lif = np.asarray(base.lift).copy()
+        sup[node], conf[node], lif[node] = (
+            np.float32(0.5), np.float32(0.25), np.float32(2.0),
+        )
+        ref = FrozenTrie(
+            node_item=base.node_item, node_parent=base.node_parent,
+            node_depth=base.node_depth, support=sup, confidence=conf,
+            lift=lif, edge_parent=base.edge_parent,
+            edge_item=base.edge_item, edge_child=base.edge_child,
+            item_order=base.item_order, item_rank=base.item_rank,
+        )
+        prefixes, items, pairs = query_fixture(base)
+        assert_all_ops_match(ref, st, prefixes, items, pairs)
+        # fold keeps the node count: an update is in-place
+        st.refreeze()
+        assert st.frozen.n_nodes == base.n_nodes
+        assert float(st.frozen.support[node]) == np.float32(0.5)
+
+    def test_insert_racing_staggered_refreeze(self, split):
+        """Inserts interleaved with threshold-triggered staggered folds
+        answer identically to a pure-delta twin at every step, and the
+        final drain equals the from-scratch rebuild."""
+        _, full, base, novel = split
+        racer = StreamingTrie(base, refreeze_max_delta=4,
+                              refreeze_max_age=2)
+        pure = StreamingTrie(base)
+        prefixes, items, pairs = query_fixture(full)
+        paths = sorted(novel, key=len)
+        folds = 0
+        for i in range(0, len(paths), 5):
+            chunk = paths[i: i + 5]
+            for st in (racer, pure):
+                st.insert(
+                    chunk,
+                    [novel[p][0] for p in chunk],
+                    [novel[p][1] for p in chunk],
+                    [novel[p][2] for p in chunk],
+                )
+            folds += racer.maybe_refreeze() is not None
+            check(
+                f"race:{i}",
+                ops.top_k_rules_batch(pure, prefixes, 6, metric="lift"),
+                ops.top_k_rules_batch(racer, prefixes, 6, metric="lift"),
+            )
+        assert folds >= 1, "thresholds must trigger staggered folds"
+        assert_all_ops_match(full, racer, prefixes, items, pairs)
+        while racer.n_delta:
+            racer.refreeze()
+        assert_frozen_equal(full, racer.frozen)
+
+    def test_refreeze_is_from_scratch_rebuild(self, split):
+        _, full, base, novel = split
+        st = StreamingTrie(base)
+        insert_all(st, novel)
+        e0 = st.epoch
+        st.refreeze()
+        assert st.epoch > e0 and st.n_delta == 0
+        assert_frozen_equal(full, st.frozen)
+
+    def test_insert_validation(self, split):
+        _, _, base, _ = split
+        st = StreamingTrie(base)
+        with pytest.raises(ValueError, match="empty"):
+            st.insert([[]], [0.1], [0.1], [0.1])
+        with pytest.raises(ValueError, match="not in"):
+            st.insert([[99]], [0.1], [0.1], [0.1])
+        with pytest.raises(ValueError, match="prefix-closed"):
+            st.insert([[0, 1, 2, 3, 4, 5, 6, 7]], [0.1], [0.1], [0.1])
+
+
+# ----------------------------------------------------------------------
+# sharded parity at P in {1, 2, 8}
+# ----------------------------------------------------------------------
+SHARD_COUNTS = (1, 2, 8)
+
+
+def needs_devices(p):
+    return pytest.mark.skipif(
+        jax.device_count() < p,
+        reason=f"needs {p} devices (run under XLA_FLAGS="
+               f"--xla_force_host_platform_device_count=8)",
+    )
+
+
+@pytest.mark.parametrize(
+    "p", [pytest.param(p, marks=needs_devices(p)) for p in SHARD_COUNTS]
+)
+class TestShardedStreaming:
+    def test_sharded_matches_rebuild(self, split, p):
+        from repro.launch.mesh import make_trie_mesh
+
+        _, full, base, novel = split
+        st = StreamingTrie(base, mesh=make_trie_mesh(p))
+        insert_all(st, novel)
+        prefixes, items, pairs = query_fixture(full)
+        assert_all_ops_match(full, st, prefixes, items, pairs)
+
+    def test_owner_shard_routes_in_range(self, split, p):
+        from repro.launch.mesh import make_trie_mesh
+
+        _, _, base, novel = split
+        st = StreamingTrie(base, mesh=make_trie_mesh(p))
+        insert_all(st, novel)
+        for path in list(novel)[:8]:
+            s = st.owner_shard(path)
+            assert 0 <= s < st.shard_plan().n_shards
+
+    def test_refreeze_under_mesh_matches_rebuild(self, split, p):
+        from repro.launch.mesh import make_trie_mesh
+
+        _, full, base, novel = split
+        st = StreamingTrie(base, mesh=make_trie_mesh(p),
+                           refreeze_max_delta=1, refreeze_max_age=1)
+        insert_all(st, novel)
+        while st.maybe_refreeze() is not None:
+            pass
+        while st.n_delta:
+            st.refreeze()
+        assert_frozen_equal(full, st.frozen)
+        prefixes, items, pairs = query_fixture(full)
+        check(
+            "post-fold topk",
+            ops.top_k_rules_batch(full, prefixes, 6, metric="lift"),
+            ops.top_k_rules_batch(st, prefixes, 6, metric="lift"),
+        )
+
+
+# ----------------------------------------------------------------------
+# serve loop: the staleness regressions
+# ----------------------------------------------------------------------
+class TestServeStreaming:
+    def _sched(self, trie):
+        from repro.serve.resilience import VirtualClock
+        from repro.serve.scheduler import TrieScheduler
+        from repro.serve.trie_engine import TrieQueryEngine
+
+        eng = TrieQueryEngine(trie, mode="replicated")
+        return TrieScheduler(eng, clock=VirtualClock()), eng
+
+    @staticmethod
+    def _one(sched, op, payload, **kw):
+        req = sched.submit(op, payload, kwargs=kw or None)
+        return {r.id: r for r in sched.drain()}[req.id]
+
+    def test_post_insert_query_never_serves_stale_cache(self, split):
+        """THE regression: a cached pre-insert row must never answer a
+        post-insert query.  An unversioned cache key (main) returns the
+        stale row verbatim; the epoch-versioned key misses and recomputes
+        over frozen+delta."""
+        _, full, base, novel = split
+        sched, _ = self._sched(StreamingTrie(base))
+        ref_sched, _ = self._sched(full)
+
+        q = ([], {"k": 6, "metric": "support"})
+        r1 = self._one(sched, "top_k", q[0], **q[1])
+        assert r1.ok and not r1.cache_hit
+        r2 = self._one(sched, "top_k", q[0], **q[1])
+        assert r2.cache_hit, "sanity: identical query hits the cache"
+
+        for path in sorted(novel, key=len):
+            resp = self._one(sched, "insert", (path, *novel[path]))
+            assert resp.ok, resp.error
+        r3 = self._one(sched, "top_k", q[0], **q[1])
+        assert not r3.cache_hit, (
+            "post-insert query answered by a pre-insert cached row"
+        )
+        ref = self._one(ref_sched, "top_k", q[0], **q[1])
+        for k in r3.result:
+            np.testing.assert_array_equal(
+                np.asarray(r3.result[k]), np.asarray(ref.result[k]),
+                err_msg=k,
+            )
+        # now an update that MUST change this query's answer: boost one
+        # rule's support above everything else — without invalidation
+        # the stale cached row would have been served verbatim
+        boost = sorted(novel, key=len)[0]
+        assert self._one(sched, "insert", (boost, 0.99, 0.5, 1.0)).ok
+        r4 = self._one(sched, "top_k", q[0], **q[1])
+        assert not r4.cache_hit
+        assert float(np.asarray(r4.result["values"])[0]) == np.float32(
+            0.99
+        )
+        assert not np.array_equal(
+            np.asarray(r2.result["values"]),
+            np.asarray(r4.result["values"]),
+        )
+
+    def test_version_bump_invalidates_cache_key(self, split):
+        _, _, base, _ = split
+        sched, eng = self._sched(StreamingTrie(base))
+        key = ("top_k", (0,), (6, "support", 1))
+        v0 = sched._vkey(key)
+        sched.engine.failovers += 1          # simulated failover
+        assert sched._vkey(key) != v0, "failover must orphan the cache"
+        eng.stream.insert([(int(base.node_item[1]),)], [0.9], [0.9],
+                          [1.0])
+        assert sched._vkey(key) != v0, "insert must orphan the cache"
+
+    def test_scheduler_insert_roundtrip_and_refreeze(self, split):
+        _, full, base, novel = split
+        st = StreamingTrie(base, refreeze_max_delta=1, refreeze_max_age=1)
+        sched, eng = self._sched(st)
+        ref_sched, _ = self._sched(full)
+        for path in sorted(novel, key=len):
+            assert self._one(sched, "insert", (path, *novel[path])).ok
+        assert sched.stats["inserted"] == len(novel)
+        assert sched.stats.get("refreezes", 0) >= 1
+        got = self._one(sched, "top_k", [], k=8, metric="lift")
+        ref = self._one(ref_sched, "top_k", [], k=8, metric="lift")
+        for k in got.result:
+            np.testing.assert_array_equal(
+                np.asarray(got.result[k]), np.asarray(ref.result[k]),
+                err_msg=k,
+            )
+
+    def test_invalid_inserts_isolated(self, split):
+        from repro.kernels.ops import InvalidQueryError
+
+        _, _, base, _ = split
+        sched, _ = self._sched(StreamingTrie(base))
+        bad = self._one(sched, "insert", ((0, 1, 2, 3, 4, 5, 6, 7),
+                                          0.1, 0.2, 0.3))
+        assert bad.status == "invalid"       # prefix-closure violation
+        with pytest.raises(InvalidQueryError):
+            sched.submit("insert", ((), 0.1, 0.2, 0.3))
+
+    def test_frozen_engine_rejects_insert(self, split):
+        _, _, base, _ = split
+        sched, _ = self._sched(base)
+        resp = self._one(sched, "insert", ((0,), 0.1, 0.2, 0.3))
+        assert resp.status == "invalid"
+
+
+# ----------------------------------------------------------------------
+# launch predictor: nearest-pow2 seeding
+# ----------------------------------------------------------------------
+class TestLaunchPredictor:
+    def test_seeds_from_nearest_pow2_bucket(self):
+        from repro.serve.scheduler import LaunchPredictor
+
+        p = LaunchPredictor(default_ms=5.0)
+        assert p.predict_ms(("top_k",), 4) == 5.0     # cold: default
+        p.observe(("top_k",), 8, 0.010)
+        assert p.predict_ms(("top_k",), 8) == 10.0    # exact
+        assert p.predict_ms(("top_k",), 16) == 10.0   # nearest seed
+        assert p.predict_ms(("top_k",), 100) == 10.0
+        p.observe(("top_k",), 128, 0.080)
+        assert p.predict_ms(("top_k",), 100) == 80.0  # pad 128 exact
+        # log2 tie between 8 and 128 resolves to the SMALLER size
+        assert p.predict_ms(("top_k",), 32) == 10.0
+        # other buckets never borrow observations
+        assert p.predict_ms(("rules_with",), 8) == 5.0
+
+    def test_ewma_update_still_converges(self):
+        from repro.serve.scheduler import LaunchPredictor
+
+        p = LaunchPredictor(alpha=0.5)
+        p.observe(("b",), 4, 0.010)
+        p.observe(("b",), 4, 0.020)
+        assert p.predict_ms(("b",), 4) == pytest.approx(15.0)
