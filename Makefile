@@ -4,7 +4,8 @@ export PYTHONPATH := src
 .PHONY: test test-fast test-slow test-multidevice lint bench-smoke \
 	bench-gate bench-baseline bench-search bench-topk bench-build \
 	bench-batched bench-traversal bench-sharded bench-serve \
-	bench-compress bench-streaming bench autotune autotune-smoke
+	bench-compress bench-streaming bench-obs bench autotune \
+	autotune-smoke
 
 # 8 simulated CPU devices for the sharded-trie tier (tests + benches)
 MULTIDEV := XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -68,6 +69,10 @@ bench-smoke:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-streaming BENCH_streaming_smoke.json
+	$(PY) -m benchmarks.run --only obs_overhead --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-obs BENCH_obs_smoke.json
 
 # CI bench gate: every lane in benchmarks/gates.json gets a fresh smoke
 # run and is gated against its committed baseline (ratio-based; per-lane
@@ -112,6 +117,10 @@ bench-baseline:
 		--json-out '' --json-out-topk '' --json-out-build '' \
 		--json-out-batched '' \
 		--json-out-streaming benchmarks/baselines/streaming_smoke.json
+	$(PY) -m benchmarks.run --only obs_overhead --smoke \
+		--json-out '' --json-out-topk '' --json-out-build '' \
+		--json-out-batched '' \
+		--json-out-obs benchmarks/baselines/obs_smoke.json
 	$(PY) -m benchmarks.autotune --smoke --no-write-table \
 		--json-out benchmarks/baselines/autotune_smoke.json
 
@@ -167,6 +176,14 @@ bench-compress:
 # concurrent insert/query scheduler replay (BENCH_streaming.json)
 bench-streaming:
 	$(PY) -m benchmarks.run --only streaming
+
+# observability overhead lane: the same deterministic serve replay run
+# with tracing+metrics fully off vs fully on (overhead ratio + response
+# parity gated), plus span-tree/exporter validity checks; --trace-out
+# writes the traced replay as Perfetto JSON (open in ui.perfetto.dev)
+bench-obs:
+	$(PY) -m benchmarks.run --only obs_overhead \
+		--trace-out BENCH_obs_trace.json
 
 # every paper figure + kernel benches.  The sharded lane needs the
 # 8-device env to produce its full P sweep, so the first pass (plain

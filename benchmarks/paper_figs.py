@@ -58,6 +58,8 @@ JSON_OUT_SHARDED = "BENCH_sharded_query.json"  # multi-device trajectory
 JSON_OUT_SERVE = "BENCH_serve.json"      # serve-loop SLO trajectory
 JSON_OUT_COMPRESS = "BENCH_compress.json"  # compressed-layout trajectory
 JSON_OUT_STREAMING = "BENCH_streaming.json"  # delta-overlay trajectory
+JSON_OUT_OBS = "BENCH_obs.json"          # observability-overhead trajectory
+TRACE_OUT = ""                           # Perfetto trace path (--trace-out)
 
 # (n_edges, batch sizes): full-sweep interpret-mode compile cost scales
 # with E, so the largest trie runs a single batch size.  Q=2048 is the
@@ -1127,6 +1129,45 @@ def _serve_replay(sched, workload, clock):
     return responses
 
 
+def _tenant_summary(metrics) -> dict:
+    """Per-tenant admission/shed/latency rollup read back from the
+    scheduler's labeled serve metrics (``serve.admitted`` /
+    ``serve.shed_admission`` / ``serve.latency_ms``) — the bench surface
+    for the multi-tenant labels, so the gate-lane records show who was
+    admitted, who was shed, and each tenant's latency quantiles."""
+    from repro.obs import Histogram
+
+    tenants = set(metrics.label_values("serve.admitted", "tenant"))
+    tenants |= set(metrics.label_values("serve.latency_ms", "tenant"))
+    tenants |= set(metrics.label_values("serve.shed_admission", "tenant"))
+    out = {}
+    for t in sorted(tenants):
+        lab = ("tenant", t)
+        admitted = sum(
+            c.value for c in metrics.counters_named("serve.admitted")
+            if lab in c.labels
+        )
+        shed = sum(
+            c.value
+            for c in metrics.counters_named("serve.shed_admission")
+            if lab in c.labels
+        )
+        merged = None
+        for h in metrics.histograms_named("serve.latency_ms"):
+            if lab not in h.labels:
+                continue
+            if merged is None:
+                merged = Histogram("serve.latency_ms")
+            merged.merge_snapshot(h.snapshot())
+        out[t] = {
+            "admitted": int(admitted),
+            "shed": int(shed),
+            "p50_ms": merged.quantile(0.5) if merged else 0.0,
+            "p99_ms": merged.quantile(0.99) if merged else 0.0,
+        }
+    return out
+
+
 def bench_serve() -> List[Row]:
     """Zipfian multi-tenant replay through ``serve.TrieScheduler`` at
     three offered-load levels (fractions/multiples of the measured drain
@@ -1240,6 +1281,10 @@ def bench_serve() -> List[Row]:
                 "cache_hit_rate": stats["cache_hits"] / n_sub,
                 "dedup_collapsed": stats["dedup_collapsed"],
                 "launches": stats["launches"],
+                # labeled-metric rollup: not gated (gate metrics are the
+                # scalar fields above), but surfaced per record so lane
+                # output shows the per-tenant admission/shed/latency split
+                "tenants": _tenant_summary(sched.obs.metrics),
             }
             lane.append(res)
             rows.append(Row(
@@ -1339,6 +1384,201 @@ def bench_serve() -> List[Row]:
         with open(JSON_OUT_SERVE, "w") as fh:
             json.dump(payload, fh, indent=2)
     return rows
+
+
+# ----------------------------------------------------------------------
+# PR 10: observability — enabled-vs-disabled overhead + trace validity
+# ----------------------------------------------------------------------
+OBS_REPS = 3
+
+
+def bench_obs() -> List[Row]:
+    """Observability overhead + trace-validity lane.
+
+    Replays one deterministic fixed-service zipfian workload through
+    ``serve.TrieScheduler`` twice — observability fully disabled vs
+    metrics+tracing enabled — and reports:
+
+    * ``overhead_ratio``: enabled/disabled host wall time (min over
+      ``OBS_REPS`` interleaved reps each — gated, must stay ~1x);
+    * ``parity_mismatch``: responses whose payload differs between the
+      two replays (gated at exactly 0 — tracing may never change query
+      results);
+    * span-tree well-formedness (no orphan parents, no unfinished or
+      negative-duration spans) plus the contiguity invariant that each
+      request's child spans sum to its root span, which in turn matches
+      the reported end-to-end ``latency_ms``;
+    * an in-memory Perfetto ``trace_event`` round-trip (serialize,
+      re-parse, check chronological order).
+
+    Writes ``BENCH_obs.json``; with ``--trace-out`` also writes the
+    Perfetto trace and a plain-text metrics dump next to it.
+    """
+    import time as _time
+
+    from repro.obs import (
+        MetricsRegistry,
+        Observability,
+        Tracer,
+        spans_to_trace_events,
+        write_metrics,
+        write_trace,
+    )
+    from repro.core.synthetic import frozen_from_arrays
+    from repro.serve import (
+        TrieQueryEngine,
+        TrieScheduler,
+        VirtualClock,
+        zipfian_workload,
+    )
+
+    n_edges = SERVE_EDGES_SMOKE if SMOKE else SERVE_EDGES
+    n_req = SERVE_N_SMOKE if SMOKE else SERVE_N
+    max_batch = 32
+    arrs = _synthetic_csr_trie(n_edges)
+    fz = frozen_from_arrays(arrs)
+    engine = TrieQueryEngine(fz, mode="replicated")
+    # pre-compile every pow2 launch shape (same warmup as bench_serve)
+    depth = np.asarray(fz.node_depth)
+    width = 1 << max(int(depth.max()) - 1, 0).bit_length()
+    b = 1
+    while b <= max_batch:
+        q = np.full((b, width), -1, np.int32)
+        q[:, 0] = np.arange(b, dtype=np.int32)
+        engine.rule_search_batch(q, np.ones((b,), np.int32))
+        engine.top_k_rules_batch(q, 8, metric="confidence")
+        engine.rules_with(list(range(b)), role="any", k=8, metric="lift")
+        b *= 2
+
+    wl = zipfian_workload(fz, n_req, seed=0, deadline_ms=(float("inf"),))
+
+    def replay(tracing: bool):
+        if tracing:
+            obs = Observability(tracing=True)
+        else:
+            obs = Observability(metrics=MetricsRegistry(enabled=False),
+                                tracer=Tracer(enabled=False))
+        engine.obs = None     # one shared engine: rebind per replay
+        clock = VirtualClock()
+        sched = TrieScheduler(
+            engine, clock=clock, timer=_FixedServiceTimer(0.01),
+            max_pending=len(wl), max_batch=max_batch, obs=obs,
+        )
+        t0 = _time.perf_counter()
+        responses = _serve_replay(sched, wl, clock)
+        host_s = _time.perf_counter() - t0
+        return sched, obs, responses, host_s
+
+    def fingerprint(responses):
+        """Bit-exact digest of every response payload, in request order."""
+        out = []
+        for r in sorted(responses, key=lambda r: r.id):
+            blob = repr({
+                k: (np.asarray(v).tolist()
+                    if isinstance(v, np.ndarray) else v)
+                for k, v in sorted((r.result or {}).items())
+            })
+            out.append((r.id, r.status, blob))
+        return out
+
+    # interleave the reps so host drift (thermal, page cache) hits both
+    # modes equally instead of biasing whichever mode runs last
+    off_s, on_s = [], []
+    base = traced_obs = traced_resp = None
+    for _ in range(OBS_REPS):
+        _, _, r_off, t_off = replay(False)
+        _, obs_on, r_on, t_on = replay(True)
+        off_s.append(t_off)
+        on_s.append(t_on)
+        base, traced_obs, traced_resp = r_off, obs_on, r_on
+    overhead_ratio = min(on_s) / max(min(off_s), 1e-9)
+    parity_mismatch = sum(
+        a != b for a, b in zip(fingerprint(base), fingerprint(traced_resp))
+    )
+
+    # span-tree well-formedness + per-request duration consistency
+    spans = traced_obs.tracer.finished()
+    by_id = {s.span_id: s for s in spans}
+    orphans = sum(
+        1 for s in spans
+        if s.parent_id != -1 and s.parent_id not in by_id
+    )
+    unfinished = sum(1 for s in spans if s.end_s is None)
+    negative = sum(
+        1 for s in spans if s.end_s is not None and s.duration_s < 0
+    )
+    roots = [s for s in spans if s.name == "request"]
+    kids_of: dict = {}
+    for s in spans:
+        kids_of.setdefault(s.parent_id, []).append(s)
+    worst_gap_ms = 0.0
+    for root in roots:
+        kids = kids_of.get(root.span_id, [])
+        gap_s = abs(root.duration_s - sum(k.duration_s for k in kids))
+        worst_gap_ms = max(worst_gap_ms, gap_s * 1e3)
+        lat = root.attrs.get("latency_ms")
+        if lat is not None:
+            worst_gap_ms = max(
+                worst_gap_ms, abs(root.duration_s * 1e3 - lat)
+            )
+
+    # Perfetto round-trip: serialize, re-parse, check ordering
+    doc = json.loads(json.dumps(spans_to_trace_events(spans)))
+    events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    chronological = all(
+        a["ts"] <= b["ts"] for a, b in zip(events, events[1:])
+    )
+    assert parity_mismatch == 0, "tracing changed query results"
+    assert orphans == 0 and negative == 0 and unfinished == 0, (
+        f"malformed span tree: orphans={orphans} "
+        f"unfinished={unfinished} negative={negative}"
+    )
+    assert chronological and len(events) > 0, (
+        "exporter emitted empty or out-of-order trace"
+    )
+
+    result = {
+        "lane": "obs",
+        "n_requests": n_req,
+        "n_edges": n_edges,
+        "reps": OBS_REPS,
+        "disabled_s": min(off_s),
+        "enabled_s": min(on_s),
+        "overhead_ratio": overhead_ratio,
+        "parity_mismatch": parity_mismatch,
+        "spans": len(spans),
+        "requests_traced": len(roots),
+        "orphan_spans": orphans,
+        "unfinished_spans": unfinished,
+        "negative_spans": negative,
+        "worst_span_sum_gap_ms": worst_gap_ms,
+        "trace_events": len(events),
+        "trace_chronological": chronological,
+        "tenants": _tenant_summary(traced_obs.metrics),
+    }
+
+    if TRACE_OUT:
+        write_trace(TRACE_OUT, spans)
+        write_metrics(TRACE_OUT + ".metrics.txt", traced_obs.metrics)
+
+    if JSON_OUT_OBS:
+        payload = {
+            "bench": "obs",
+            "interpret": bench_interpret(),
+            **bench_mode_fields(),
+            "smoke": SMOKE,
+            "unix_time": time.time(),
+            "results": [result],
+        }
+        with open(JSON_OUT_OBS, "w") as fh:
+            json.dump(payload, fh, indent=2)
+    return [Row(
+        f"obs_overhead_E{n_edges}", overhead_ratio,
+        f"off_s={min(off_s):.3f};on_s={min(on_s):.3f};"
+        f"spans={len(spans)};events={len(events)};"
+        f"parity_mismatch={parity_mismatch};"
+        f"worst_gap_ms={worst_gap_ms:.4f}",
+    )]
 
 
 # ----------------------------------------------------------------------

@@ -35,6 +35,7 @@ BENCHES = [
     ("batched_query_ops", paper_figs.bench_batched_query),
     ("sharded_query", paper_figs.bench_sharded_query),
     ("serve_loop", paper_figs.bench_serve),
+    ("obs_overhead", paper_figs.bench_obs),
     ("compress_layout", paper_figs.bench_compress_layout),
     ("streaming_inserts", paper_figs.bench_streaming),
 ]
@@ -93,6 +94,17 @@ def main() -> None:
              "JSON ('' disables writing)",
     )
     parser.add_argument(
+        "--json-out-obs", default="BENCH_obs.json",
+        help="path for the observability-overhead trajectory JSON "
+             "('' disables writing)",
+    )
+    parser.add_argument(
+        "--trace-out", default="",
+        help="write the obs lane's traced replay as Perfetto "
+             "trace_event JSON to this path (plus a .metrics.txt dump); "
+             "'' disables writing",
+    )
+    parser.add_argument(
         "--compiled", action="store_true",
         help="run kernels compiled (TPU/GPU hosts); on a CPU-only host "
              "prints a skip marker and exits 0",
@@ -119,6 +131,8 @@ def main() -> None:
     paper_figs.JSON_OUT_SERVE = args.json_out_serve
     paper_figs.JSON_OUT_COMPRESS = args.json_out_compress
     paper_figs.JSON_OUT_STREAMING = args.json_out_streaming
+    paper_figs.JSON_OUT_OBS = args.json_out_obs
+    paper_figs.TRACE_OUT = args.trace_out
 
     print("name,us_per_call,derived")
     failed = []

@@ -211,6 +211,30 @@ def main():
           f"{rebuilt.n_nodes} nodes (delta now {st.n_delta}); "
           f"bit-identical to a from-scratch build of the union")
 
+    # --- observability: spans + metrics over the same serve loop --------
+    # An Observability handle threads one MetricsRegistry + Tracer through
+    # scheduler, resilience ladder, and engine; tracing rides the
+    # scheduler's own clock, so replay traces are deterministic.  The dump
+    # below is the same text `benchmarks/run.py --trace-out` writes next
+    # to the Perfetto JSON.
+    from repro.obs import Observability, metrics_text
+
+    obs = Observability(tracing=True)
+    sched = TrieScheduler(TrieQueryEngine(rebuilt, mode="replicated"),
+                          obs=obs)
+    for it in items:
+        sched.submit("rules_with", it, {"k": 3, "metric": "lift"},
+                     tenant="quickstart")
+    sched.drain()
+    spans = obs.tracer.finished()
+    roots = [s for s in spans if s.name == "request"]
+    print(f"\nobservability: {len(spans)} spans over {len(roots)} "
+          f"requests (write_trace(...) renders them for ui.perfetto.dev)")
+    print("metrics dump (one line per instrument):")
+    for line in metrics_text(obs.metrics).splitlines():
+        if line.startswith(("serve.requests", "serve.latency_ms")):
+            print(f"  {line}")
+
 
 if __name__ == "__main__":
     main()

@@ -83,6 +83,51 @@ _interpret = interpret_mode
 
 
 # ----------------------------------------------------------------------
+# kernel-launch profiling (repro.obs: one timing ring per op)
+# ----------------------------------------------------------------------
+from time import perf_counter as _perf_counter  # noqa: E402
+
+from repro.obs.profile import kernel_profiler as _kernel_profiler  # noqa: E402
+
+
+def _live_query_rows(queries) -> Optional[int]:
+    """Rows carrying any real (non-negative) item, or None when the
+    profiler is off — launch pad rows are all-padding / absent-item
+    rows by the repo-wide query-matrix conventions, so this is the
+    denominator of the recorded pad factor."""
+    if not _kernel_profiler.enabled:
+        return None
+    q = np.asarray(queries)
+    if q.ndim != 2:
+        return int(q.shape[0]) if q.ndim == 1 else None
+    return int(np.count_nonzero((q >= 0).any(axis=1)))
+
+
+def _profiled(op, fn, *, rows, shape, live=None, n_shards=1):
+    """Run one kernel dispatch under the launch profiler.
+
+    Disabled (the default): one attribute read, then ``fn()`` untouched
+    — results, dispatch, and async behavior are bit-identical to the
+    uninstrumented call.  Enabled: the result is blocked on before the
+    clock stops (honest wall time under async dispatch) and the record
+    lands in the per-op ring (``repro.obs.profile.kernel_profiler``),
+    fanning out to the bound registry and any observers."""
+    if not _kernel_profiler.enabled:
+        return fn()
+    t0 = _perf_counter()
+    out = jax.block_until_ready(fn())
+    rows = max(int(rows), 1)
+    live_rows = rows if live is None else min(max(int(live), 1), rows)
+    _kernel_profiler.record(
+        op, rows=rows, shape=tuple(int(s) for s in shape),
+        seconds=_perf_counter() - t0,
+        pad_factor=rows / live_rows,
+        n_shards=int(n_shards),
+    )
+    return out
+
+
+# ----------------------------------------------------------------------
 # error taxonomy (the serve loop's retryable-vs-fatal classification)
 # ----------------------------------------------------------------------
 class TrieQueryError(Exception):
@@ -551,17 +596,22 @@ def rule_search(
             "support": z, "confidence": z, "lift": z,
         }
 
+    live = _live_query_rows(queries)
     if edges.get("layout") == "compressed":
-        out = rule_search_span_pallas(
-            edges["child_offsets"], edges["edge_item"],
-            edges["edge_pos"], edges["edge_span"], edges["edge_tail"],
-            edges["node_item"], edges["support"], edges["confidence"],
-            edges["lift"], queries, ant_len,
-            max_fanout=edges["max_fanout"],
-            n_transactions=edges["n_transactions"],
-            confidence_scale=edges["confidence_scale"],
-            lift_scale=edges["lift_scale"],
-            interpret=interp,
+        out = _profiled(
+            "rule_search",
+            lambda: rule_search_span_pallas(
+                edges["child_offsets"], edges["edge_item"],
+                edges["edge_pos"], edges["edge_span"], edges["edge_tail"],
+                edges["node_item"], edges["support"], edges["confidence"],
+                edges["lift"], queries, ant_len,
+                max_fanout=edges["max_fanout"],
+                n_transactions=edges["n_transactions"],
+                confidence_scale=edges["confidence_scale"],
+                lift_scale=edges["lift_scale"],
+                interpret=interp,
+            ),
+            rows=queries.shape[0], shape=queries.shape, live=live,
         )
         # The span kernel reports DFS positions; the op-level contract is
         # original node ids (same dict shape as the plain paths).
@@ -575,30 +625,42 @@ def rule_search(
         }
 
     if edges.get("child_offsets") is not None:
-        out = rule_search_fused_pallas(
-            edges["child_offsets"], edges["edge_item"],
-            edges["edge_child"], edges["edge_conf"], edges["edge_sup"],
-            edges["edge_lift"], queries, ant_len,
-            max_fanout=edges["max_fanout"], interpret=interp,
+        out = _profiled(
+            "rule_search",
+            lambda: rule_search_fused_pallas(
+                edges["child_offsets"], edges["edge_item"],
+                edges["edge_child"], edges["edge_conf"], edges["edge_sup"],
+                edges["edge_lift"], queries, ant_len,
+                max_fanout=edges["max_fanout"], interpret=interp,
+            ),
+            rows=queries.shape[0], shape=queries.shape, live=live,
         )
         # con_support is kernel plumbing for the sharded merge, not part
         # of the op-level contract (keeps single/sharded dicts identical)
         return {k: v for k, v in out.items() if k != "con_support"}
 
-    full = rule_search_pallas(
-        edges["edge_parent"], edges["edge_item"], edges["edge_child"],
-        edges["edge_conf"], edges["edge_sup"], edges["edge_lift"],
-        queries, ant_len, interpret=interp,
+    full = _profiled(
+        "rule_search",
+        lambda: rule_search_pallas(
+            edges["edge_parent"], edges["edge_item"], edges["edge_child"],
+            edges["edge_conf"], edges["edge_sup"], edges["edge_lift"],
+            queries, ant_len, interpret=interp,
+        ),
+        rows=queries.shape[0], shape=queries.shape, live=live,
     )
     # Consequent-only walk for compound lift (Eq. 1-4): keep consequent
     # columns, blank the antecedent, walk from the root.
     width = queries.shape[1]
     cols = jnp.arange(width, dtype=jnp.int32)[None, :]
     cons_q = jnp.where(cols >= ant_len[:, None], queries, -1)
-    cons = rule_search_pallas(
-        edges["edge_parent"], edges["edge_item"], edges["edge_child"],
-        edges["edge_conf"], edges["edge_sup"], edges["edge_lift"],
-        cons_q, jnp.zeros_like(ant_len), interpret=interp,
+    cons = _profiled(
+        "rule_search",
+        lambda: rule_search_pallas(
+            edges["edge_parent"], edges["edge_item"], edges["edge_child"],
+            edges["edge_conf"], edges["edge_sup"], edges["edge_lift"],
+            cons_q, jnp.zeros_like(ant_len), interpret=interp,
+        ),
+        rows=queries.shape[0], shape=queries.shape, live=live,
     )
     seq_len = jnp.sum(queries >= 0, axis=1).astype(jnp.int32)
     single = (seq_len - ant_len) == 1
@@ -728,11 +790,15 @@ def top_k_rules(
         functools.partial(topk_rank_pallas, interpret=_interpret())
         if use_kernel else topk_rank_ref
     )
-    vals, pos = rank_fn(
-        arrays["support"], arrays["confidence"], arrays["lift"],
-        arrays["depth"], lo, hi,
-        k=int(k), metric=metric, min_depth=int(min_depth),
-        **_dequant_statics(arrays),
+    vals, pos = _profiled(
+        "top_k",
+        lambda: rank_fn(
+            arrays["support"], arrays["confidence"], arrays["lift"],
+            arrays["depth"], lo, hi,
+            k=int(k), metric=metric, min_depth=int(min_depth),
+            **_dequant_statics(arrays),
+        ),
+        rows=1, shape=(int(n), int(k)),
     )
     node_ids = jnp.where(
         pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
@@ -938,9 +1004,14 @@ def rules_with(
         )
         from repro.distributed.trie_sharding import sharded_rules_with
 
-        return sharded_rules_with(
-            plan, items, role=role, k=k, metric=metric,
-            min_depth=min_depth,
+        return _profiled(
+            "rules_with",
+            lambda: sharded_rules_with(
+                plan, items, role=role, k=k, metric=metric,
+                min_depth=min_depth,
+            ),
+            rows=len(items), shape=(len(items), int(k)),
+            n_shards=plan.n_shards,
         )
     if arrays is None:
         arrays = item_rank_arrays(trie)
@@ -968,16 +1039,25 @@ def rules_with(
     )
     plos_j = jnp.asarray(plos)
     phis_j = jnp.asarray(phis)
+    live = (
+        int(np.count_nonzero(np.asarray(qitems) >= 0))
+        if _kernel_profiler.enabled else None
+    )
     if role == "consequent" and "p_support" in arrays:
         rank_fn = (
             functools.partial(topk_rank_batch_pallas, interpret=_interpret())
             if use_kernel else topk_rank_batch_ref
         )
-        vals, pos = rank_fn(
-            arrays["p_support"], arrays["p_confidence"],
-            arrays["p_lift"], arrays["p_depth"],
-            plos_j, phis_j,
-            k=int(k), metric=metric, min_depth=int(min_depth),
+        vals, pos = _profiled(
+            "rules_with",
+            lambda: rank_fn(
+                arrays["p_support"], arrays["p_confidence"],
+                arrays["p_lift"], arrays["p_depth"],
+                plos_j, phis_j,
+                k=int(k), metric=metric, min_depth=int(min_depth),
+            ),
+            rows=plos.shape[0], shape=(int(plos.shape[0]), int(k)),
+            live=live,
         )
         back = arrays["item_nodes"]
     else:
@@ -990,15 +1070,21 @@ def rules_with(
             functools.partial(rules_with_pallas, interpret=_interpret())
             if use_kernel else rules_with_ref
         )
-        vals, pos = member_fn(
-            arrays["support"], arrays["confidence"], arrays["lift"],
-            arrays["depth"], arrays["node_item"],
-            arrays["post_lo"], arrays["post_hi"],
-            plos_j, phis_j, jnp.asarray(qitems),
-            k=int(k), metric=metric, min_depth=int(min_depth), role=role,
-            **({"max_postings": arrays["max_postings"]}
-               if use_kernel else {}),
-            **_dequant_statics(arrays),
+        vals, pos = _profiled(
+            "rules_with",
+            lambda: member_fn(
+                arrays["support"], arrays["confidence"], arrays["lift"],
+                arrays["depth"], arrays["node_item"],
+                arrays["post_lo"], arrays["post_hi"],
+                plos_j, phis_j, jnp.asarray(qitems),
+                k=int(k), metric=metric, min_depth=int(min_depth),
+                role=role,
+                **({"max_postings": arrays["max_postings"]}
+                   if use_kernel else {}),
+                **_dequant_statics(arrays),
+            ),
+            rows=plos.shape[0], shape=(int(plos.shape[0]), int(k)),
+            live=live,
         )
         back = arrays["dfs_to_node"]
     inv_j = jnp.asarray(inv, jnp.int32)
@@ -1151,8 +1237,13 @@ def top_k_rules_batch(
             sharded_top_k_rules_batch,
         )
 
-        return sharded_top_k_rules_batch(
-            plan, prefixes, k, metric=metric, min_depth=min_depth,
+        return _profiled(
+            "top_k",
+            lambda: sharded_top_k_rules_batch(
+                plan, prefixes, k, metric=metric, min_depth=min_depth,
+            ),
+            rows=len(prefixes), shape=(len(prefixes), int(k)),
+            n_shards=plan.n_shards,
         )
     if arrays is None:
         arrays = dfs_rank_arrays(trie)
@@ -1169,11 +1260,15 @@ def top_k_rules_batch(
         functools.partial(topk_rank_batch_pallas, interpret=_interpret())
         if use_kernel else topk_rank_batch_ref
     )
-    vals, pos = rank_fn(
-        arrays["support"], arrays["confidence"], arrays["lift"],
-        arrays["depth"], los, his,
-        k=int(k), metric=metric, min_depth=int(min_depth),
-        **_dequant_statics(arrays),
+    vals, pos = _profiled(
+        "top_k",
+        lambda: rank_fn(
+            arrays["support"], arrays["confidence"], arrays["lift"],
+            arrays["depth"], los, his,
+            k=int(k), metric=metric, min_depth=int(min_depth),
+            **_dequant_statics(arrays),
+        ),
+        rows=len(prefixes), shape=(len(prefixes), int(k)),
     )
     node_ids = jnp.where(
         pos >= 0, arrays["dfs_to_node"][jnp.maximum(pos, 0)], -1
@@ -1244,7 +1339,13 @@ def rule_search_batch(
             sharded_rule_search_batch,
         )
 
-        return sharded_rule_search_batch(plan, queries, ant_len)
+        n_q = (queries.shape[0] if isinstance(queries, np.ndarray)
+               else len(queries))
+        return _profiled(
+            "rule_search",
+            lambda: sharded_rule_search_batch(plan, queries, ant_len),
+            rows=n_q, shape=(n_q,), n_shards=plan.n_shards,
+        )
     if ant_len is None:
         canonicalize = getattr(trie, "canonicalize_queries", None)
         if canonicalize is None:
@@ -1275,13 +1376,18 @@ def rule_search_batch(
 # ----------------------------------------------------------------------
 def trie_reduce(trie) -> Dict[str, jax.Array]:
     dq = _dequant_statics(trie)
-    n, sup_sum, conf_max, conf_sum = trie_reduce_pallas(
-        jnp.asarray(trie.support),
-        jnp.asarray(trie.confidence),
-        jnp.asarray(trie.node_depth),
-        interpret=_interpret(),
-        n_transactions=dq["n_transactions"],
-        confidence_scale=dq["confidence_scale"],
+    n_nodes = int(trie.support.shape[0])
+    n, sup_sum, conf_max, conf_sum = _profiled(
+        "trie_reduce",
+        lambda: trie_reduce_pallas(
+            jnp.asarray(trie.support),
+            jnp.asarray(trie.confidence),
+            jnp.asarray(trie.node_depth),
+            interpret=_interpret(),
+            n_transactions=dq["n_transactions"],
+            confidence_scale=dq["confidence_scale"],
+        ),
+        rows=n_nodes, shape=(n_nodes,),
     )
     return {
         "n_rules": n,

@@ -12,6 +12,7 @@ from .resilience import (
     retry_call,
 )
 from .scheduler import (
+    STAT_KEYS,
     LaunchPredictor,
     QueueFull,
     Request,
@@ -30,6 +31,7 @@ __all__ = [
     "Request",
     "Response",
     "LaunchPredictor",
+    "STAT_KEYS",
     "ResilientTrieEngine",
     "RetryPolicy",
     "ShardHealth",

@@ -166,6 +166,16 @@ class FaultyEngine:
 
     # passthroughs the resilience ladder reads
     @property
+    def obs(self):
+        """Observability passthrough: the wrapped engine owns the spans
+        (a fault wrapper adds no stage of its own)."""
+        return getattr(self.engine, "obs", None)
+
+    @obs.setter
+    def obs(self, value) -> None:
+        self.engine.obs = value
+
+    @property
     def frozen(self):
         return self.engine.frozen
 

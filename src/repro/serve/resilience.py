@@ -142,6 +142,7 @@ class ShardHealth:
         detector_factory: Callable[[], StragglerDetector] = (
             StragglerDetector
         ),
+        metrics=None,
     ):
         self.n_shards = int(n_shards)
         self.fail_threshold = int(fail_threshold)
@@ -152,6 +153,17 @@ class ShardHealth:
         self.slow: set = set()
         self.events: List[dict] = []
         self._step = 0
+        # optional obs.MetricsRegistry: every health event doubles as a
+        # counter (the ordered ``events`` list stays the source of truth
+        # for sequence assertions)
+        self.metrics = metrics
+
+    def _event(self, kind: str, shard: int) -> None:
+        self.events.append({"kind": kind, "shard": shard})
+        if self.metrics is not None:
+            self.metrics.counter(
+                "serve.shard_events", kind=kind, shard=shard
+            ).inc()
 
     def record_failure(self, shard: int) -> bool:
         """Returns True when this failure kills the shard."""
@@ -161,10 +173,10 @@ class ShardHealth:
                 f"shard {s} out of range for {self.n_shards} shards"
             )
         self._failures[s] += 1
-        self.events.append({"kind": "failure", "shard": s})
+        self._event("failure", s)
         if self._failures[s] >= self.fail_threshold and s not in self.dead:
             self.dead.add(s)
-            self.events.append({"kind": "dead", "shard": s})
+            self._event("dead", s)
             return True
         return False
 
@@ -174,10 +186,10 @@ class ShardHealth:
         self._step += 1
         if self._detectors[s].observe(self._step, float(seconds)):
             self.slow.add(s)
-            self.events.append({"kind": "slow", "shard": s})
+            self._event("slow", s)
             if self.demote_slow and s not in self.dead:
                 self.dead.add(s)
-                self.events.append({"kind": "dead", "shard": s})
+                self._event("dead", s)
             return True
         return False
 
@@ -219,6 +231,7 @@ class ResilientTrieEngine:
         primary,
         health: Optional[ShardHealth] = None,
         allow_replicated_fallback: bool = True,
+        obs=None,
     ):
         self.primary = primary
         self.health = health or ShardHealth(primary.n_shards)
@@ -227,6 +240,27 @@ class ResilientTrieEngine:
         self._degraded = None
         self._degraded_for: Tuple = ()
         self.failovers = 0
+        self._obs = None
+        if obs is not None:
+            self.obs = obs
+
+    # -- observability ------------------------------------------------
+    @property
+    def obs(self):
+        """The ``Observability`` bundle this engine reports into.  The
+        scheduler assigns its own on construction (unless one was given
+        explicitly); the setter fans it out to the health tracker and
+        every backend engine so failover transitions, shard events, and
+        engine-level spans all land in one registry/tracer."""
+        return self._obs
+
+    @obs.setter
+    def obs(self, value) -> None:
+        self._obs = value
+        self.health.metrics = value.metrics if value is not None else None
+        for eng in (self.primary, self._replicated, self._degraded):
+            if eng is not None and hasattr(eng, "obs"):
+                eng.obs = value
 
     # -- backend selection --------------------------------------------
     def _replicated_engine(self):
@@ -241,6 +275,7 @@ class ResilientTrieEngine:
                 trie if trie is not None else self.primary.frozen,
                 mode="replicated",
             )
+            self._replicated.obs = self._obs
         return self._replicated
 
     def _degraded_engine(self):
@@ -258,6 +293,7 @@ class ResilientTrieEngine:
                 stream if stream is not None else self.primary.frozen,
                 plan=mask_dead_shards(self.primary.plan, dead),
             )
+            self._degraded.obs = self._obs
             self._degraded_for = key
         return self._degraded
 
@@ -320,10 +356,24 @@ class ResilientTrieEngine:
                 "failover": False,
             }
         except ShardFailure as exc:
+            obs = self._obs
+            prev_backend = backend
+            fspan = (obs.tracer.start("failover", shard=int(exc.shard))
+                     if obs is not None else None)
             self.health.record_failure(exc.shard)
             self.failovers += 1
             engine, degraded, backend = self._active()
+            if obs is not None:
+                # the demotion-ladder transition counter the shard-kill
+                # regression test asserts: sharded → replicated|degraded
+                obs.metrics.counter("serve.failover", labels={
+                    "from": prev_backend, "to": backend,
+                }).inc()
+                obs.tracer.annotate(
+                    fspan, **{"from": prev_backend, "to": backend})
             result = getattr(engine, op)(*args, **kwargs)
+            if obs is not None:
+                obs.tracer.end(fspan)
             return result, {
                 "degraded": degraded, "backend": backend,
                 "failover": True,

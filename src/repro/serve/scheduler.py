@@ -67,6 +67,7 @@ from repro.kernels.ops import (
     validate_rule_pairs,
 )
 from repro.kernels.tuning import launch_pad
+from repro.obs import Observability
 from repro.serve.resilience import (
     MonotonicClock,
     ResilientTrieEngine,
@@ -75,6 +76,14 @@ from repro.serve.resilience import (
 )
 
 OPS = ("rule_search", "top_k", "rules_with", "insert")
+
+# the stable stats-snapshot schema: every key pre-seeded at construction
+# (``inserted``/``refreezes`` used to appear lazily on first insert)
+STAT_KEYS = (
+    "submitted", "ok", "timeout", "shed", "failed", "invalid",
+    "cache_hits", "dedup_collapsed", "retries", "launches",
+    "inserted", "refreezes",
+)
 
 # Response.status values
 OK = "ok"
@@ -107,6 +116,9 @@ class Request:
     key: Tuple = ()              # canonical whole-query key (dedup+cache)
     bucket: Tuple = ()           # batchable group: (op, kwargs signature)
     canon: object = None         # canonical payload for batch assembly
+    span: object = None          # root trace span (None when tracing off)
+    qspan: object = None         # "queue" child span, open while queued
+    sspan: object = None         # "serve" child span, open while batched
 
     def expires_s(self) -> float:
         if math.isinf(self.deadline_ms):
@@ -205,6 +217,7 @@ class TrieScheduler:
         seed: int = 0,
         strict_admission: bool = True,
         predictor: Optional[LaunchPredictor] = None,
+        obs: Optional[Observability] = None,
     ):
         if not isinstance(engine, ResilientTrieEngine):
             engine = ResilientTrieEngine(engine)
@@ -238,11 +251,37 @@ class TrieScheduler:
         self.cache_size = int(cache_size)
         self.responses: Dict[int, Response] = {}
         self._next_id = 0
-        self.stats = {
-            "submitted": 0, "ok": 0, "timeout": 0, "shed": 0,
-            "failed": 0, "invalid": 0, "cache_hits": 0,
-            "dedup_collapsed": 0, "retries": 0, "launches": 0,
-        }
+        # observability: the metrics registry replaces the old ad-hoc
+        # ``stats`` dict (read it back through the ``stats`` property);
+        # instruments for the legacy keys are held directly so hot-path
+        # cost stays one attribute lookup + an int add.  Tracing is off
+        # unless the caller's Observability enables it.
+        self.obs = obs if obs is not None else Observability()
+        self.obs.bind_clock(self.clock)
+        m = self.obs.metrics
+        self._c = {k: m.counter("serve." + k) for k in STAT_KEYS}
+        self._g_pending = m.gauge("serve.pending")
+        self._g_cache = m.gauge("serve.cache_len")
+        if getattr(self.engine, "obs", None) is None:
+            self.engine.obs = self.obs
+        # measured kernel wall time (when the profiler is scoped on)
+        # becomes a queryable predictor bucket — see _observe_kernel
+        if self.obs.profiler is not None:
+            self.obs.profiler.add_observer(self._observe_kernel)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Read-compatible snapshot of the legacy counters (now backed by
+        ``obs.metrics``).  Schema is stable: every key is pre-seeded at
+        construction, including ``inserted``/``refreezes``."""
+        return {k: c.value for k, c in self._c.items()}
+
+    def _observe_kernel(self, rec) -> None:
+        """Kernel-ring observer: measured launch wall time lands in a
+        ``("kernel", op)`` predictor bucket — disjoint from the
+        service-time buckets the deadline shaper reads, so profiling
+        never skews admission decisions."""
+        self.predictor.observe(("kernel", rec.op), rec.rows, rec.seconds)
 
     @property
     def frozen(self):
@@ -327,17 +366,30 @@ class TrieScheduler:
         """Admit one request; raises ``QueueFull`` when the bounded queue
         rejects it and ``InvalidQueryError`` on malformed payloads."""
         kwargs = dict(kwargs or {})
+        tr = self.obs.tracer
+        m = self.obs.metrics
+        root = tr.start("request", parent=False, op=op, tenant=tenant,
+                        req=self._next_id)
+        admit = tr.start("admit", parent=root, op=op)
         try:
             key, bucket, canon = self._canonicalize(op, payload, kwargs)
         except InvalidQueryError:
-            self.stats["invalid"] += 1
+            self._c["invalid"].inc()
+            tr.end(admit, error="invalid")
+            tr.end(root, status=INVALID)
             raise
         if len(self._pending) >= self.max_pending:
             victim = self._pick_victim()
             if victim is None:
-                self.stats["shed"] += 1
+                self._c["shed"].inc()
+                m.counter("serve.shed_admission", tenant=tenant,
+                          reason="reject_new").inc()
+                tr.end(admit, error="shed")
+                tr.end(root, status=SHED)
                 raise QueueFull()
             self._pending.remove(victim)
+            m.counter("serve.shed_admission", tenant=victim.tenant,
+                      reason="drop_oldest").inc()
             self._finish(victim, Response(
                 id=victim.id, op=victim.op, tenant=victim.tenant,
                 status=SHED, error="shed by drop_oldest policy",
@@ -346,10 +398,13 @@ class TrieScheduler:
             id=self._next_id, op=op, payload=payload, kwargs=kwargs,
             tenant=tenant, deadline_ms=float(deadline_ms),
             submit_s=self.clock.now(), key=key, bucket=bucket,
-            canon=canon,
+            canon=canon, span=root,
         )
         self._next_id += 1
-        self.stats["submitted"] += 1
+        self._c["submitted"].inc()
+        m.counter("serve.admitted", tenant=tenant, op=op).inc()
+        tr.end(admit)
+        req.qspan = tr.start("queue", parent=root)
         self._pending.append(req)
         return req
 
@@ -371,72 +426,91 @@ class TrieScheduler:
         """Expire deadlines, serve cache hits, launch ONE shaped batch.
         Returns the responses completed by this step (possibly empty)."""
         done: List[Response] = []
-        self._expire(done)
-        self._drain_inserts(done)
-        if not self._pending:
+        tr = self.obs.tracer
+        sroot = tr.start("step", parent=False)
+        try:
+            self._expire(done)
+            self._drain_inserts(done, parent=sroot)
+            if not self._pending:
+                return done
+
+            # shape one batch: the head request's bucket, arrival order
+            with tr.span("batch_form", parent=sroot) as bspan:
+                bucket = self._pending[0].bucket
+                batch: List[Request] = []
+                keep: deque = deque()
+                while self._pending:
+                    r = self._pending.popleft()
+                    if r.bucket == bucket and len(batch) < self.max_batch:
+                        batch.append(r)
+                    else:
+                        keep.append(r)
+                self._pending = keep
+                tr.annotate(bspan, op=bucket[0], batch=len(batch))
+                if tr.enabled:
+                    for r in batch:
+                        tr.end(r.qspan)
+                        r.sspan = tr.start("serve", parent=r.span,
+                                           op=r.op)
+
+            with tr.span("dedup_cache", parent=sroot, op=bucket[0]):
+                # cache hits never touch the kernels
+                misses: List[Request] = []
+                for r in batch:
+                    hit = self._cache_get(r.key)
+                    if hit is not None:
+                        self._c["cache_hits"].inc()
+                        done.append(self._finish(r, self._respond_ok(
+                            r, hit, backend="cache", cache_hit=True,
+                        )))
+                    else:
+                        misses.append(r)
+                if not misses:
+                    return done
+
+                # whole-query dedup inside the batch
+                unique: "OrderedDict[Tuple, List[Request]]" = OrderedDict()
+                for r in misses:
+                    unique.setdefault(r.key, []).append(r)
+                self._c["dedup_collapsed"].inc(len(misses) - len(unique))
+
+                # the deadline shaper: predicted service for THIS bucket
+                # shape — a request that cannot survive the launch times
+                # out now rather than riding (and slowing) a batch it
+                # will miss anyway
+                predicted_ms = self.predictor.predict_ms(
+                    bucket, len(unique))
+                now = self.clock.now()
+                live: "OrderedDict[Tuple, List[Request]]" = OrderedDict()
+                for key, reqs in unique.items():
+                    still = []
+                    for r in reqs:
+                        if now + predicted_ms / 1e3 > r.expires_s():
+                            done.append(self._finish(r, Response(
+                                id=r.id, op=r.op, tenant=r.tenant,
+                                status=TIMEOUT,
+                                error=(
+                                    f"predicted launch {predicted_ms:.1f}"
+                                    f"ms busts deadline "
+                                    f"{r.deadline_ms:.1f}ms"
+                                ),
+                                latency_ms=(now - r.submit_s) * 1e3,
+                            )))
+                        else:
+                            still.append(r)
+                    if still:
+                        live[key] = still
+                if not live:
+                    return done
+
+            done.extend(self._launch(bucket, live, parent=sroot))
             return done
+        finally:
+            self._g_pending.set(len(self._pending))
+            self._g_cache.set(len(self._cache))
+            tr.end(sroot, completed=len(done))
 
-        # shape one batch: the head request's bucket, arrival order
-        bucket = self._pending[0].bucket
-        batch: List[Request] = []
-        keep: deque = deque()
-        while self._pending:
-            r = self._pending.popleft()
-            if r.bucket == bucket and len(batch) < self.max_batch:
-                batch.append(r)
-            else:
-                keep.append(r)
-        self._pending = keep
-
-        # cache hits never touch the kernels
-        misses: List[Request] = []
-        for r in batch:
-            hit = self._cache_get(r.key)
-            if hit is not None:
-                self.stats["cache_hits"] += 1
-                done.append(self._finish(r, self._respond_ok(
-                    r, hit, backend="cache", cache_hit=True,
-                )))
-            else:
-                misses.append(r)
-        if not misses:
-            return done
-
-        # whole-query dedup inside the batch
-        unique: "OrderedDict[Tuple, List[Request]]" = OrderedDict()
-        for r in misses:
-            unique.setdefault(r.key, []).append(r)
-        self.stats["dedup_collapsed"] += len(misses) - len(unique)
-
-        # the deadline shaper: predicted service for THIS bucket shape —
-        # a request that cannot survive the launch times out now rather
-        # than riding (and slowing) a batch it will miss anyway
-        predicted_ms = self.predictor.predict_ms(bucket, len(unique))
-        now = self.clock.now()
-        live: "OrderedDict[Tuple, List[Request]]" = OrderedDict()
-        for key, reqs in unique.items():
-            still = []
-            for r in reqs:
-                if now + predicted_ms / 1e3 > r.expires_s():
-                    done.append(self._finish(r, Response(
-                        id=r.id, op=r.op, tenant=r.tenant, status=TIMEOUT,
-                        error=(
-                            f"predicted launch {predicted_ms:.1f}ms "
-                            f"busts deadline {r.deadline_ms:.1f}ms"
-                        ),
-                        latency_ms=(now - r.submit_s) * 1e3,
-                    )))
-                else:
-                    still.append(r)
-            if still:
-                live[key] = still
-        if not live:
-            return done
-
-        done.extend(self._launch(bucket, live))
-        return done
-
-    def _drain_inserts(self, done: List[Response]) -> None:
+    def _drain_inserts(self, done: List[Response], parent=None) -> None:
         """Apply every pending insert, in arrival order, before any
         query batch is shaped.  Writes never ride a query batch: each
         one lands host-side immediately (bumping the engine epoch, which
@@ -446,32 +520,42 @@ class TrieScheduler:
         """
         if not any(r.op == "insert" for r in self._pending):
             return
-        keep: deque = deque()
-        inserts: List[Request] = []
-        while self._pending:
-            r = self._pending.popleft()
-            (inserts if r.op == "insert" else keep).append(r)
-        self._pending = keep
-        for r in inserts:
-            seq, sup, conf, lift = r.canon
-            try:
-                self.engine.insert([seq], [sup], [conf], [lift])
-            except (TypeError, ValueError) as exc:
-                # non-streaming engine (TypeError) or a rejected rule
-                # (out-of-vocab / prefix-closure): isolated per request
-                done.append(self._finish(r, Response(
-                    id=r.id, op=r.op, tenant=r.tenant, status=INVALID,
-                    error=repr(exc),
-                    latency_ms=(self.clock.now() - r.submit_s) * 1e3,
+        tr = self.obs.tracer
+        with tr.span("insert_drain", parent=parent) as dspan:
+            keep: deque = deque()
+            inserts: List[Request] = []
+            while self._pending:
+                r = self._pending.popleft()
+                (inserts if r.op == "insert" else keep).append(r)
+            self._pending = keep
+            tr.annotate(dspan, n=len(inserts))
+            if tr.enabled:
+                for r in inserts:
+                    tr.end(r.qspan)
+                    r.sspan = tr.start("serve", parent=r.span, op="insert")
+            for r in inserts:
+                seq, sup, conf, lift = r.canon
+                try:
+                    self.engine.insert([seq], [sup], [conf], [lift])
+                except (TypeError, ValueError) as exc:
+                    # non-streaming engine (TypeError) or a rejected rule
+                    # (out-of-vocab / prefix-closure): isolated per request
+                    done.append(self._finish(r, Response(
+                        id=r.id, op=r.op, tenant=r.tenant, status=INVALID,
+                        error=repr(exc),
+                        latency_ms=(self.clock.now() - r.submit_s) * 1e3,
+                    )))
+                    continue
+                self._c["inserted"].inc()
+                done.append(self._finish(r, self._respond_ok(
+                    r, {"epoch": self.engine.epoch}, backend="insert",
                 )))
-                continue
-            self.stats["inserted"] = self.stats.get("inserted", 0) + 1
-            done.append(self._finish(r, self._respond_ok(
-                r, {"epoch": self.engine.epoch}, backend="insert",
-            )))
-        folded = self.engine.maybe_refreeze()
-        if folded is not None:
-            self.stats["refreezes"] = self.stats.get("refreezes", 0) + 1
+            with tr.span("refreeze", parent=dspan) as fspan:
+                folded = self.engine.maybe_refreeze()
+                tr.annotate(
+                    fspan, folded=0 if folded is None else int(folded))
+            if folded is not None:
+                self._c["refreezes"].inc()
 
     def drain(self, max_steps: int = 100000) -> List[Response]:
         """Step until the queue is empty; returns responses in completion
@@ -486,29 +570,45 @@ class TrieScheduler:
     # ------------------------------------------------------------------
     # launch machinery
     # ------------------------------------------------------------------
-    def _launch(self, bucket, live) -> List[Response]:
+    def _launch(self, bucket, live, parent=None) -> List[Response]:
         """One kernel launch over the unique rows (with retry/backoff and
         shard-failure failover), then scatter rows to every duplicate."""
         op = bucket[0]
         keys = list(live.keys())
         retries = {"n": 0}
+        tr = self.obs.tracer
 
         def on_retry(attempt, exc):
             retries["n"] += 1
-            self.stats["retries"] += 1
+            self._c["retries"].inc()
 
         c0 = self.clock.now()
         t0 = self._timer() if self._timer is not None else None
         try:
-            (result, info), _ = retry_call(
-                lambda: self._execute(op, [live[k][0] for k in keys]),
-                self.retry_policy, self.clock, self._rng,
-                on_retry=on_retry,
-            )
+            # scoped span: engine/resilience spans nest under it via the
+            # tracer's current-span stack
+            with tr.span("launch", parent=parent, op=op,
+                         n_unique=len(keys)) as lspan:
+                (result, info), _ = retry_call(
+                    lambda: self._execute(op, [live[k][0] for k in keys]),
+                    self.retry_policy, self.clock, self._rng,
+                    on_retry=on_retry,
+                )
+                dt_real = (
+                    self._timer() - t0 if self._timer is not None else 0.0
+                )
+                if dt_real:
+                    # charge measured kernel service time to the virtual
+                    # timeline (inside the span: launch duration = service)
+                    self.clock.sleep(dt_real)
+                tr.annotate(
+                    lspan, backend=info["backend"],
+                    degraded=info["degraded"], retries=retries["n"],
+                )
         except InvalidQueryError:
             # poison in the batch: isolate per unique row so one bad
             # query cannot fail its batchmates
-            return self._launch_isolated(op, live, retries)
+            return self._launch_isolated(op, live, retries, parent=parent)
         except Exception as exc:  # noqa: BLE001 - reported per request
             return [
                 self._finish(r, Response(
@@ -518,40 +618,39 @@ class TrieScheduler:
                 ))
                 for reqs in live.values() for r in reqs
             ]
-        dt_real = (
-            self._timer() - t0 if self._timer is not None else 0.0
-        )
-        if dt_real:
-            # charge measured kernel service time to the virtual timeline
-            self.clock.sleep(dt_real)
         # virtual-clock runs: injected latency shows in the clock delta
         # (the timer charge was just added); real-clock runs: the clock
         # delta IS the measured elapsed time
         service_s = max(self.clock.now() - c0, dt_real)
-        self.stats["launches"] += 1
+        self._c["launches"].inc()
         self.predictor.observe(bucket, len(keys), service_s)
 
-        rows = self._slice_rows(op, result, len(keys))
-        out: List[Response] = []
-        for i, key in enumerate(keys):
-            row = rows[i]
-            if not info["degraded"]:
-                self._cache_put(key, row)
-            for r in live[key]:
-                out.append(self._finish(r, self._respond_ok(
-                    r, row, backend=info["backend"],
-                    degraded=info["degraded"], retries=retries["n"],
-                )))
+        with tr.span("merge", parent=parent, op=op):
+            rows = self._slice_rows(op, result, len(keys))
+            out: List[Response] = []
+            for i, key in enumerate(keys):
+                row = rows[i]
+                if not info["degraded"]:
+                    self._cache_put(key, row)
+                for r in live[key]:
+                    out.append(self._finish(r, self._respond_ok(
+                        r, row, backend=info["backend"],
+                        degraded=info["degraded"], retries=retries["n"],
+                    )))
         return out
 
-    def _launch_isolated(self, op, live, retries) -> List[Response]:
+    def _launch_isolated(self, op, live, retries, parent=None
+                         ) -> List[Response]:
         out: List[Response] = []
+        tr = self.obs.tracer
         for key, reqs in live.items():
             try:
-                (result, info), _ = retry_call(
-                    lambda: self._execute(op, [reqs[0]]),
-                    self.retry_policy, self.clock, self._rng,
-                )
+                with tr.span("launch", parent=parent, op=op, n_unique=1,
+                             isolated=True):
+                    (result, info), _ = retry_call(
+                        lambda: self._execute(op, [reqs[0]]),
+                        self.retry_policy, self.clock, self._rng,
+                    )
             except Exception as exc:  # noqa: BLE001
                 status = (
                     INVALID if isinstance(exc, InvalidQueryError)
@@ -566,7 +665,7 @@ class TrieScheduler:
                         ) * 1e3,
                     )))
                 continue
-            self.stats["launches"] += 1
+            self._c["launches"].inc()
             row = self._slice_rows(op, result, 1)[0]
             if not info["degraded"]:
                 self._cache_put(key, row)
@@ -651,7 +750,21 @@ class TrieScheduler:
         )
 
     def _finish(self, r: Request, resp: Response) -> Response:
-        self.stats[resp.status] = self.stats.get(resp.status, 0) + 1
+        self._c[resp.status].inc()
+        m = self.obs.metrics
+        m.counter("serve.requests", tenant=r.tenant,
+                  status=resp.status).inc()
+        m.histogram("serve.latency_ms", op=r.op,
+                    tenant=r.tenant).observe(resp.latency_ms)
+        tr = self.obs.tracer
+        if tr.enabled and r.span is not None:
+            tr.end(r.qspan)
+            tr.end(r.sspan)
+            rsp = tr.start("respond", parent=r.span, status=resp.status)
+            tr.end(rsp)
+            tr.end(r.span, status=resp.status,
+                   latency_ms=round(resp.latency_ms, 3),
+                   backend=resp.backend, cache_hit=resp.cache_hit)
         self.responses[r.id] = resp
         return resp
 

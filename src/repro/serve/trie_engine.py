@@ -37,6 +37,7 @@ and half over the new one.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -63,6 +64,9 @@ class TrieQueryEngine:
             raise ValueError(
                 f"mode {mode!r} not in ('auto', 'replicated', 'sharded')"
             )
+        # set by the resilience layer / scheduler; when present, each op
+        # runs under an ``engine.<op>`` span on the shared tracer
+        self.obs = None
         self.stream = None
         if isinstance(frozen, StreamingTrie):
             self.stream = frozen
@@ -155,6 +159,16 @@ class TrieQueryEngine:
             self._dt = self.frozen.device_arrays()
         return self._dt
 
+    def _span(self, name: str, **attrs):
+        """Engine-level trace span (no-op context when obs is unset).
+        Parents under the tracer's current scoped span — the scheduler's
+        ``launch`` span when called from the serve loop."""
+        if self.obs is None:
+            return nullcontext()
+        return self.obs.tracer.span(
+            name, backend=self.backend, shards=self.n_shards, **attrs
+        )
+
     def _stream_base(self):
         """Residency override handed to ``kernels.streaming``: an
         injected (dead-shard-masked) plan wins; a replicated engine over
@@ -193,6 +207,10 @@ class TrieQueryEngine:
     # the three batched ops (thin routing over kernels.ops)
     # ------------------------------------------------------------------
     def rule_search_batch(self, queries, ant_len=None) -> Dict:
+        with self._span("engine.rule_search_batch", n=len(queries)):
+            return self._rule_search_batch(queries, ant_len)
+
+    def _rule_search_batch(self, queries, ant_len=None) -> Dict:
         if self.stream is not None:
             base = self._stream_base()
             if base is None:
@@ -214,6 +232,15 @@ class TrieQueryEngine:
         )
 
     def top_k_rules_batch(
+        self, prefixes, k: int, metric: str = "confidence",
+        min_depth: int = 1,
+    ) -> Dict:
+        with self._span("engine.top_k_rules_batch", n=len(prefixes), k=k):
+            return self._top_k_rules_batch(
+                prefixes, k, metric=metric, min_depth=min_depth
+            )
+
+    def _top_k_rules_batch(
         self, prefixes, k: int, metric: str = "confidence",
         min_depth: int = 1,
     ) -> Dict:
@@ -243,6 +270,15 @@ class TrieQueryEngine:
         )
 
     def rules_with(
+        self, items: Sequence[int], role: str = "any", k: int = 10,
+        metric: str = "confidence", min_depth: int = 1,
+    ) -> Dict:
+        with self._span("engine.rules_with", n=len(items), k=k):
+            return self._rules_with(
+                items, role=role, k=k, metric=metric, min_depth=min_depth
+            )
+
+    def _rules_with(
         self, items: Sequence[int], role: str = "any", k: int = 10,
         metric: str = "confidence", min_depth: int = 1,
     ) -> Dict:

@@ -1,0 +1,391 @@
+"""Observability layer: metrics correctness, span-tree shape, exporter
+round-trips, and the disabled-mode no-op contract.
+
+The replay-driven cases run the real serve loop on a ``VirtualClock``
+(deterministic discrete-event time), so every span-duration assertion
+here is exact — the tracer reads the scheduler's own clock.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.arm.datasets import paper_example_db
+from repro.core.array_trie import FrozenTrie
+from repro.core.builder import build_trie_of_rules
+from repro.obs import (
+    NULL_INSTRUMENT,
+    NULL_SPAN,
+    Histogram,
+    KernelProfiler,
+    MetricsRegistry,
+    Observability,
+    Tracer,
+    merge_snapshots,
+    metrics_text,
+    quantile_from_snapshot,
+    spans_to_trace_events,
+    write_trace,
+)
+from repro.serve import (
+    STAT_KEYS,
+    FaultInjector,
+    FaultyEngine,
+    ResilientTrieEngine,
+    TrieQueryEngine,
+    TrieScheduler,
+    VirtualClock,
+    zipfian_workload,
+)
+
+
+@pytest.fixture(scope="module")
+def fz():
+    return FrozenTrie.freeze(
+        build_trie_of_rules(paper_example_db(), 0.25).trie
+    )
+
+
+@pytest.fixture(scope="module")
+def replicated(fz):
+    return TrieQueryEngine(fz, mode="replicated")
+
+
+def traced_sched(engine, **kw):
+    engine.obs = None            # module-scoped engine: rebind per test
+    obs = Observability(tracing=True)
+    clock = VirtualClock()
+    sched = TrieScheduler(engine, clock=clock, obs=obs, **kw)
+    return sched, obs, clock
+
+
+# ----------------------------------------------------------------------
+# histograms vs exact oracles
+# ----------------------------------------------------------------------
+def test_histogram_quantiles_vs_numpy_oracle():
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=2.0, sigma=1.5, size=4000)
+    h = Histogram("lat")
+    for v in samples:
+        h.observe(v)
+    s = np.sort(samples)
+    g = h.growth
+    for q in (0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99):
+        est = h.quantile(q)
+        # the histogram's own definition of the q-quantile: smallest
+        # order statistic with cumulative count >= q*n.  Estimate and
+        # oracle share a bucket, so the ratio is bounded by one growth.
+        exact = s[max(math.ceil(q * len(s)) - 1, 0)]
+        assert exact / g <= est <= exact * g, (q, est, exact)
+        # numpy's interpolated percentile uses a slightly different rank
+        # convention; two buckets of slack absorbs it
+        ref = float(np.percentile(samples, q * 100))
+        assert ref / g**2 <= est <= ref * g**2, (q, est, ref)
+    assert h.quantile(0.0) == pytest.approx(s[0], rel=1e-12)
+    assert h.quantile(1.0) == pytest.approx(s[-1], rel=1e-12)
+    assert h.mean == pytest.approx(float(samples.mean()))
+
+
+def test_histogram_underflow_negative_nan():
+    h = Histogram("x", lo=1.0)
+    for v in (0.25, 0.75, -1.0, float("nan")):
+        h.observe(v)
+    assert h.count == 2                    # negative + NaN ignored
+    assert h.counts[0] == 2                # both land in [0, lo)
+    assert 0.25 <= h.quantile(0.5) <= 0.75
+
+
+def test_histogram_snapshot_merge_matches_union():
+    rng = np.random.default_rng(11)
+    a, b = rng.exponential(5.0, 500), rng.exponential(50.0, 500)
+    ha, hb, hu = Histogram("m"), Histogram("m"), Histogram("m")
+    for v in a:
+        ha.observe(v)
+    for v in b:
+        hb.observe(v)
+    for v in np.concatenate([a, b]):
+        hu.observe(v)
+    ha.merge_snapshot(hb.snapshot())
+    assert ha.count == hu.count
+    assert ha.total == pytest.approx(hu.total)
+    for q in (0.1, 0.5, 0.9, 0.99):
+        assert ha.quantile(q) == pytest.approx(hu.quantile(q))
+    with pytest.raises(ValueError):
+        ha.merge_snapshot(Histogram("m", lo=1.0).snapshot())
+
+
+def test_registry_labels_and_snapshot_merge():
+    m = MetricsRegistry()
+    m.counter("req", tenant="a").inc(3)
+    m.counter("req", tenant="b").inc()
+    # label order never splits an instrument
+    assert m.counter("x", a="1", b="2") is m.counter("x", b="2", a="1")
+    assert m.value("req", tenant="a") == 3
+    assert m.label_values("req", "tenant") == ["a", "b"]
+    m.histogram("lat", tenant="a").observe(10.0)
+    m2 = MetricsRegistry()
+    m2.counter("req", tenant="a").inc(4)
+    m2.histogram("lat", tenant="a").observe(1000.0)
+    merged = merge_snapshots([m.snapshot(), m2.snapshot()])
+    assert merged["counters"]['req{tenant="a"}'] == 7
+    hs = merged["histograms"]['lat{tenant="a"}']
+    assert hs["count"] == 2
+    assert quantile_from_snapshot(hs, 1.0) == pytest.approx(1000.0)
+    text = metrics_text(merged)
+    assert 'req{tenant="a"} 7' in text.splitlines()
+
+
+# ----------------------------------------------------------------------
+# disabled-mode no-op contract
+# ----------------------------------------------------------------------
+def test_disabled_registry_and_tracer_are_noops():
+    m = MetricsRegistry(enabled=False)
+    assert m.counter("a") is NULL_INSTRUMENT
+    assert m.gauge("b") is NULL_INSTRUMENT
+    assert m.histogram("c") is NULL_INSTRUMENT
+    m.counter("a").inc()
+    m.histogram("c").observe(5.0)
+    assert m.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    tr = Tracer(enabled=False)
+    sp = tr.start("root")
+    assert sp is NULL_SPAN
+    with tr.span("scoped", parent=sp) as inner:
+        assert inner is NULL_SPAN
+        inner.attrs["x"] = 1           # vanishes by design
+    tr.end(sp, status="ok")
+    assert tr.spans == [] and inner.attrs == {}
+
+
+def test_disabled_scheduler_records_nothing(fz, replicated):
+    replicated.obs = None
+    obs = Observability(metrics=MetricsRegistry(enabled=False),
+                        tracer=Tracer(enabled=False))
+    sched = TrieScheduler(replicated, clock=VirtualClock(), obs=obs)
+    for w in zipfian_workload(fz, 10, seed=5):
+        sched.submit(w["op"], w["payload"], w["kwargs"], tenant=w["tenant"])
+    out = sched.drain()
+    assert all(r.status == "ok" for r in out)
+    assert obs.tracer.spans == []
+    assert obs.metrics.snapshot()["counters"] == {}
+    # the stats property still answers (all-zero null counters)
+    assert set(sched.stats) == set(STAT_KEYS)
+
+
+def test_stats_preseeded_on_fresh_scheduler(fz, replicated):
+    replicated.obs = None
+    sched = TrieScheduler(replicated, clock=VirtualClock())
+    assert sched.stats == {k: 0 for k in STAT_KEYS}
+    assert {"inserted", "refreezes"} <= set(sched.stats)
+
+
+# ----------------------------------------------------------------------
+# span tree under a deterministic replay
+# ----------------------------------------------------------------------
+def test_span_tree_well_formed_under_replay(fz, replicated):
+    sched, obs, clock = traced_sched(replicated, max_batch=8)
+    wl = zipfian_workload(fz, 24, seed=9)
+    for w in wl:
+        sched.submit(w["op"], w["payload"], w["kwargs"], tenant=w["tenant"])
+    out = sched.drain()
+    assert all(r.status == "ok" for r in out)
+    spans = obs.tracer.spans
+    assert obs.tracer.finished() == spans          # nothing left open
+    by_id = {s.span_id: s for s in spans}
+    for s in spans:
+        assert s.parent_id == -1 or s.parent_id in by_id
+        assert s.duration_s >= 0
+        if s.parent_id in by_id:                   # nested in the parent
+            p = by_id[s.parent_id]
+            assert p.start_s - 1e-9 <= s.start_s
+            assert s.end_s <= p.end_s + 1e-9
+    roots = [s for s in spans if s.name == "request"]
+    assert len(roots) == len(wl)
+    stages = {"admit", "queue", "serve", "respond"}
+    for root in roots:
+        kids = [s for s in spans if s.parent_id == root.span_id]
+        assert {k.name for k in kids} <= stages
+        # stage spans are contiguous: child durations sum to the root,
+        # which matches the reported end-to-end latency (VirtualClock
+        # time on both sides, so only float add-order slack)
+        child_sum = sum(k.duration_s for k in kids)
+        assert child_sum == pytest.approx(root.duration_s, abs=1e-9)
+        lat = sched.responses[root.attrs["req"]].latency_ms
+        assert root.duration_s * 1e3 == pytest.approx(lat, abs=1e-6)
+
+
+def test_trace_capacity_drops_instead_of_growing(fz, replicated):
+    replicated.obs = None
+    obs = Observability(tracer=Tracer(enabled=True, capacity=5))
+    sched = TrieScheduler(replicated, clock=VirtualClock(), obs=obs)
+    for w in zipfian_workload(fz, 10, seed=5):
+        sched.submit(w["op"], w["payload"], w["kwargs"])
+    out = sched.drain()
+    assert all(r.status == "ok" for r in out)      # behavior unaffected
+    assert len(obs.tracer.spans) == 5
+    assert obs.tracer.dropped > 0
+
+
+# ----------------------------------------------------------------------
+# exporter
+# ----------------------------------------------------------------------
+def test_perfetto_export_round_trip(fz, replicated, tmp_path):
+    sched, obs, _ = traced_sched(replicated, max_batch=8)
+    for w in zipfian_workload(fz, 16, seed=4):
+        sched.submit(w["op"], w["payload"], w["kwargs"], tenant=w["tenant"])
+    sched.drain()
+    path = tmp_path / "trace.json"
+    write_trace(str(path), obs.tracer.finished())
+    doc = json.loads(path.read_text())             # valid JSON on disk
+    assert doc["displayTimeUnit"] == "ms"
+    events = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert len(events) == len(obs.tracer.finished())
+    assert all(
+        a["ts"] <= b["ts"] for a, b in zip(events, events[1:])
+    )
+    assert all(e["dur"] >= 0 for e in events)
+    # every span's payload survives: ids + attrs in args
+    ids = {e["args"]["span_id"] for e in events}
+    assert len(ids) == len(events)
+    assert {e["args"]["parent_id"] for e in events} <= ids | {-1}
+    # request-owned spans ride request tracks, step machinery tid 1
+    req_tids = {e["tid"] for e in events if e["name"] == "request"}
+    assert req_tids and 1 not in req_tids
+    assert {e["tid"] for e in events if e["name"] == "step"} == {1}
+    assert any(m["name"] == "process_name" for m in meta)
+
+
+def test_export_skips_open_spans():
+    tr = Tracer(enabled=True)
+    done = tr.start("done", parent=False)
+    tr.end(done)
+    tr.start("open", parent=False)                 # never ended
+    doc = spans_to_trace_events(tr.spans)
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert names == ["done"]
+
+
+# ----------------------------------------------------------------------
+# failover counters + span (shard-kill regression sequence)
+# ----------------------------------------------------------------------
+def test_shard_kill_emits_counter_sequence_and_failover_span(fz):
+    primary = TrieQueryEngine(fz, mode="sharded")
+    clock = VirtualClock()
+    inj = FaultInjector().fail_nth_launch(1, shard=0)
+    res = ResilientTrieEngine(FaultyEngine(primary, inj, clock=clock))
+    obs = Observability(tracing=True)
+    sched = TrieScheduler(res, clock=clock, obs=obs, max_batch=8)
+    wl = zipfian_workload(fz, 12, seed=11)
+    for w in wl:
+        sched.submit(w["op"], w["payload"], w["kwargs"])
+    out = sched.drain()
+    assert all(r.status == "ok" for r in out)
+    assert res.failovers == 1
+    # ordered health events and their counter mirror agree
+    assert res.health.events == [
+        {"kind": "failure", "shard": 0},
+        {"kind": "dead", "shard": 0},
+    ]
+    m = obs.metrics
+    assert m.value("serve.shard_events", kind="failure", shard=0) == 1
+    assert m.value("serve.shard_events", kind="dead", shard=0) == 1
+    assert m.value(
+        "serve.failover", labels={"from": "sharded", "to": "replicated"}
+    ) == 1
+    # the failover span annotates the transition and nests in a launch
+    fspans = [s for s in obs.tracer.finished() if s.name == "failover"]
+    assert len(fspans) == 1
+    assert fspans[0].attrs["from"] == "sharded"
+    assert fspans[0].attrs["to"] == "replicated"
+    by_id = {s.span_id: s for s in obs.tracer.spans}
+    anc = fspans[0]
+    seen = set()
+    while anc.parent_id in by_id and anc.span_id not in seen:
+        seen.add(anc.span_id)
+        anc = by_id[anc.parent_id]
+        if anc.name == "launch":
+            break
+    assert anc.name == "launch"
+
+
+# ----------------------------------------------------------------------
+# per-tenant labels
+# ----------------------------------------------------------------------
+def test_per_tenant_labels_cover_workload(fz, replicated):
+    sched, obs, _ = traced_sched(replicated, max_batch=8)
+    wl = zipfian_workload(fz, 20, seed=3)
+    for w in wl:
+        sched.submit(w["op"], w["payload"], w["kwargs"], tenant=w["tenant"])
+    out = sched.drain()
+    m = obs.metrics
+    tenants = sorted({w["tenant"] for w in wl})
+    assert m.label_values("serve.admitted", "tenant") == tenants
+    assert m.label_values("serve.latency_ms", "tenant") == tenants
+    admitted = sum(
+        c.value for c in m.counters_named("serve.admitted")
+    )
+    assert admitted == len(wl)
+    observed = sum(
+        h.count for h in m.histograms_named("serve.latency_ms")
+    )
+    assert observed == len(out)
+    by_status = sum(
+        c.value for c in m.counters_named("serve.requests")
+    )
+    assert by_status == len(out)
+
+
+# ----------------------------------------------------------------------
+# kernel-launch profiling
+# ----------------------------------------------------------------------
+def test_kernel_profiler_rings_metrics_and_predictor_feed(fz, replicated):
+    replicated.obs = None
+    obs = Observability(tracing=False)
+    sched = TrieScheduler(replicated, clock=VirtualClock(), obs=obs)
+    prof = obs.profiler
+    prof.clear()
+    assert not prof.enabled                       # off by default
+    with obs.profile_kernels():
+        sched.submit("rules_with", 0, {"k": 3})
+        sched.submit("top_k", [], {"k": 3})
+        sched.drain()
+    assert not prof.enabled                       # scope restores
+    assert {"rules_with", "top_k"} <= set(prof.ops())
+    rec = prof.ring("rules_with")[-1]
+    assert rec.rows >= 1 and rec.seconds >= 0
+    assert rec.pad_factor >= 1.0 and rec.n_shards == 1
+    # records mirrored into the registry...
+    assert obs.metrics.value("kernel.launches", op="rules_with") >= 1
+    lm = obs.metrics.histogram("kernel.launch_ms", op="rules_with")
+    assert lm.count >= 1
+    # ...and fed to the launch predictor under a ("kernel", op) bucket,
+    # disjoint from the service-time buckets the batch shaper reads
+    assert any(
+        key[:2] == ("kernel", "rules_with")
+        for key in sched.predictor._ewma_ms
+    )
+    # outside the scope nothing records
+    before = len(prof.ring("rules_with"))
+    sched.submit("rules_with", 0, {"k": 4})
+    sched.drain()
+    assert len(prof.ring("rules_with")) == before
+
+
+def test_kernel_profiler_ring_capacity_and_dead_observer():
+    prof = KernelProfiler(capacity=4)
+    calls = []
+
+    def spy(rec):
+        calls.append(rec.op)
+
+    prof.add_observer(spy)
+    prof.enable()
+    for i in range(10):
+        prof.record("op", rows=1, shape=(1,), seconds=0.001)
+    assert len(prof.ring("op")) == 4              # ring, not a log
+    assert len(calls) == 10
+    del spy                                       # weakly held: drops
+    prof.record("op", rows=1, shape=(1,), seconds=0.001)
+    assert len(calls) == 10
+    prof.disable()
